@@ -1,0 +1,128 @@
+"""Paper-table benchmarks (Table 1, Fig 7, Fig 10, EQ2, Table 3 analogue).
+
+Each function returns a list of (name, us_per_call, derived) rows; run.py
+prints them as CSV. Analytic tables are computed from the same BCPNNParams
+the runtime uses, so any drift between model and implementation shows up
+here.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.layout import best_tile, paper_fig10_table
+from repro.core.params import BCPNNParams, human_scale, rodent_scale
+from repro.core.queues import (FLOPS_PER_CELL, drop_probability_per_ms,
+                               expected_drops_per_month,
+                               min_queue_for_monthly_drop_budget,
+                               worst_case_ms_load)
+
+
+def table1_requirements():
+    """Paper Table 1: compute / storage / bandwidth, per HCU and full scale.
+
+    Derivation (lazy evaluation model, average rates):
+      computation = (in_rate*cols + out_rate*rows + periodic) cells/ms * flops
+      storage     = rows*cols cells * 24 B (192-bit cell)
+      bandwidth   = cells_touched/ms * 24 B * 2 (read+write)
+      spikes      = (in+out fanout) spikes/s * 13 B/spike (Fig 3)
+    """
+    p = human_scale()
+    rows = []
+    cells_per_ms = p.in_rate * p.cols + p.out_rate * p.rows + p.cols
+    flops_hcu = cells_per_ms * FLOPS_PER_CELL * 1000          # per s
+    rows.append(("table1/hcu_computation_MFlops", 0.0, flops_hcu / 1e6))
+    paper_cell_b = 24
+    stor_hcu = p.rows * p.cols * paper_cell_b
+    rows.append(("table1/hcu_storage_MB", 0.0, stor_hcu / 1e6))
+    bw_hcu = cells_per_ms * paper_cell_b * 2 * 1000
+    rows.append(("table1/hcu_bandwidth_MBs", 0.0, bw_hcu / 1e6))
+    n = p.n_hcu
+    rows.append(("table1/net_computation_TFlops", 0.0, flops_hcu * n / 1e12))
+    rows.append(("table1/net_storage_TB", 0.0, stor_hcu * n / 1e12))
+    rows.append(("table1/net_bandwidth_TBs", 0.0, bw_hcu * n / 1e12))
+    spike_bytes = 13  # Fig 3: dest HCU + row + delay (+ plasticity fields)
+    spikes_s = (p.in_rate * 1000)
+    rows.append(("table1/net_spike_GBs", 0.0, spikes_s * spike_bytes * n / 1e9))
+    # paper anchors for eyeballing
+    rows.append(("table1/paper_anchor_computation_TFlops", 0.0, 162.0))
+    rows.append(("table1/paper_anchor_storage_TB", 0.0, 50.0))
+    rows.append(("table1/paper_anchor_bandwidth_TBs", 0.0, 200.0))
+    return rows
+
+
+def fig7_queue_dimensioning():
+    """Poisson tail (EQ1) -> queue size 36 at lambda=10."""
+    rows = []
+    for q in (10, 22, 30, 36):
+        rows.append((f"fig7/p_drop_per_ms_q{q}", 0.0,
+                     drop_probability_per_ms(q, 10.0)))
+    rows.append(("fig7/drops_per_month_q36", 0.0,
+                 expected_drops_per_month(36, 10.0)))
+    rows.append(("fig7/min_queue_for_1_per_month", 0.0,
+                 float(min_queue_for_monthly_drop_budget(10.0, 1.0))))
+    return rows
+
+
+def fig10_rowmerge():
+    """DRAM row misses vs X (paper model) + the TPU tile re-derivation."""
+    rows = []
+    table = paper_fig10_table()
+    for x in (1, 2, 4, 5, 10, 20, 25, 50, 100):
+        rows.append((f"fig10/rowmiss_per_s_X{x}", 0.0, table[x]))
+    best_x = min(table, key=table.get)
+    rows.append(("fig10/best_X", 0.0, float(best_x)))
+    rows.append(("fig10/gain_vs_direct", 0.0, table[1] / table[best_x]))
+    (xr, xc), scored = best_tile(10_000, 100, 10_000.0, 100.0)
+    rows.append(("fig10/tpu_best_tile_xr", 0.0, float(xr)))
+    rows.append(("fig10/tpu_best_tile_xc", 0.0, float(xc)))
+    rows.append(("fig10/tpu_bytes_per_s_best", 0.0, scored[(xr, xc)]))
+    return rows
+
+
+def eq2_worst_case_ms():
+    """EQ2-EQ4 timing model on v5e-class constants: with (k=2) and without
+    (k=1) ping-pong overlap; reproduces the paper's 'achieved in 0.8 ms'
+    structure with TPU terms."""
+    from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+    p = human_scale()
+    rows_ = []
+    wc = worst_case_ms_load(p)
+    t_mem = wc["bytes_per_ms"] / HBM_BW          # s, per HCU at full HBM
+    t_cmp = wc["flops_per_ms"] / PEAK_FLOPS
+    # one v5e chip runs many HCUs; per-HCU share at H_local = 256
+    h_local = 256
+    for k, name in ((1, "no_pingpong"), (2, "pingpong")):
+        if k == 2:
+            t = max(t_mem, t_cmp) * h_local
+        else:
+            t = (t_mem + t_cmp) * h_local
+        rows_.append((f"eq2/worst_ms_{name}_ms", 0.0, t * 1e3))
+        rows_.append((f"eq2/realtime_ok_{name}", 0.0, float(t < 1e-3)))
+    rows_.append(("eq2/worst_case_cells", 0.0, float(wc["cells_touched"])))
+    rows_.append(("eq2/worst_case_MFLOP_per_ms", 0.0,
+                  wc["flops_per_ms"] / 1e6))
+    return rows_
+
+
+def table3_bandwidth_utilization():
+    """Paper Table 3: effective/peak bandwidth (93%). TPU analogue: the
+    fraction of DMA'd bytes that are useful synaptic cells under the chosen
+    tile (8,128) vs the 192-bit-cell ideal."""
+    p = human_scale()
+    useful_row = p.cols * 20                      # bytes of one logical row
+    tile_row = 128 * 20                           # padded to 128 lanes
+    rows = [("table3/row_utilization", 0.0, useful_row / tile_row)]
+    # column access: all 8 rows of each (8,128) tile useful? only 1 of 128
+    # lanes in naive layout; with SoA planes a column gathers (R,) vectors:
+    rows.append(("table3/paper_anchor_utilization", 0.0, 0.93))
+    return rows
+
+
+def rodent_vs_human():
+    """§VII.B-C: rodent scale fits ~1/512 of the human-scale resources."""
+    h, r = human_scale(), rodent_scale()
+    rows = [("scale/human_storage_TB", 0.0, h.network_storage_bytes / 1e12),
+            ("scale/rodent_storage_GB", 0.0, r.network_storage_bytes / 1e9),
+            ("scale/ratio", 0.0,
+             h.network_storage_bytes / r.network_storage_bytes)]
+    return rows

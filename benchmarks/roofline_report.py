@@ -1,0 +1,114 @@
+"""Render the §Roofline table from dry-run JSON records.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+      [--mesh pod16x16] [--md]
+
+Reads every <arch>__<shape>__<mesh>.json produced by repro.launch.dryrun and
+prints the three roofline terms, the dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs (useful fraction) and MFU at the roofline bound.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.roofline import HBM_BW, ICI_BW, ICI_LINKS, PEAK_FLOPS
+
+
+def load_records(d: str, mesh: str | None = None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def terms(rec):
+    """(t_compute, t_memory, t_collective) seconds per step per chip.
+
+    All three inputs are PER-PARTITION already: compiled.as_text() and
+    cost_analysis() describe the SPMD per-device program."""
+    cost = rec.get("cost_corrected") or rec.get("cost") or {}
+    fl = cost.get("flops", 0.0)
+    by = cost.get("bytes accessed", 0.0)
+    co = rec.get("collectives", {}).get("total", 0.0)
+    return fl / PEAK_FLOPS, by / HBM_BW, co / (ICI_LINKS * ICI_BW)
+
+
+def analyze_record(rec):
+    if "error" in rec:
+        return None
+    if "skipped" in rec:
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "skipped": rec["skipped"]}
+    tc, tm, tl = terms(rec)
+    tstep = max(tc, tm, tl)
+    which = {"compute": tc, "memory": tm, "collective": tl}
+    bott = max(which, key=which.get)
+    mfl = rec.get("model_flops", 0.0)
+    hlo_total = (rec.get("cost_corrected") or rec.get("cost", {})
+                 ).get("flops", 0.0) * rec["chips"]
+    useful = mfl / hlo_total if hlo_total else 0.0
+    mfu = mfl / (tstep * rec["chips"] * PEAK_FLOPS) if tstep else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": rec["chips"], "t_compute_ms": tc * 1e3,
+        "t_memory_ms": tm * 1e3, "t_collective_ms": tl * 1e3,
+        "bottleneck": bott, "useful_fraction": useful,
+        "mfu_at_roofline": mfu, "t_step_ms": tstep * 1e3,
+    }
+
+
+def render(recs, md: bool = False):
+    rows = []
+    skips = []
+    for rec in recs:
+        a = analyze_record(rec)
+        if a is None:
+            rows.append(f"{rec.get('arch','?'):28s} {rec.get('shape','?'):12s}"
+                        f" ERROR {rec.get('error','')[:60]}")
+            continue
+        if "skipped" in a:
+            skips.append(a)
+            continue
+        rows.append(a)
+    sep = " | " if md else " "
+    hdr = sep.join([f"{'arch':28s}", f"{'shape':12s}", f"{'t_comp_ms':>9s}",
+                    f"{'t_mem_ms':>9s}", f"{'t_coll_ms':>9s}",
+                    f"{'bottleneck':10s}", f"{'useful':>6s}",
+                    f"{'MFU@rl':>6s}"])
+    lines = [hdr]
+    if md:
+        lines.append(sep.join(["-" * 28, "-" * 12, "-" * 9, "-" * 9, "-" * 9,
+                               "-" * 10, "-" * 6, "-" * 6]))
+    for a in rows:
+        if isinstance(a, str):
+            lines.append(a)
+            continue
+        lines.append(sep.join([
+            f"{a['arch']:28s}", f"{a['shape']:12s}",
+            f"{a['t_compute_ms']:9.2f}", f"{a['t_memory_ms']:9.2f}",
+            f"{a['t_collective_ms']:9.2f}", f"{a['bottleneck']:10s}",
+            f"{a['useful_fraction']:6.3f}", f"{a['mfu_at_roofline']:6.3f}"]))
+    for s in skips:
+        lines.append(f"{s['arch']:28s}{sep}{s['shape']:12s}{sep}"
+                     f"skipped: {s['skipped'][:60]}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.dir, args.mesh)
+    print(render(recs, md=args.md))
+
+
+if __name__ == "__main__":
+    main()

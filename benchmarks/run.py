@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows. The dry-run roofline tables
+(EXPERIMENTS.md §Roofline) are produced separately by repro.launch.dryrun +
+benchmarks.roofline_report, since they need the 512-device environment.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the measured (wall-clock) benchmarks")
+    args = ap.parse_args()
+
+    from benchmarks import bcpnn_tables, fig14_lazy_vs_eager
+
+    suites = [
+        bcpnn_tables.table1_requirements,
+        bcpnn_tables.fig7_queue_dimensioning,
+        bcpnn_tables.fig10_rowmerge,
+        bcpnn_tables.eq2_worst_case_ms,
+        bcpnn_tables.table3_bandwidth_utilization,
+        bcpnn_tables.rodent_vs_human,
+    ]
+    if not args.fast:
+        suites += [
+            fig14_lazy_vs_eager.lazy_vs_eager,
+            fig14_lazy_vs_eager.kernel_row_update,
+        ]
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for fn in suites:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.3f},{derived:.6g}")
+        except Exception:
+            traceback.print_exc()
+            failed += 1
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Associative memory with BCPNN — the paper's functional claim, end to end.
+
+  PYTHONPATH=src python examples/bcpnn_assoc_memory.py
+
+BCPNN's purpose (paper §I-II) is biologically plausible cortical
+associative memory. This example demonstrates exactly that function on the
+lazily-evaluated implementation:
+
+  1. TRAIN: present P random patterns (one active input row per HCU,
+     repeated with the WTA firing so Hebbian-Bayesian weights bind each
+     pattern's rows to the MCUs that won);
+  2. RECORD the attractor (winning MCU per HCU per pattern);
+  3. CUE with a PARTIAL pattern (only 60% of HCUs driven, the rest silent);
+  4. RECALL: report how often the undriven HCUs' WTA picks the same MCU the
+     full pattern produced — pattern completion from partial input.
+
+Chance level is 1/C (C = MCUs per HCU). A working associative memory scores
+far above it.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BCPNNParams, init_network, make_connectivity,
+                        network_tick)
+from repro.data import make_patterns
+
+P_ = BCPNNParams(n_hcu=12, rows=64, cols=8, fanout=12, active_queue=16,
+                 max_delay=4, mean_delay=1.5, out_rate=1.0, wta_temp=0.25,
+                 tau_p=400.0)
+N_PATTERNS = 3
+TRAIN_REPS = 30
+PRESENT_MS = 6
+CUE_FRACTION = 0.6
+
+key = jax.random.PRNGKey(0)
+conn = make_connectivity(P_, jax.random.fold_in(key, 1))
+patterns = make_patterns(P_, N_PATTERNS, seed=3)
+
+
+def drive(pattern_rows, active_mask):
+    ext = np.full((P_.n_hcu, 4), P_.rows, np.int32)
+    for h in range(P_.n_hcu):
+        if active_mask[h]:
+            ext[h, 0] = pattern_rows[h]
+    return jnp.asarray(ext)
+
+
+def run_ticks(state, ext, n, collect=False):
+    winners = np.full((P_.n_hcu,), -1, np.int64)
+    for _ in range(n):
+        state, fired = network_tick(state, conn, ext, P_,
+                                    cap_fire=P_.n_hcu)
+        f = np.asarray(fired)
+        upd = f >= 0
+        winners[upd] = f[upd]
+    return state, winners
+
+
+# ---------------------------------- train -----------------------------------
+state = init_network(P_, key)
+all_on = np.ones(P_.n_hcu, bool)
+attractor = np.zeros((N_PATTERNS, P_.n_hcu), np.int64)
+for rep in range(TRAIN_REPS):
+    for pid in range(N_PATTERNS):
+        ext = drive(patterns[pid], all_on)
+        state, winners = run_ticks(state, ext, PRESENT_MS)
+        if rep == TRAIN_REPS - 1:
+            attractor[pid] = winners
+    # short silence between presentations lets Z traces decay
+    state, _ = run_ticks(state, drive(patterns[0], np.zeros(P_.n_hcu, bool)),
+                         2)
+
+print("trained", N_PATTERNS, "patterns,", TRAIN_REPS, "reps each")
+
+# ---------------------------------- recall ----------------------------------
+rng = np.random.default_rng(0)
+correct = total = 0
+for pid in range(N_PATTERNS):
+    cue_mask = rng.random(P_.n_hcu) < CUE_FRACTION
+    ext = drive(patterns[pid], cue_mask)
+    # recall from a snapshot of the trained state: network_tick donates its
+    # input buffers (in-place lazy updates), so each recall needs a copy
+    st = jax.tree.map(jnp.copy, state)
+    st, winners = run_ticks(st, ext, 12)
+    probe = ~cue_mask & (winners >= 0) & (attractor[pid] >= 0)
+    correct += int((winners[probe] == attractor[pid][probe]).sum())
+    total += int(probe.sum())
+
+chance = 1.0 / P_.cols
+acc = correct / max(total, 1)
+print(f"pattern completion: {correct}/{total} undriven HCUs recalled "
+      f"their attractor MCU (acc={acc:.2f}, chance={chance:.2f})")
+assert total > 0, "recall must probe some undriven HCUs"
+if acc > 2 * chance:
+    print("OK — associative recall well above chance.")
+else:
+    print("WARN — recall near chance; try more TRAIN_REPS.")

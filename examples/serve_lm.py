@@ -1,0 +1,61 @@
+"""Batched serving example: continuous batching over the ServingEngine.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch qwen2-1.5b]
+
+Submits a queue of requests with random prompts, serves them in fixed-slot
+waves (prefill + step-synchronous decode with KV caches), and verifies that
+greedy engine output matches the reference generate() path token-for-token.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import Request, ServingEngine
+from repro.models.transformer import Model
+from repro.train.serve_step import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, args.prompt_len)
+               for _ in range(args.n_requests)]
+
+    eng = ServingEngine(model, params, args.batch,
+                        args.prompt_len + args.max_new + 8)
+    for rid, pr in enumerate(prompts):
+        eng.submit(Request(rid, pr, args.max_new))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    ntok = sum(len(r.out) for r in done)
+    print(f"served {len(done)} requests / {ntok} tokens in {dt:.2f}s "
+          f"({ntok / dt:.1f} tok/s on CPU smoke config)")
+
+    # verify against the single-request reference path (greedy)
+    import jax.numpy as jnp
+    r0 = next(r for r in done if r.rid == 0)
+    ref = generate(model, params,
+                   {"tokens": jnp.asarray(prompts[0][None, :], jnp.int32)},
+                   max_new=args.max_new,
+                   max_len=args.prompt_len + args.max_new + 8)
+    ref_toks = [int(t) for t in np.asarray(ref[0])]
+    assert r0.out == ref_toks, f"engine {r0.out} != reference {ref_toks}"
+    print("OK — engine output matches the reference decode path.")
+
+
+if __name__ == "__main__":
+    main()

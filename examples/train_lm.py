@@ -1,0 +1,39 @@
+"""End-to-end LM training driver (deliverable b): train a ~100M-class model
+for a few hundred steps on synthetic data with the production loop
+(sharded params, jit step, async checkpoints, straggler monitor).
+
+  PYTHONPATH=src python examples/train_lm.py [--arch xlstm-125m] [--steps 200]
+
+On CPU this uses the reduced config; on a pod, drop --smoke for the full
+config and production mesh. Loss target: the Markov stream's entropy floor
+is log(4) ~ 1.39 nats; anything approaching it from log(vocab) ~ 6.2 shows
+the whole substrate (model, optimizer, data, checkpointing) learning.
+"""
+import argparse
+
+import numpy as np
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    _, losses = train(args.arch, steps=args.steps, batch=args.batch,
+                      seq=args.seq, smoke=True, ckpt_dir=args.ckpt,
+                      lr=args.lr, log_every=20)
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"\nloss: {first:.3f} -> {last:.3f} "
+          f"(entropy floor ~1.386; started near log(512)=6.24)")
+    assert last < first, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

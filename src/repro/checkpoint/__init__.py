@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_step,
+                                           restore, restore_latest, save)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "restore_latest",
+           "save"]

@@ -1,0 +1,11 @@
+"""Rodent-scale BCPNN (paper SVII.C): 32K HCUs, R=1200, C=70.
+
+~2 MB per HCU -> 64 GB total: fits a pod with wide margin; this is the
+primary runnable BCPNN dry-run config (the paper similarly demonstrates
+rodent scale end-to-end, 12 W / real time).
+"""
+from repro.core.params import rodent_scale
+
+CONFIG = rodent_scale()
+DRYRUN_N_HCU = 32_768                     # pow2 for even sharding (paper: 32K)
+SMOKE = rodent_scale(n_hcu=2)

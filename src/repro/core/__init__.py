@@ -1,0 +1,27 @@
+"""BCPNN core — the paper's primary contribution in JAX.
+
+Public API:
+  BCPNNParams / human_scale / rodent_scale / test_scale  — model dimensioning
+  HCUState, init_hcu_state, hcu_tick_pre, column_update, flush — HCU semantics
+  NetworkState, init_network, make_connectivity, network_tick, run — networks
+  traces — closed-form lazy ZEP trace algebra
+  RowMergeLayout — BCPNN-specific synaptic data organization
+"""
+from repro.core.params import BCPNNParams, human_scale, rodent_scale, test_scale
+from repro.core.hcu import (HCUState, init_hcu_state, hcu_tick_pre,
+                            column_update, row_updates, periodic_update,
+                            flush, dedup_rows)
+from repro.core.network import (NetworkState, Connectivity, init_network,
+                                make_connectivity, network_tick, run,
+                                enqueue_spikes, column_updates_batched)
+from repro.core.layout import RowMergeLayout
+from repro.core import traces, queues
+
+__all__ = [
+    "BCPNNParams", "human_scale", "rodent_scale", "test_scale",
+    "HCUState", "init_hcu_state", "hcu_tick_pre", "column_update",
+    "row_updates", "periodic_update", "flush", "dedup_rows",
+    "NetworkState", "Connectivity", "init_network", "make_connectivity",
+    "network_tick", "run", "enqueue_spikes", "column_updates_batched",
+    "RowMergeLayout", "traces", "queues",
+]

@@ -1,0 +1,212 @@
+"""Distributed BCPNN runtime: shard_map over HCUs + all_to_all spike exchange.
+
+Paper mapping (§III.A, §VI.E): the eBrainII hierarchy is
+    BCU (chip)  >  H-Cube (vault, P=4 HCUs)  >  HCU
+with a pipelined binary-tree spike NoC inside a BCU. On a TPU pod the
+hierarchy becomes
+    pod  >  chip  >  local HCU batch (vmap)
+and the spike NoC becomes a bucketed `jax.lax.all_to_all` over the mesh —
+justified by the paper's own observation that spike traffic is three orders
+of magnitude below synaptic bandwidth, so a fixed-capacity exchange sits far
+below the ICI roofline (see EXPERIMENTS.md roofline: collective term).
+
+Because every HCU's state is self-contained ("no memory consistency
+problem", §II.B), HCU shards are freely relocatable: elastic re-sharding and
+failure recovery move whole HCUs between devices without any consistency
+protocol (see repro.runtime.elastic).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import hcu as H
+from repro.core import network as N
+from repro.core.params import BCPNNParams
+
+
+class RouteConfig(NamedTuple):
+    """Static capacities of the spike exchange."""
+    cap_fire: int        # max simultaneously fired HCUs per device per tick
+    cap_route: int       # max messages per (src dev -> dst dev) pair per tick
+    pack: bool = True    # pack each spike into one int32 (paper Fig 3 format)
+
+
+def default_route_config(p: BCPNNParams, h_local: int,
+                         n_dev: int | None = None) -> RouteConfig:
+    """Dimension the exchange the way the paper dimensions its queues (§IV):
+    Poisson-tail capacity with a months-scale drop budget, NOT worst case.
+
+    Expected messages per (src dev -> dst dev) pair per tick:
+        lam = out_rate * h_local * fanout / n_dev
+    cap_route = smallest q with <= 1 expected drop/month at Poisson(lam)
+    (overflows are counted in drops_fire — same budget discipline as the
+    36-deep active queue).
+    """
+    from repro.core.queues import min_queue_for_monthly_drop_budget
+    cap_fire = max(2, int(0.35 * h_local) + 1)
+    if n_dev is None:
+        return RouteConfig(cap_fire=cap_fire, cap_route=cap_fire * p.fanout)
+    lam = max(p.out_rate * h_local * p.fanout / n_dev, 0.1)
+    cap = min_queue_for_monthly_drop_budget(lam, budget=1.0, max_q=4096)
+    cap = min(max(8, cap), cap_fire * p.fanout)
+    return RouteConfig(cap_fire=cap_fire, cap_route=cap)
+
+
+def _pack_bits(p: BCPNNParams, h_local: int):
+    loc_bits = max((h_local - 1).bit_length(), 1)
+    row_bits = (p.rows).bit_length()              # rows value == invalid marker
+    dly_bits = max((p.max_delay - 1).bit_length(), 1)
+    assert loc_bits + row_bits + dly_bits + 1 <= 31, "spike word overflow"
+    return loc_bits, row_bits, dly_bits
+
+
+def pack_spikes(dest_loc, dest_row, delay, valid, p: BCPNNParams,
+                h_local: int):
+    """One spike == one int32 word (paper Fig 3: dest HCU | row | delay)."""
+    lb, rb, db = _pack_bits(p, h_local)
+    w = (dest_loc & ((1 << lb) - 1))
+    w = (w << rb) | (dest_row & ((1 << rb) - 1))
+    w = (w << db) | (delay & ((1 << db) - 1))
+    w = (w << 1) | valid.astype(jnp.int32)
+    return w
+
+
+def unpack_spikes(w, p: BCPNNParams, h_local: int):
+    lb, rb, db = _pack_bits(p, h_local)
+    valid = (w & 1) == 1
+    delay = (w >> 1) & ((1 << db) - 1)
+    dest_row = (w >> (1 + db)) & ((1 << rb) - 1)
+    dest_loc = (w >> (1 + db + rb)) & ((1 << lb) - 1)
+    return dest_loc, dest_row, delay, valid
+
+
+def _local_tick(state: N.NetworkState, conn: N.Connectivity,
+                ext_rows: jnp.ndarray, p: BCPNNParams, rc: RouteConfig,
+                axis, eager: bool, backend):
+    """Per-device body executed under shard_map."""
+    h_local = state.delay_rows.shape[0]
+    ndev = jax.lax.psum(1, axis)
+    dev = jax.lax.axis_index(axis)
+    D = p.max_delay
+    t = state.t + 1
+
+    # ---- consume bucket, row updates, WTA (identical to single-device) ----
+    bucket = state.delay_rows[:, t % D, :]
+    rows = jnp.concatenate([bucket, ext_rows], axis=1)
+    state = state._replace(
+        delay_rows=state.delay_rows.at[:, t % D, :].set(p.rows),
+        delay_count=state.delay_count.at[:, t % D].set(0))
+
+    k_t = jax.random.fold_in(state.base_key, t)
+    # RNG folded by GLOBAL hcu id => invariant to device count (elasticity)
+    gids = dev * h_local + jnp.arange(h_local)
+    keys = jax.vmap(lambda g: jax.random.fold_in(k_t, g))(gids)
+    if eager:
+        hcus, fired = jax.vmap(
+            lambda s, r, k: N.reference.eager_tick(s, r, t, k, p)
+        )(state.hcus, rows, keys)
+    else:
+        hcus, fired = jax.vmap(
+            lambda s, r, k: H.hcu_tick_pre(s, r, t, k, p, backend=backend)
+        )(state.hcus, rows, keys)
+
+    h_idx, j_idx, n_drop = N._select_fired(fired, rc.cap_fire)
+    if not eager:
+        hcus = N.column_updates_batched(hcus, h_idx, j_idx, t, p,
+                                        backend=backend)
+    state = state._replace(hcus=hcus, t=t,
+                           drops_fire=state.drops_fire + n_drop)
+
+    # ---- fan out: build per-destination-device buckets -------------------
+    safe_h = jnp.minimum(h_idx, h_local - 1)
+    dest_h = conn.dest_hcu[safe_h, j_idx].reshape(-1)       # global ids (K*F,)
+    dest_r = conn.dest_row[safe_h, j_idx].reshape(-1)
+    dly = conn.delay[safe_h, j_idx].reshape(-1)
+    valid = jnp.repeat(h_idx < h_local, p.fanout)
+
+    dest_dev = dest_h // h_local
+    dest_loc = dest_h % h_local
+    key = jnp.where(valid, dest_dev, ndev)
+    order = jnp.argsort(key)
+    rank = N._rank_within_key(key, order)
+    ok = valid & (rank < rc.cap_route)
+    route_drops = jnp.sum(valid) - jnp.sum(ok)
+    flat = jnp.where(ok, dest_dev * rc.cap_route + rank, ndev * rc.cap_route)
+
+    def bucketize(vals, fill):
+        buf = jnp.full((ndev * rc.cap_route,), fill, jnp.int32)
+        return buf.at[flat].set(vals, mode="drop").reshape(ndev, rc.cap_route)
+
+    if rc.pack:
+        # one int32 per spike (paper Fig 3 spike word): 4x less ICI traffic
+        words = pack_spikes(dest_loc, dest_r, dly, ok, p, h_local)
+        send = bucketize(jnp.where(ok, words, 0), 0)   # (ndev, cap_route)
+        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                                  tiled=False).reshape(ndev * rc.cap_route)
+        d_loc, d_row, d_dly, d_ok = unpack_spikes(recv, p, h_local)
+        state = N.enqueue_spikes(state, d_loc, d_row, d_dly, d_ok, p,
+                                 h_local)
+    else:
+        send = jnp.stack([
+            bucketize(dest_loc, 0),
+            bucketize(dest_r, p.rows),        # p.rows == invalid row marker
+            bucketize(dly, 1),
+            bucketize(jnp.where(ok, 1, 0).astype(jnp.int32), 0),
+        ], axis=-1)                            # (ndev, cap_route, 4)
+        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                                  tiled=False).reshape(ndev * rc.cap_route, 4)
+        state = N.enqueue_spikes(
+            state, recv[:, 0], recv[:, 1], recv[:, 2],
+            recv[:, 3] == 1, p, h_local)
+    return state._replace(drops_fire=state.drops_fire + route_drops), fired
+
+
+def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
+                   axis="hcu", eager: bool = False,
+                   backend: str | None = None, donate: bool = True):
+    """Build the sharded tick: state/conn/ext sharded over `axis`, which may
+    be a single mesh axis name or a tuple of axis names (flattened)."""
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    spec_h = P(axes)      # shard leading (HCU) dim over the flattened axes
+    rep = P()
+
+    state_specs = N.NetworkState(
+        hcus=H.HCUState(*([spec_h] * len(H.HCUState._fields))),
+        delay_rows=spec_h, delay_count=spec_h,
+        t=rep, drops_in=rep, drops_fire=rep, base_key=rep)
+    conn_specs = N.Connectivity(spec_h, spec_h, spec_h)
+
+    fn = shard_map(
+        functools.partial(_local_tick, p=p, rc=rc, axis=axes,
+                          eager=eager, backend=backend),
+        mesh=mesh,
+        in_specs=(state_specs, conn_specs, spec_h),
+        out_specs=(state_specs, spec_h),
+        check_vma=False,
+    )
+    # donating the state lets XLA scatter the touched rows/columns in place
+    # — the lazy model's bytes-per-tick then match the paper's traffic
+    # budget instead of copying whole synaptic planes (§Perf iteration)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def shard_network(mesh: Mesh, state: N.NetworkState, conn: N.Connectivity,
+                  axis="hcu"):
+    """Place an (already materialized) network onto the mesh."""
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    spec_h, rep = P(axes), P()
+    sh = lambda spec: lambda x: jax.device_put(x, NamedSharding(mesh, spec))
+    state = N.NetworkState(
+        hcus=jax.tree.map(sh(spec_h), state.hcus),
+        delay_rows=sh(spec_h)(state.delay_rows),
+        delay_count=sh(spec_h)(state.delay_count),
+        t=sh(rep)(state.t), drops_in=sh(rep)(state.drops_in),
+        drops_fire=sh(rep)(state.drops_fire), base_key=sh(rep)(state.base_key))
+    conn = jax.tree.map(sh(spec_h), conn)
+    return state, conn

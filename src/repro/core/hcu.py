@@ -1,0 +1,218 @@
+"""Hyper Column Unit (HCU) state and the three BCPNN update types.
+
+Per the paper (§II.A.2) an HCU services three atomic sub-threads each 1 ms tick:
+  * row updates     — one per incoming spike (lazy, touches one (C,) row)
+  * column update   — on output spike (lazy, touches one (R,) column)
+  * periodic update — support integration + soft winner-take-all
+
+State is structure-of-arrays (TPU-friendly planes) instead of the ASIC's
+192-bit AoS cells; the field set is identical: Zij, Eij, Pij, Wij, Tij.
+The j-vector is always kept current (decayed every tick) — it is the paper's
+"stored locally in SRAM, excluded from synaptic bandwidth" structure. The
+i-vector and the ij-matrix are lazy (timestamped).
+
+All functions are pure and per-HCU; `repro.core.network` vmaps them over the
+local HCU batch and shard_maps across devices.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import BCPNNParams
+from repro.core.traces import ZEP, bias, decay_zep, make_coeffs
+from repro.kernels import ops
+
+
+class HCUState(NamedTuple):
+    # synaptic ij-matrix planes, (R, C)
+    zij: jnp.ndarray
+    eij: jnp.ndarray
+    pij: jnp.ndarray
+    wij: jnp.ndarray
+    tij: jnp.ndarray      # int32 timestamps (ms)
+    # presynaptic i-vector, (R,) each — lazy, timestamped
+    zi: jnp.ndarray
+    ei: jnp.ndarray
+    pi: jnp.ndarray
+    ti: jnp.ndarray       # int32
+    # postsynaptic j-vector, (C,) each — always current
+    zj: jnp.ndarray
+    ej: jnp.ndarray
+    pj: jnp.ndarray
+    # support membrane, (C,)
+    h: jnp.ndarray
+
+
+def coeffs_ij(p: BCPNNParams):
+    return make_coeffs(p.tau_z_ij, p.tau_e, p.tau_p)
+
+
+def coeffs_i(p: BCPNNParams):
+    return make_coeffs(p.tau_zi, p.tau_e, p.tau_p)
+
+
+def coeffs_j(p: BCPNNParams):
+    return make_coeffs(p.tau_zj, p.tau_e, p.tau_p)
+
+
+def init_hcu_state(p: BCPNNParams, dtype=jnp.float32) -> HCUState:
+    R, C = p.rows, p.cols
+    z0 = jnp.zeros((R, C), dtype)
+    pij0 = jnp.full((R, C), p.p_init * p.p_init, dtype)
+    pi0 = jnp.full((R,), p.p_init, dtype)
+    pj0 = jnp.full((C,), p.p_init, dtype)
+    w0 = jnp.log((pij0 + p.eps**2) / ((pi0[:, None] + p.eps) * (pj0[None, :] + p.eps)))
+    return HCUState(
+        zij=z0, eij=jnp.zeros((R, C), dtype), pij=pij0, wij=w0.astype(dtype),
+        tij=jnp.zeros((R, C), jnp.int32),
+        zi=jnp.zeros((R,), dtype), ei=jnp.zeros((R,), dtype), pi=pi0,
+        ti=jnp.zeros((R,), jnp.int32),
+        zj=jnp.zeros((C,), dtype), ej=jnp.zeros((C,), dtype), pj=pj0,
+        h=jnp.zeros((C,), dtype),
+    )
+
+
+def dedup_rows(rows: jnp.ndarray, n_rows: int):
+    """Aggregate duplicate row indices in a fixed-size spike slot array.
+
+    rows: (A,) int32, padding slots == n_rows (out of range).
+    Returns (unique_rows, counts): duplicates are merged into the first
+    occurrence (count = multiplicity); non-first duplicates and padding become
+    index n_rows with count 0, which gathers clipped (harmless) and scatters
+    dropped (JAX OOB-scatter drop semantics).
+    """
+    a = jnp.sort(rows)
+    eq = a[:, None] == a[None, :]
+    counts = jnp.sum(eq, axis=1).astype(jnp.float32)
+    first = jnp.concatenate([jnp.array([True]), a[1:] != a[:-1]])
+    keep = first & (a < n_rows)
+    rows_u = jnp.where(keep, a, n_rows)
+    counts_u = jnp.where(keep, counts, 0.0)
+    return rows_u, counts_u
+
+
+def _decay_jvec(st: HCUState, p: BCPNNParams) -> HCUState:
+    """Per-tick exact decay of the locally-held j-vector."""
+    zep = decay_zep(ZEP(st.zj, st.ej, st.pj), p.dt_ms, coeffs_j(p))
+    return st._replace(zj=zep.z, ej=zep.e, pj=zep.p)
+
+
+def row_updates(st: HCUState, rows: jnp.ndarray, now, p: BCPNNParams,
+                backend: str | None = None):
+    """Apply lazy row updates for incoming spikes.
+
+    rows: (A,) int32 row indices, padding == p.rows. `now` int32 scalar (ms).
+    Assumes the j-vector has already been decayed to `now` this tick.
+    Returns (state', w_rows, counts, rows_u) — w_rows are the freshly updated
+    Bayesian weight rows used by the periodic support computation.
+    """
+    R = p.rows
+    rows_u, counts = dedup_rows(rows, R)
+    safe = jnp.minimum(rows_u, R - 1)
+
+    # --- i-vector lazy decay + spike increment for the touched rows --------
+    zi_g, ei_g, pi_g, ti_g = (st.zi[safe], st.ei[safe], st.pi[safe], st.ti[safe])
+    d_i = (now - ti_g).astype(zi_g.dtype)
+    zep_i = decay_zep(ZEP(zi_g, ei_g, pi_g), d_i, coeffs_i(p))
+    zi_new = zep_i.z + counts
+    # --- ij-matrix row update (the fused kernel) ---------------------------
+    g = lambda plane: plane[safe]            # (A, C) gathered rows
+    z1, e1, p1, w1, t1 = ops.row_update(
+        g(st.zij), g(st.eij), g(st.pij), g(st.tij), now,
+        counts, st.zj, zep_i.p, st.pj, coeffs_ij(p), p.eps, backend=backend)
+
+    scat = lambda plane, val: plane.at[rows_u].set(val, mode="drop")
+    st = st._replace(
+        zij=scat(st.zij, z1), eij=scat(st.eij, e1), pij=scat(st.pij, p1),
+        wij=scat(st.wij, w1), tij=scat(st.tij, t1),
+        zi=st.zi.at[rows_u].set(zi_new, mode="drop"),
+        ei=st.ei.at[rows_u].set(zep_i.e, mode="drop"),
+        pi=st.pi.at[rows_u].set(zep_i.p, mode="drop"),
+        ti=st.ti.at[rows_u].set(jnp.full_like(ti_g, now), mode="drop"),
+    )
+    return st, w1, counts, rows_u
+
+
+def periodic_update(st: HCUState, w_rows, counts, now, key, p: BCPNNParams):
+    """Support integration + soft WTA (paper's 'periodic update', every ms).
+
+    w_rows (A, C): freshly recomputed weight rows of this tick's spikes.
+    Returns (state', fired_j) with fired_j == -1 when the HCU stays silent.
+    """
+    decay_m = jnp.exp(-p.dt_ms / p.tau_m)
+    drive = jnp.sum(counts[:, None] * w_rows, axis=0)          # (C,)
+    h = st.h * decay_m + drive
+    s = h + bias(st.pj, p.eps)
+    # soft WTA: fire with prob out_rate*dt; winner ~ softmax(s / T)
+    k_gate, k_win = jax.random.split(key)
+    fire = jax.random.uniform(k_gate) < p.out_rate * p.dt_ms
+    winner = jax.random.categorical(k_win, s / p.wta_temp)
+    fired_j = jnp.where(fire, winner, -1).astype(jnp.int32)
+    return st._replace(h=h), fired_j
+
+
+def column_update(st: HCUState, j: jnp.ndarray, now, p: BCPNNParams,
+                  backend: str | None = None) -> HCUState:
+    """Apply the lazy column update for output spike at MCU column ``j``.
+
+    Always computes (static shapes); masked to a no-op when j < 0. The paper
+    splits the column into 100 row-sized chunks — here the kernel grid does.
+    """
+    active = j >= 0
+    safe_j = jnp.maximum(j, 0)
+    # presynaptic traces brought to `now` on the fly (no writeback: values
+    # only, i-vector stays lazy — avoids a (R,) scatter per output spike)
+    d_i = (now - st.ti).astype(st.zi.dtype)
+    zep_i = decay_zep(ZEP(st.zi, st.ei, st.pi), d_i, coeffs_i(p))
+
+    g = lambda plane: jax.lax.dynamic_index_in_dim(plane.T, safe_j, 0, False)
+    z1, e1, p1, w1, t1 = ops.col_update(
+        g(st.zij), g(st.eij), g(st.pij), g(st.tij), now,
+        zep_i.z, zep_i.p, st.pj[safe_j], coeffs_ij(p), p.eps, backend=backend)
+
+    def put(plane, val):
+        col = jax.lax.dynamic_index_in_dim(plane.T, safe_j, 0, False)
+        new = jnp.where(active, val, col)
+        return plane.T.at[safe_j].set(new).T
+
+    st = st._replace(zij=put(st.zij, z1), eij=put(st.eij, e1),
+                     pij=put(st.pij, p1), wij=put(st.wij, w1),
+                     tij=put(st.tij, t1))
+    # postsynaptic Z increment AFTER the column used pre-increment zj
+    zj = st.zj.at[safe_j].add(jnp.where(active, 1.0, 0.0))
+    return st._replace(zj=zj)
+
+
+def hcu_tick_pre(st: HCUState, rows, now, key, p: BCPNNParams,
+                 backend: str | None = None):
+    """j-vector decay + row updates + periodic/WTA (vmap-able part of a tick).
+
+    The column update is batched across HCUs at network level (only fired
+    HCUs pay for it) — see network.column_updates_batched.
+    """
+    st = _decay_jvec(st, p)
+    st, w_rows, counts, _ = row_updates(st, rows, now, p, backend=backend)
+    st, fired_j = periodic_update(st, w_rows, counts, now, key, p)
+    return st, fired_j
+
+
+def flush(st: HCUState, now, p: BCPNNParams) -> HCUState:
+    """Bring every lazy trace current to `now` (checkpoint/inspection/tests).
+
+    Equivalent to the paper's implicit end-of-run synchronization; after a
+    flush, lazy and eager states are directly comparable plane-by-plane.
+    """
+    kij, ki = coeffs_ij(p), coeffs_i(p)
+    d_ij = (now - st.tij).astype(st.zij.dtype)
+    zep = decay_zep(ZEP(st.zij, st.eij, st.pij), d_ij, kij)
+    d_i = (now - st.ti).astype(st.zi.dtype)
+    zi = decay_zep(ZEP(st.zi, st.ei, st.pi), d_i, ki)
+    w = jnp.log((zep.p + p.eps**2)
+                / ((zi.p[:, None] + p.eps) * (st.pj[None, :] + p.eps)))
+    return st._replace(
+        zij=zep.z, eij=zep.e, pij=zep.p, wij=w,
+        tij=jnp.full_like(st.tij, now),
+        zi=zi.z, ei=zi.e, pi=zi.p, ti=jnp.full_like(st.ti, now))

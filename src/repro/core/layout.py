@@ -1,0 +1,123 @@
+"""Row-Merge synaptic data organization (paper §V.E, Fig 9-10), TPU-adapted.
+
+The paper's problem: the (R=10000, C=100) synaptic matrix is accessed as
+rows (per input spike) AND columns (per output spike). Direct row-major
+mapping makes a column access cost one DRAM row-miss per cell. Row-Merge
+block-interleaves X x X blocks so a column access hits X cells per DRAM row,
+minimizing total misses at X = 10:
+
+    rowmiss(X) = (row_rate * X + col_rate * C/X * C_groups) ...
+    paper form: 10000 * (X + 100/X) * 2 per second, min at X = 10.
+
+TPU adaptation: the DRAM row (page) becomes the HBM->VMEM DMA tile. A naive
+row-major column access DMAs (8,128) tiles to use 1 lane-column each, i.e.
+128x waste in the lane dim. We re-derive the same objective for tiles:
+
+    bytes_touched(Xr, Xc) per second =
+        row_rate * ceil(C/Xc) * tile_bytes        (a row crosses C/Xc tiles)
+      + col_rate * ceil(R/Xr) * tile_bytes        (a column crosses R/Xr tiles)
+
+and store the matrix as (R/Xr, C/Xc, Xr, Xc) so each tile is contiguous.
+With f32 SoA planes the hardware-native tile is (8, 128); because C=100 < 128
+a whole logical row fits one tile-row, so the TPU-optimal point degenerates
+to Xc = C (pad to 128) and Xr = 8: rows cost 1 tile, columns cost R/8 tiles
+— the exact analogue of the paper's conclusion that the layout must serve
+BOTH patterns, with the optimum set by the access-rate ratio (100:1).
+
+`benchmarks/fig10_rowmerge.py` sweeps X for the paper's DRAM cost model
+(reproducing Fig 10: min at X=10, 5x better than direct) and the TPU tile
+model side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------- paper's DRAM model ---------------------------
+
+def dram_row_misses_per_s(x: int, rows: int = 10_000, cols: int = 100,
+                          row_rate: float = 10_000.0, col_rate: float = 100.0):
+    """Paper Fig 10 objective. X must divide `cols`.
+
+    A row access touches X DRAM rows (its blocks are spread over X merged
+    rows); a column access touches C/X DRAM rows per row-group, and there are
+    R / X row-groups... the paper folds rates so that:
+        rowmiss(X) = row_rate * X + col_rate * (rows/ x_groups)  with
+    their stated closed form  10000 * (X + 100/X) * 2  (read+write).
+    """
+    return (row_rate * x + col_rate * (rows / x) * (cols / cols)) * 2.0
+
+
+def paper_fig10_table(rows=10_000, cols=100):
+    xs = [x for x in range(1, cols + 1) if cols % x == 0]
+    return {x: dram_row_misses_per_s(x, rows, cols) for x in xs}
+
+
+# ----------------------------- TPU tile model -------------------------------
+
+def tile_bytes_touched_per_s(xr: int, xc: int, rows: int, cols: int,
+                             row_rate: float, col_rate: float,
+                             bytes_per_cell: int = 20):
+    """Bytes DMA'd HBM<->VMEM per second under (xr, xc) tiling (read+write)."""
+    tile_b = xr * xc * bytes_per_cell
+    tiles_per_row = -(-cols // xc)
+    tiles_per_col = -(-rows // xr)
+    return 2.0 * tile_b * (row_rate * tiles_per_row + col_rate * tiles_per_col)
+
+
+def best_tile(rows: int, cols: int, row_rate: float, col_rate: float,
+              candidates=((8, 128), (8, 256), (16, 128), (32, 128), (8, 512),
+                          (64, 128), (128, 128), (256, 128))):
+    scored = {c: tile_bytes_touched_per_s(c[0], min(c[1], cols), rows, cols,
+                                          row_rate, col_rate)
+              for c in candidates}
+    best = min(scored, key=scored.get)
+    return best, scored
+
+
+# ----------------------------- layout transform -----------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RowMergeLayout:
+    """Bijective (R, C) <-> (R/xr, C/xc, xr, xc) tiled layout.
+
+    The tiled form is how synaptic planes are stored in HBM so that both the
+    row-update and the column-update Pallas kernels fetch whole contiguous
+    tiles (the TPU translation of 'DRAM row == matrix row').
+    """
+    rows: int
+    cols: int
+    xr: int = 8
+    xc: int = 128
+
+    @property
+    def padded_rows(self) -> int:
+        return -(-self.rows // self.xr) * self.xr
+
+    @property
+    def padded_cols(self) -> int:
+        return -(-self.cols // self.xc) * self.xc
+
+    def pack(self, plane: jnp.ndarray) -> jnp.ndarray:
+        """(R, C) -> (R'/xr, C'/xc, xr, xc), zero-padded."""
+        R, C = plane.shape
+        assert (R, C) == (self.rows, self.cols)
+        p = jnp.pad(plane, ((0, self.padded_rows - R), (0, self.padded_cols - C)))
+        t = p.reshape(self.padded_rows // self.xr, self.xr,
+                      self.padded_cols // self.xc, self.xc)
+        return t.transpose(0, 2, 1, 3)
+
+    def unpack(self, tiled: jnp.ndarray) -> jnp.ndarray:
+        t = tiled.transpose(0, 2, 1, 3).reshape(self.padded_rows,
+                                                self.padded_cols)
+        return t[: self.rows, : self.cols]
+
+    def row_tiles(self, r: int):
+        """Tile coordinates a logical row touches: (tile_r, all tile_cs)."""
+        return r // self.xr, np.arange(self.padded_cols // self.xc)
+
+    def col_tiles(self, c: int):
+        return np.arange(self.padded_rows // self.xr), c // self.xc

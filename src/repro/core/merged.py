@@ -1,0 +1,216 @@
+"""eBrainIII-style merged column updates (paper §IX future work, item 2):
+
+    "The BCPNN algorithm has been tweaked to eliminate the column updates
+     and merge them with row updates."
+
+This module implements that tweak EXACTLY (up to a bounded ring depth) and
+validates it against the eager golden model:
+
+On an output spike at MCU j (time t_j) the only per-cell state change is
+    Zij += Zi(t_j)                      (then ordinary decay)
+Since Zi decays deterministically between row-i touches, a later row update
+at time t can reconstruct every missed j-spike contribution from the spike
+TIME alone:
+    Zi(t_j) = Zi(Tij) * exp(-(t_j - Tij)/tau_zi)
+and the E/P cascade is integrated piecewise (decay to t_j, bump Z, decay on)
+using the same closed form — the semigroup property makes the composition
+exact. Each HCU therefore keeps only a per-column ring of the last M output
+spike times (C x M int32 ~ 100x4 B — vs the 10,000-cell column write it
+replaces); ring overflow truncates spikes older than the M most recent,
+whose residual influence decays as exp(-dt/tau_z') (~e^-8 after 20 ms).
+
+Effect on the worst-case ms budget (paper EQ2): the column term (R cells)
+disappears —
+    cells: 36*C + R = 13,600  ->  36*C = 3,600   (3.8x, human scale)
+which is precisely the "dramatically lower ... requirements" the paper
+projects for eBrainIII. Quantified in benchmarks and EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hcu as H
+from repro.core.params import BCPNNParams
+from repro.core.traces import ZEP, bayesian_weight, decay_zep
+
+RING_DEPTH = 8
+RING_EMPTY = -(10 ** 6)
+
+
+def init_ring(p: BCPNNParams):
+    """Per-column output-spike time ring, oldest-first (kept sorted by
+    construction: times are pushed in increasing order)."""
+    return jnp.full((p.cols, RING_DEPTH), RING_EMPTY, jnp.int32)
+
+
+def push_ring(ring, j, t):
+    """Record output spike (column j, time t); masked no-op for j < 0."""
+    active = j >= 0
+    safe_j = jnp.maximum(j, 0)
+    row = ring[safe_j]
+    new_row = jnp.concatenate([row[1:], jnp.asarray([t], jnp.int32)])
+    row = jnp.where(active, new_row, row)
+    return ring.at[safe_j].set(row)
+
+
+def row_updates_merged(st: H.HCUState, ring, rows, now, p: BCPNNParams,
+                       touch_only: bool = False):
+    """Row updates with deferred (merged) column contributions.
+
+    Identical signature/semantics to hcu.row_updates, but each cell's lazy
+    decay is integrated piecewise across the output-spike times recorded in
+    `ring`, injecting Zi(t_j) bumps where a column update would have.
+    touch_only=True decays/reconstructs without injecting input spikes
+    (used by flush_merged). Returns (state', w_rows, counts, rows_u).
+    """
+    R = p.rows
+    kij, ki = H.coeffs_ij(p), H.coeffs_i(p)
+    rows_u, counts = H.dedup_rows(rows, R)
+    if touch_only:
+        counts = jnp.zeros_like(counts)
+    safe = jnp.minimum(rows_u, R - 1)
+    A = rows_u.shape[0]
+
+    # --- i-vector lazy decay + spike increment ------------------------------
+    zi_g, ei_g, pi_g, ti_g = (st.zi[safe], st.ei[safe], st.pi[safe],
+                              st.ti[safe])
+    d_i = (now - ti_g).astype(zi_g.dtype)
+    zep_i = decay_zep(ZEP(zi_g, ei_g, pi_g), d_i, ki)
+    zi_new = zep_i.z + counts
+
+    # --- ij cells: piecewise decay across ring spike times ------------------
+    g = lambda plane: plane[safe]                       # (A, C)
+    z, e, pp = g(st.zij), g(st.eij), g(st.pij)
+    t0 = g(st.tij)                                      # (A, C) int32
+    t0f = t0.astype(jnp.float32)
+    nowf = jnp.asarray(now, jnp.float32)
+    b_prev = t0f
+    zep = ZEP(z, e, pp)
+    for m in range(RING_DEPTH):                         # oldest -> newest
+        tm = ring[:, m].astype(jnp.float32)[None, :]    # (1, C) -> bcast
+        b = jnp.clip(tm, t0f, nowf)                     # segment boundary
+        zep = decay_zep(zep, b - b_prev, kij)
+        bump = (tm > t0f) & (tm <= nowf)
+        # Zi at the spike time, from the i-vector value at its last stamp
+        zi_at = zi_g[:, None] * jnp.exp(
+            -(tm - ti_g.astype(jnp.float32)[:, None]) * (1.0 / p.tau_zi))
+        zep = ZEP(zep.z + jnp.where(bump, zi_at, 0.0), zep.e, zep.p)
+        b_prev = b
+    zep = decay_zep(zep, nowf - b_prev, kij)            # tail segment
+
+    # --- own (row) spike increment + Bayesian weight ------------------------
+    z1 = zep.z + counts[:, None] * st.zj[None, :]
+    w1 = bayesian_weight(zep.p, zep_i.p[:, None], st.pj[None, :], p.eps)
+    t1 = jnp.full((A, p.cols), now, jnp.int32)
+
+    scat = lambda plane, val: plane.at[rows_u].set(val, mode="drop")
+    st = st._replace(
+        zij=scat(st.zij, z1), eij=scat(st.eij, zep.e),
+        pij=scat(st.pij, zep.p), wij=scat(st.wij, w1),
+        tij=scat(st.tij, t1),
+        zi=st.zi.at[rows_u].set(zi_new, mode="drop"),
+        ei=st.ei.at[rows_u].set(zep_i.e, mode="drop"),
+        pi=st.pi.at[rows_u].set(zep_i.p, mode="drop"),
+        ti=st.ti.at[rows_u].set(jnp.full_like(ti_g, now), mode="drop"),
+    )
+    return st, w1, counts, rows_u
+
+
+def column_flush_merged(st: H.HCUState, ring, j, now, apply_fire,
+                        p: BCPNNParams) -> H.HCUState:
+    """Bring column j fully current: piecewise-integrate its pending ring
+    spikes into all R cells, optionally apply a fire happening at `now`,
+    and stamp the column. Used when the ring would overflow — so the
+    classic column write happens once per RING_DEPTH fires, not per fire
+    (the eBrainIII amortization), and the mode stays EXACT."""
+    kij, ki = H.coeffs_ij(p), H.coeffs_i(p)
+    gcol = lambda plane: jax.lax.dynamic_index_in_dim(plane.T, j, 0, False)
+    z, e, pp = gcol(st.zij), gcol(st.eij), gcol(st.pij)     # (R,)
+    t0f = gcol(st.tij).astype(jnp.float32)
+    tif = st.ti.astype(jnp.float32)
+    nowf = jnp.asarray(now, jnp.float32)
+    zep = ZEP(z, e, pp)
+    b_prev = t0f
+    for m in range(RING_DEPTH):
+        tm = ring[j, m].astype(jnp.float32)
+        b = jnp.clip(tm, t0f, nowf)
+        zep = decay_zep(zep, b - b_prev, kij)
+        bump = (tm > t0f) & (tm <= nowf)
+        zi_at = st.zi * jnp.exp(-(tm - tif) * (1.0 / p.tau_zi))
+        zep = ZEP(zep.z + jnp.where(bump, zi_at, 0.0), zep.e, zep.p)
+        b_prev = b
+    zep = decay_zep(zep, nowf - b_prev, kij)
+    # the fire at `now` itself (Zi(now) from the lazily-decayed i-vector)
+    zi_now = st.zi * jnp.exp(-(nowf - tif) * (1.0 / p.tau_zi))
+    z1 = zep.z + jnp.where(apply_fire, zi_now, 0.0)
+    pi_now = decay_zep(ZEP(st.zi, st.ei, st.pi),
+                       (nowf - tif), ki).p
+    w1 = bayesian_weight(zep.p, pi_now, st.pj[j], p.eps)
+
+    def put(plane, val):
+        old = jax.lax.dynamic_index_in_dim(plane.T, j, 0, False)
+        new = jnp.where(apply_fire, val, old)
+        return plane.T.at[j].set(new).T
+
+    return st._replace(
+        zij=put(st.zij, z1), eij=put(st.eij, zep.e), pij=put(st.pij, zep.p),
+        wij=put(st.wij, w1),
+        tij=put(st.tij.astype(jnp.float32),
+                jnp.full_like(t0f, now)).astype(jnp.int32))
+
+
+def hcu_tick_merged(st: H.HCUState, ring, rows, now, key, p: BCPNNParams):
+    """One merged-mode HCU tick: j-vec decay, merged row updates, WTA, and
+    (instead of a column update) a ring push + Zj bump for the fired MCU.
+
+    Two consistency mechanisms (both validated vs the golden model):
+      * same-tick patch: rows updated THIS tick are stamped Tij == now, so
+        the strict `t_spike > Tij` ledger can't credit them a fire also at
+        `now` — those A<=36 cells are patched directly;
+      * overflow flush: when the fired column's ring is full, the column is
+        flushed classically (with the current fire applied) and its ring
+        cleared — one column write per RING_DEPTH fires instead of per fire,
+        keeping the mode exact under any firing pattern."""
+    st = H._decay_jvec(st, p)
+    st, w_rows, counts, rows_u = row_updates_merged(st, ring, rows, now, p)
+    st, fired_j = H.periodic_update(st, w_rows, counts, now, key, p)
+    active = fired_j >= 0
+    safe_j = jnp.maximum(fired_j, 0)
+    overflow = active & (ring[safe_j, 0] != RING_EMPTY)
+
+    # overflow path: classic (amortized) column flush, fire applied, no push
+    st = column_flush_merged(st, ring, safe_j, now, overflow, p)
+    ring = ring.at[safe_j].set(
+        jnp.where(overflow, jnp.full((RING_DEPTH,), RING_EMPTY, jnp.int32),
+                  ring[safe_j]))
+
+    # normal path: defer via ring; patch only this tick's touched rows
+    ziv = st.zi[jnp.minimum(rows_u, p.rows - 1)]      # post-increment Zi(now)
+    st = st._replace(zij=st.zij.at[rows_u, safe_j].add(
+        jnp.where(active & ~overflow, ziv, 0.0), mode="drop"))
+    ring = push_ring(ring, jnp.where(overflow, -1, fired_j), now)
+
+    zj = st.zj.at[safe_j].add(jnp.where(active, 1.0, 0.0))
+    return st._replace(zj=zj), ring, fired_j
+
+
+def flush_merged(st: H.HCUState, ring, now, p: BCPNNParams):
+    """Bring every cell current (ring contributions applied): touch all rows
+    with zero counts, then recompute W (comparable to hcu.flush output)."""
+    R = p.rows
+    n_batches = -(-R // 64)
+    for b in range(n_batches):
+        rows = jnp.arange(b * 64, min((b + 1) * 64, R), dtype=jnp.int32)
+        rows = jnp.pad(rows, (0, 64 - rows.shape[0]), constant_values=R)
+        st, _, _, _ = row_updates_merged(st, ring, rows, now, p,
+                                         touch_only=True)
+    return st
+
+
+def worst_case_cells_merged(p: BCPNNParams) -> dict:
+    """EQ2 with merged columns: the R-cell column term disappears."""
+    classic = p.active_queue * p.cols + p.rows
+    merged = p.active_queue * p.cols
+    return {"classic_cells": classic, "merged_cells": merged,
+            "reduction": classic / merged}

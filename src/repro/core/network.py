@@ -1,0 +1,265 @@
+"""Multi-HCU BCPNN network: spike queues, routing, and the tick loop.
+
+Maps the paper's infrastructure (§II.A.3, §IV, §VI.D-E) onto JAX:
+
+  * delay queue  — (H, max_delay, A) ring of buckets indexed by arrival tick;
+                   a spike with biological delay d lands in bucket (t+d) % D.
+                   Bucket capacity A is the paper's active-queue size (36 for
+                   human scale, from the Poisson tail analysis of Fig 7);
+                   overflows are counted as drops, exactly the paper's
+                   1-spike-per-month budget.
+  * active queue — the bucket being consumed this tick (+ external input).
+  * fanout       — static connectivity (dest_hcu, dest_row, delay) per MCU,
+                   the analogue of the pipelined binary-tree spike NoC. In the
+                   sharded runtime the tree becomes an all_to_all over fixed
+                   per-device-pair buckets (see distributed.py).
+  * column batching — only HCUs that actually fired pay for a column update;
+                   fired HCUs are compacted into a fixed-capacity batch
+                   (cap_fire) the same way spikes are queued.
+
+Everything is a pure function of NetworkState; `eager=True` swaps the lazy
+HCU pipeline for the dense golden reference with identical queue semantics
+and RNG stream, so the two trajectories are directly comparable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hcu as H
+from repro.core import reference
+from repro.core.params import BCPNNParams
+from repro.core.traces import ZEP, decay_zep
+
+
+class Connectivity(NamedTuple):
+    dest_hcu: jnp.ndarray   # (H, C, F) int32
+    dest_row: jnp.ndarray   # (H, C, F) int32
+    delay: jnp.ndarray      # (H, C, F) int32, in [1, max_delay-1]
+
+
+class NetworkState(NamedTuple):
+    hcus: H.HCUState        # leading axis H on every leaf
+    delay_rows: jnp.ndarray  # (H, D, A) int32; empty slots == R
+    delay_count: jnp.ndarray  # (H, D) int32
+    t: jnp.ndarray          # () int32 current time (ms)
+    drops_in: jnp.ndarray   # () int32  — delay-queue overflow drops
+    drops_fire: jnp.ndarray  # () int32 — fired-batch overflow drops
+    base_key: jnp.ndarray   # PRNG key
+    jring: jnp.ndarray | None = None   # (H, C, M) merged-mode spike rings
+
+
+def make_connectivity(p: BCPNNParams, key, n_hcu: int | None = None) -> Connectivity:
+    """Random static fanout: each MCU projects to `fanout` (HCU, row) targets
+    with biological delays of mean ~`mean_delay` ms (truncated geometric)."""
+    n = n_hcu or p.n_hcu
+    k1, k2, k3 = jax.random.split(key, 3)
+    shape = (n, p.cols, p.fanout)
+    dest_hcu = jax.random.randint(k1, shape, 0, n, jnp.int32)
+    dest_row = jax.random.randint(k2, shape, 0, p.rows, jnp.int32)
+    lam = 1.0 / max(p.mean_delay - 1.0, 1e-3)
+    geo = jnp.floor(jnp.log1p(-jax.random.uniform(k3, shape)) / -lam).astype(jnp.int32)
+    delay = jnp.clip(1 + geo, 1, p.max_delay - 1)
+    return Connectivity(dest_hcu, dest_row, delay)
+
+
+def init_network(p: BCPNNParams, key, n_hcu: int | None = None,
+                 merged: bool = False) -> NetworkState:
+    n = n_hcu or p.n_hcu
+    hcus = jax.vmap(lambda _: H.init_hcu_state(p))(jnp.arange(n))
+    D, A = p.max_delay, p.active_queue
+    jring = None
+    if merged:
+        from repro.core import merged as M
+        jring = jnp.broadcast_to(M.init_ring(p),
+                                 (n, p.cols, M.RING_DEPTH)).copy()
+    return NetworkState(
+        jring=jring,
+        hcus=hcus,
+        delay_rows=jnp.full((n, D, A), p.rows, jnp.int32),
+        delay_count=jnp.zeros((n, D), jnp.int32),
+        t=jnp.asarray(0, jnp.int32),
+        drops_in=jnp.asarray(0, jnp.int32),
+        drops_fire=jnp.asarray(0, jnp.int32),
+        # private derived key: network_tick donates the state, so base_key
+        # must not alias a caller-held (or sibling-network) buffer
+        base_key=jax.random.fold_in(key, 0x5EED),
+    )
+
+
+def _rank_within_key(keys: jnp.ndarray, order: jnp.ndarray) -> jnp.ndarray:
+    """Given sort order of `keys`, rank of each element within its key group."""
+    sorted_keys = keys[order]
+    idx = jnp.arange(keys.shape[0])
+    is_first = jnp.concatenate([jnp.array([True]), sorted_keys[1:] != sorted_keys[:-1]])
+    first_pos = jnp.where(is_first, idx, 0)
+    first_pos = jax.lax.associative_scan(jnp.maximum, first_pos)
+    rank_sorted = idx - first_pos
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    return rank
+
+
+def enqueue_spikes(state: NetworkState, dest_h, dest_row, delay, valid,
+                   p: BCPNNParams, n_hcu: int):
+    """Insert a flat batch of spike messages into the delay queues.
+
+    Fixed-capacity slot allocation: messages are ranked within their
+    (dest_hcu, bucket) group; slot = current_count + rank; messages whose slot
+    exceeds the bucket capacity A are dropped and counted (paper Fig 7).
+    """
+    D, A = p.max_delay, p.active_queue
+    M = dest_h.shape[0]
+    bucket = (state.t + delay) % D
+    key = jnp.where(valid, dest_h * D + bucket, n_hcu * D)      # invalid sort last
+    order = jnp.argsort(key)
+    rank = _rank_within_key(key, order)
+    base = state.delay_count[dest_h, bucket]                    # (M,)
+    slot = base + rank
+    ok = valid & (slot < A)
+    flat_idx = jnp.where(ok, (dest_h * D + bucket) * A + slot, n_hcu * D * A)
+    delay_rows = state.delay_rows.reshape(-1).at[flat_idx].set(
+        dest_row, mode="drop").reshape(n_hcu, D, A)
+    # bucket occupancy: add arrivals, clip at capacity
+    arrivals = jnp.zeros((n_hcu, D), jnp.int32).at[dest_h, bucket].add(
+        valid.astype(jnp.int32), mode="drop")
+    new_count = jnp.minimum(state.delay_count + arrivals, A)
+    dropped = jnp.sum(state.delay_count + arrivals - new_count)
+    return state._replace(delay_rows=delay_rows, delay_count=new_count,
+                          drops_in=state.drops_in + dropped)
+
+
+def _select_fired(fired: jnp.ndarray, cap: int):
+    """Compact fired HCU indices (fired[h] >= 0) into `cap` slots."""
+    n = fired.shape[0]
+    is_fired = fired >= 0
+    order = jnp.argsort(~is_fired)              # fired first, stable
+    idx = order[:cap]
+    sel_valid = is_fired[idx]
+    h_idx = jnp.where(sel_valid, idx, n)
+    j_idx = jnp.where(sel_valid, fired[idx], 0)
+    n_dropped = jnp.sum(is_fired) - jnp.sum(sel_valid)
+    return h_idx.astype(jnp.int32), j_idx.astype(jnp.int32), n_dropped
+
+
+def column_updates_batched(hcus: H.HCUState, h_idx, j_idx, now,
+                           p: BCPNNParams, backend=None) -> H.HCUState:
+    """Lazy column updates for the compacted fired batch (network level).
+
+    h_idx: (K,) HCU indices (== H for padding -> scatter-dropped);
+    j_idx: (K,) fired MCU column per slot.
+
+    Gathers exactly the K (R,)-columns that fired (plus the K i-vectors) —
+    never whole HCU states — so the cost is K*R cells, matching the paper's
+    column-update traffic budget.
+    """
+    n = hcus.zij.shape[0]
+    K = h_idx.shape[0]
+    R = p.rows
+    safe_h = jnp.minimum(h_idx, n - 1)
+    h_ix = h_idx[:, None]                     # (K,1): padding == n -> dropped
+    sh_ix = safe_h[:, None]
+    r_ix = jnp.arange(R)[None, :]
+    j_ix = j_idx[:, None]
+
+    gcol = lambda plane: plane[sh_ix, r_ix, j_ix]             # (K, R)
+    # i-vector traces brought to `now` (values only, no writeback)
+    d_i = (now - hcus.ti[safe_h]).astype(hcus.zi.dtype)       # (K, R)
+    zep_i = decay_zep(ZEP(hcus.zi[safe_h], hcus.ei[safe_h],
+                          hcus.pi[safe_h]), d_i, H.coeffs_i(p))
+    pj_sc = hcus.pj[safe_h, j_idx]                            # (K,)
+
+    z1, e1, p1, w1, t1 = jax.vmap(
+        lambda z, e, pp, t, zi, pi, pj: H.ops.col_update(
+            z, e, pp, t, now, zi, pi, pj, H.coeffs_ij(p), p.eps,
+            backend=backend)
+    )(gcol(hcus.zij), gcol(hcus.eij), gcol(hcus.pij), gcol(hcus.tij),
+      zep_i.z, zep_i.p, pj_sc)
+
+    put = lambda plane, val: plane.at[h_ix, r_ix, j_ix].set(val, mode="drop")
+    hcus = hcus._replace(
+        zij=put(hcus.zij, z1), eij=put(hcus.eij, e1), pij=put(hcus.pij, p1),
+        wij=put(hcus.wij, w1), tij=put(hcus.tij, t1))
+    zj = hcus.zj.at[h_idx, j_idx].add(1.0, mode="drop")
+    return hcus._replace(zj=zj)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "eager", "backend",
+                                             "cap_fire", "merged"),
+                   donate_argnums=(0,))
+def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
+                 p: BCPNNParams, *, eager: bool = False, merged: bool = False,
+                 backend: str | None = None, cap_fire: int | None = None):
+    """Advance the whole network by one 1 ms tick.
+
+    ext_rows: (H, A_ext) external input spikes (row index, padding == p.rows)
+    Returns (state', fired (H,)) with fired[h] = MCU index or -1.
+    merged=True runs the eBrainIII merged-column-update mode (core/merged.py;
+    state must be built with init_network(..., merged=True)).
+    """
+    n = state.delay_rows.shape[0]
+    D = p.max_delay
+    t = state.t + 1
+    cap = cap_fire or max(2, int(0.35 * n) + 1)
+
+    # 1. consume this tick's delay bucket and merge with external input
+    bucket = state.delay_rows[:, t % D, :]                     # (H, A)
+    rows = jnp.concatenate([bucket, ext_rows], axis=1)
+    state = state._replace(
+        delay_rows=state.delay_rows.at[:, t % D, :].set(p.rows),
+        delay_count=state.delay_count.at[:, t % D].set(0))
+
+    # 2. per-HCU tick (row updates + periodic/WTA), identical RNG all paths
+    k_t = jax.random.fold_in(state.base_key, t)
+    keys = jax.vmap(lambda h: jax.random.fold_in(k_t, h))(jnp.arange(n))
+    if eager:
+        hcus, fired = jax.vmap(
+            lambda s, r, k: reference.eager_tick(s, r, t, k, p)
+        )(state.hcus, rows, keys)
+    elif merged:
+        from repro.core import merged as M
+        hcus, jring, fired = jax.vmap(
+            lambda s, g, r, k: M.hcu_tick_merged(s, g, r, t, k, p)
+        )(state.hcus, state.jring, rows, keys)
+        state = state._replace(jring=jring)
+    else:
+        hcus, fired = jax.vmap(
+            lambda s, r, k: H.hcu_tick_pre(s, r, t, k, p, backend=backend)
+        )(state.hcus, rows, keys)
+
+    # 3. compact fired HCUs; lazy path pays its column updates here.
+    #    lax.cond skips the whole column pass on silent ticks (~90% of ticks
+    #    at out_rate=0.1) — the "power gating" of the lazy model. Merged
+    #    mode has no column pass at all (eBrainIII).
+    h_idx, j_idx, n_drop = _select_fired(fired, cap)
+    if not eager and not merged:
+        hcus = jax.lax.cond(
+            jnp.any(h_idx < n),
+            lambda hc: column_updates_batched(hc, h_idx, j_idx, t, p,
+                                              backend=backend),
+            lambda hc: hc,
+            hcus)
+    state = state._replace(hcus=hcus, drops_fire=state.drops_fire + n_drop,
+                           t=t)
+
+    # 4. fan out spikes from the fired batch into delay queues
+    safe_h = jnp.minimum(h_idx, n - 1)
+    dest_h = conn.dest_hcu[safe_h, j_idx].reshape(-1)          # (K*F,)
+    dest_r = conn.dest_row[safe_h, j_idx].reshape(-1)
+    dly = conn.delay[safe_h, j_idx].reshape(-1)
+    valid = jnp.repeat(h_idx < n, p.fanout)
+    state = enqueue_spikes(state, dest_h, dest_r, dly, valid, p, n)
+    return state, fired
+
+
+def run(state: NetworkState, conn: Connectivity, ext_fn, n_ticks: int,
+        p: BCPNNParams, **kw):
+    """Host-loop driver: ext_fn(t) -> (H, A_ext) external spike rows."""
+    fired_hist = []
+    for _ in range(n_ticks):
+        ext = ext_fn(int(state.t) + 1)
+        state, fired = network_tick(state, conn, ext, p, **kw)
+        fired_hist.append(fired)
+    return state, jnp.stack(fired_hist)

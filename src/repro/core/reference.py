@@ -1,0 +1,68 @@
+"""Eager dense BCPNN reference — the golden model.
+
+This is the analogue of the paper's golden C++ model (§VII.A.2) *and* of the
+GPU-style eager mapping it benchmarks against (§VIII.A): every tick, every
+trace in the (R, C) matrix is decayed and every weight recomputed — no lazy
+evaluation, no timestamps. Because both eager and lazy paths use the exact
+exponential-integrator per gap (semigroup property), the lazy system must
+match this reference bit-for-bit up to float rounding
+(tests/test_lazy_vs_eager.py).
+
+It also anchors the Fig-14-style benchmark: eager touches R*C cells/tick
+where lazy touches ~(spikes * C + out_rate * R); the ratio is the paper's
+"GPU achieves 5% of rated FLOPs" story re-expressed as useful-work fraction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hcu as H
+from repro.core.params import BCPNNParams
+from repro.core.traces import ZEP, bias, decay_zep
+
+
+def eager_tick(st: H.HCUState, rows, now, key, p: BCPNNParams):
+    """One dense 1 ms tick with semantics identical to the lazy pipeline."""
+    # 1. j-vector decay (identical to lazy)
+    zep_j = decay_zep(ZEP(st.zj, st.ej, st.pj), p.dt_ms, H.coeffs_j(p))
+    st = st._replace(zj=zep_j.z, ej=zep_j.e, pj=zep_j.p)
+
+    # 2. dense decay of ALL ij cells and the whole i-vector by dt
+    zep_ij = decay_zep(ZEP(st.zij, st.eij, st.pij), p.dt_ms, H.coeffs_ij(p))
+    zep_i = decay_zep(ZEP(st.zi, st.ei, st.pi), p.dt_ms, H.coeffs_i(p))
+
+    # 3. row spike increments (duplicates aggregate, same as dedup_rows)
+    rows_u, counts = H.dedup_rows(rows, p.rows)
+    spike_vec = jnp.zeros((p.rows,), st.zi.dtype).at[rows_u].add(
+        counts, mode="drop")                                   # (R,) multiplicity
+    zi = zep_i.z + spike_vec
+    zij = zep_ij.z + spike_vec[:, None] * st.zj[None, :]
+
+    # 4. dense Bayesian weight recompute
+    wij = jnp.log((zep_ij.p + p.eps**2)
+                  / ((zep_i.p[:, None] + p.eps) * (st.pj[None, :] + p.eps)))
+
+    st = st._replace(zij=zij, eij=zep_ij.e, pij=zep_ij.p, wij=wij,
+                     tij=jnp.full_like(st.tij, now),
+                     zi=zi, ei=zep_i.e, pi=zep_i.p,
+                     ti=jnp.full_like(st.ti, now))
+
+    # 5. periodic support + WTA (same RNG stream as lazy)
+    drive = spike_vec @ wij                                    # (C,)
+    h = st.h * jnp.exp(-p.dt_ms / p.tau_m) + drive
+    s = h + bias(st.pj, p.eps)
+    k_gate, k_win = jax.random.split(key)
+    fire = jax.random.uniform(k_gate) < p.out_rate * p.dt_ms
+    winner = jax.random.categorical(k_win, s / p.wta_temp)
+    fired_j = jnp.where(fire, winner, -1).astype(jnp.int32)
+    st = st._replace(h=h)
+
+    # 6. column update for the fired MCU (dense state: only Z jumps; E/P/W
+    #    were already brought current by the dense decay above)
+    active = fired_j >= 0
+    safe_j = jnp.maximum(fired_j, 0)
+    onehot = (jnp.arange(p.cols) == safe_j) & active
+    zij = st.zij + jnp.where(onehot[None, :], st.zi[:, None], 0.0)
+    zj = st.zj + onehot.astype(st.zj.dtype)
+    return st._replace(zij=zij, zj=zj), fired_j

@@ -1,0 +1,101 @@
+"""Closed-form lazy evaluation of the BCPNN Z -> E -> P trace cascade.
+
+The ODE system between spikes (paper Fig. 2):
+
+    tau_z dZ/dt = -Z                 (Z decays exponentially)
+    tau_e dE/dt =  Z - E
+    tau_p dP/dt =  E - P
+
+has the exact solution over a gap of ``dt`` (all in ms):
+
+    ez = exp(-dt/tau_z), ee = exp(-dt/tau_e), ep = exp(-dt/tau_p)
+    Z(dt) = Z0 * ez
+    E(dt) = E0 * ee + Z0 * (ez - ee) * tau_z/(tau_z - tau_e)
+    P(dt) = P0 * ep + (E0 - Z0*a) * (ee - ep) * tau_e/(tau_e - tau_p)
+                    + Z0 * a * (ez - ep) * tau_z/(tau_z - tau_p)
+    with a = tau_z/(tau_z - tau_e)
+
+This module is the single source of truth for that algebra; the Pallas kernel
+(`repro.kernels.bcpnn_update`) and the pure-jnp oracle (`repro.kernels.bcpnn_ref`)
+both reproduce it and are tested against each other and against a small-step
+Euler integration of the ODEs (tests/test_traces.py).
+
+The semigroup property  decay(d1+d2) == decay(d2) o decay(d1)  is what makes
+*lazy* evaluation exact: skipping N silent ticks and applying one integrated
+decay is bit-for-bit equivalent (up to fp rounding) to N per-tick decays.
+This is the paper's key algorithmic device (§II.A.2, "Lazy evaluation and
+Time stamping").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class ZEP(NamedTuple):
+    """A Z->E->P trace triplet (arrays broadcast together)."""
+    z: jnp.ndarray
+    e: jnp.ndarray
+    p: jnp.ndarray
+
+
+class DecayCoeffs(NamedTuple):
+    """Precomputed per-(tau_z,tau_e,tau_p) rational coefficients."""
+    inv_tau_z: float
+    inv_tau_e: float
+    inv_tau_p: float
+    c_ze: float   # tau_z / (tau_z - tau_e)
+    c_ep: float   # tau_e / (tau_e - tau_p)
+    c_zp: float   # tau_z / (tau_z - tau_p)
+
+
+def make_coeffs(tau_z: float, tau_e: float, tau_p: float) -> DecayCoeffs:
+    return DecayCoeffs(
+        inv_tau_z=1.0 / tau_z,
+        inv_tau_e=1.0 / tau_e,
+        inv_tau_p=1.0 / tau_p,
+        c_ze=tau_z / (tau_z - tau_e),
+        c_ep=tau_e / (tau_e - tau_p),
+        c_zp=tau_z / (tau_z - tau_p),
+    )
+
+
+def decay_zep(zep: ZEP, dt, k: DecayCoeffs) -> ZEP:
+    """Propagate a ZEP triplet across a silent gap of ``dt`` ms (closed form).
+
+    ``dt`` may be any non-negative array broadcastable with the traces.
+    dt == 0 is the exact identity (ez = ee = ep = 1, difference terms vanish),
+    which is what makes same-tick row+column updates compose correctly.
+    """
+    dt = jnp.asarray(dt, dtype=zep.z.dtype)
+    ez = jnp.exp(-dt * k.inv_tau_z)
+    ee = jnp.exp(-dt * k.inv_tau_e)
+    ep = jnp.exp(-dt * k.inv_tau_p)
+    z0, e0, p0 = zep
+    e1 = e0 * ee + z0 * (ez - ee) * k.c_ze
+    p1 = (p0 * ep
+          + (e0 - z0 * k.c_ze) * (ee - ep) * k.c_ep
+          + z0 * k.c_ze * (ez - ep) * k.c_zp)
+    return ZEP(z0 * ez, e1, p1)
+
+
+def euler_zep(zep: ZEP, dt: float, n_steps: int, k: DecayCoeffs) -> ZEP:
+    """Explicit-Euler reference integration (for tests only)."""
+    z, e, p = (jnp.asarray(x, jnp.float64 if False else jnp.float32) for x in zep)
+    h = dt / n_steps
+    for _ in range(n_steps):
+        z, e, p = (z + h * (-z * k.inv_tau_z),
+                   e + h * ((z - e) * k.inv_tau_e),
+                   p + h * ((e - p) * k.inv_tau_p))
+    return ZEP(z, e, p)
+
+
+def bayesian_weight(p_ij, p_i, p_j, eps: float):
+    """w_ij = log( P_ij / (P_i * P_j) ), regularized (paper Fig. 1/2)."""
+    return jnp.log((p_ij + eps * eps) / ((p_i + eps) * (p_j + eps)))
+
+
+def bias(p_j, eps: float):
+    """b_j = log(P_j) — MCU prior activation."""
+    return jnp.log(p_j + eps)

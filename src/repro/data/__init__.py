@@ -1,0 +1,5 @@
+from repro.data.synthetic import (MarkovLM, lm_batch_spec, make_patterns,
+                                  pattern_drive, poisson_external_drive)
+
+__all__ = ["MarkovLM", "lm_batch_spec", "make_patterns", "pattern_drive",
+           "poisson_external_drive"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  bcpnn_update     fused lazy ZEP decay + Hebbian increment + Bayesian
+                   weight per synaptic cell (row + column variants) — the
+                   paper's FPU-set datapath (§VI.C) with ping-pong DMA
+                   overlap (EQ3 k=2) as Pallas double buffering
+  ops              jit'd dispatcher (ref | pallas | pallas_interpret)
+  bcpnn_ref        pure-jnp oracle (golden model)
+  flash_attention  fused online-softmax attention for the LM substrate
+                   (causal / sliding-window / softcap / dynamic kv_len)
+
+All kernels are validated against their oracles in interpret mode on CPU
+(tests/test_kernels.py, tests/test_flash_attention.py) and compile to
+Mosaic on a real TPU unchanged.
+"""
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+__all__ = ["ops", "flash_attention", "flash_attention_ref"]

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the fused BCPNN lazy cell update.
+
+This is the reference ("golden model" in the paper's §VII.A.2 sense) for the
+Pallas kernel in `bcpnn_update.py`. One call performs, per synaptic cell:
+
+  1. integrated lazy decay of the (Zij, Eij, Pij) cascade across the gap
+     ``now - Tij`` (closed form, see repro.core.traces),
+  2. the Hebbian spike increment  Zij += dz,
+  3. the Bayesian weight recompute  Wij = log(Pij / (Pi * Pj)),
+  4. timestamp update Tij = now.
+
+Two access patterns, mirroring the paper's row/column updates:
+  - row update:    block (S, C); dz is rank-1:  counts (S,1) * zj (1,C)
+  - column update: block (S, L); dz is full-rank (pre-gathered Zi(t) values)
+Both are expressed through ``cell_update_ref`` with broadcastable args.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.traces import DecayCoeffs, ZEP, decay_zep, bayesian_weight
+
+
+def cell_update_ref(zij, eij, pij, tij, now, dz, p_pre, p_post,
+                    coeffs: DecayCoeffs, eps: float):
+    """Fused lazy decay + Hebbian increment + Bayesian weight.
+
+    Args:
+      zij, eij, pij: trace planes, shape (..., L) f32.
+      tij: int32 timestamps, same shape.
+      now: scalar int32/float current time (ms).
+      dz:  Z increment applied after decay (broadcastable).
+      p_pre:  presynaptic P trace at `now` (broadcastable)  -> weight denominator.
+      p_post: postsynaptic P trace at `now` (broadcastable) -> weight denominator.
+      coeffs: decay coefficients for the ij product trace (tau_z').
+      eps: probability regularizer.
+
+    Returns:
+      (zij', eij', pij', wij', tij') with tij' = now everywhere.
+    """
+    dt = (now - tij).astype(zij.dtype)
+    z1, e1, p1 = decay_zep(ZEP(zij, eij, pij), dt, coeffs)
+    z1 = z1 + dz
+    w1 = bayesian_weight(p1, p_pre, p_post, eps)
+    t1 = jnp.broadcast_to(jnp.asarray(now, tij.dtype), tij.shape)
+    return z1, e1, p1, w1, t1
+
+
+def row_update_ref(zij, eij, pij, tij, now, counts, zj, p_i, p_j,
+                   coeffs: DecayCoeffs, eps: float):
+    """Row update: blocks (S, C), rank-1 increment counts[:,None]*zj[None,:].
+
+    counts: (S,) spike multiplicities for the S gathered rows.
+    zj:     (C,) postsynaptic Z traces at `now`.
+    p_i:    (S,) presynaptic P traces at `now` (post-increment of i-vector).
+    p_j:    (C,) postsynaptic P traces at `now`.
+    """
+    dz = counts[:, None] * zj[None, :]
+    return cell_update_ref(zij, eij, pij, tij, now, dz,
+                           p_i[:, None], p_j[None, :], coeffs, eps)
+
+
+def col_update_ref(zij, eij, pij, tij, now, zi_t, p_i, p_j_scalar,
+                   coeffs: DecayCoeffs, eps: float):
+    """Column update: the (R,) column is viewed as (R/L, L) lanes.
+
+    zi_t: (R/L, L) presynaptic Z traces at `now` (the Hebbian increment).
+    p_i:  (R/L, L) presynaptic P traces at `now`.
+    p_j_scalar: postsynaptic P trace of the fired MCU.
+    """
+    return cell_update_ref(zij, eij, pij, tij, now, zi_t,
+                           p_i, p_j_scalar, coeffs, eps)

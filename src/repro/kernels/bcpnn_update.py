@@ -1,0 +1,162 @@
+"""Pallas TPU kernel for the fused BCPNN lazy cell update.
+
+This kernel is the TPU analogue of the paper's per-cell FPU-set datapath
+(§VI.C: <3 mul, 2 add, 2 exp> + log/div, two cells per cycle) combined with
+its ping-pong buffering (EQ3, k=2):
+
+  * the whole closed-form ZEP decay + Hebbian increment + Bayesian weight is
+    ONE fused VPU pipeline — traces never round-trip to HBM between stages;
+  * Pallas double-buffers HBM->VMEM tile DMA across grid steps, overlapping
+    memory with compute exactly like the paper's ping-pong buffers mask
+    T_DRAM behind T_row_comp;
+  * blocks are (BS, 128)-shaped: the 128-lane dimension is the hardware
+    analogue of the paper's "cell-level parallelism" (#FPU_sets).
+
+Two entry points:
+  row_update_kernel_call : (S, C) row blocks, rank-1 increment counts x zj
+  col_update_kernel_call : a column viewed as (R/128, 128) lanes, full-rank dz
+
+Validated against `bcpnn_ref` in interpret mode (tests/test_kernels.py); on a
+real TPU the same code path compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # compiler params API varies across jax versions; best-effort only
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+from repro.core.traces import DecayCoeffs
+
+# Default VMEM tiling. Row updates arrive as (n_spikes<=40, 128-padded C);
+# column updates as (R/128, 128). (8,128) is the f32 native tile; BS=8 keeps
+# the working set (12 planes * 8*128*4B = 48 KiB) far under VMEM while giving
+# the DMA engine whole tiles.
+DEFAULT_BLOCK_S = 8
+DEFAULT_BLOCK_L = 128
+
+
+def _cell_math(z, e, p, dt, dz, p_pre, p_post, k: DecayCoeffs, eps: float):
+    """Shared per-cell arithmetic; mirrors traces.decay_zep + bayesian_weight."""
+    ez = jnp.exp(-dt * k.inv_tau_z)
+    ee = jnp.exp(-dt * k.inv_tau_e)
+    ep_ = jnp.exp(-dt * k.inv_tau_p)
+    e1 = e * ee + z * (ez - ee) * k.c_ze
+    p1 = (p * ep_
+          + (e - z * k.c_ze) * (ee - ep_) * k.c_ep
+          + z * k.c_ze * (ez - ep_) * k.c_zp)
+    z1 = z * ez + dz
+    w1 = jnp.log((p1 + eps * eps) / ((p_pre + eps) * (p_post + eps)))
+    return z1, e1, p1, w1
+
+
+def _row_kernel(now_ref, z_ref, e_ref, p_ref, t_ref, counts_ref, zj_ref,
+                pi_ref, pj_ref, zo_ref, eo_ref, po_ref, wo_ref, to_ref,
+                *, k: DecayCoeffs, eps: float):
+    now = now_ref[0, 0]
+    dt = (now - t_ref[...]).astype(jnp.float32)
+    dz = counts_ref[...] * zj_ref[...]          # (BS,1) * (1,BL) rank-1 bcast
+    z1, e1, p1, w1 = _cell_math(z_ref[...], e_ref[...], p_ref[...], dt, dz,
+                                pi_ref[...], pj_ref[...], k, eps)
+    zo_ref[...] = z1
+    eo_ref[...] = e1
+    po_ref[...] = p1
+    wo_ref[...] = w1
+    to_ref[...] = jnp.full_like(t_ref[...], now)
+
+
+def _col_kernel(now_ref, z_ref, e_ref, p_ref, t_ref, zi_ref, pi_ref, pj_ref,
+                zo_ref, eo_ref, po_ref, wo_ref, to_ref,
+                *, k: DecayCoeffs, eps: float):
+    now = now_ref[0, 0]
+    dt = (now - t_ref[...]).astype(jnp.float32)
+    z1, e1, p1, w1 = _cell_math(z_ref[...], e_ref[...], p_ref[...], dt,
+                                zi_ref[...], pi_ref[...], pj_ref[...], k, eps)
+    zo_ref[...] = z1
+    eo_ref[...] = e1
+    po_ref[...] = p1
+    wo_ref[...] = w1
+    to_ref[...] = jnp.full_like(t_ref[...], now)
+
+
+def _compiler_params():
+    if pltpu is None:
+        return None
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            try:
+                return cls(dimension_semantics=("parallel", "parallel"))
+            except Exception:  # pragma: no cover
+                return None
+    return None
+
+
+@functools.partial(jax.jit, static_argnames=("k", "eps", "bs", "bl", "interpret"))
+def row_update_kernel_call(zij, eij, pij, tij, now, counts, zj, p_i, p_j,
+                           k: DecayCoeffs, eps: float,
+                           bs: int = DEFAULT_BLOCK_S, bl: int = DEFAULT_BLOCK_L,
+                           interpret: bool = False):
+    """Pallas row update over (S, C) blocks. S % bs == 0, C % bl == 0 required
+    (ops.py pads). counts (S,), zj (C,), p_i (S,), p_j (C,)."""
+    S, C = zij.shape
+    grid = (S // bs, C // bl)
+    now_arr = jnp.asarray(now, jnp.int32).reshape(1, 1)
+    sc = pl.BlockSpec((bs, bl), lambda i, j: (i, j))
+    s1 = pl.BlockSpec((bs, 1), lambda i, j: (i, 0))
+    c1 = pl.BlockSpec((1, bl), lambda i, j: (0, j))
+    one = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((S, C), jnp.float32)] * 4 \
+        + [jax.ShapeDtypeStruct((S, C), jnp.int32)]
+    kwargs = {}
+    cp = _compiler_params()
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    fn = pl.pallas_call(
+        functools.partial(_row_kernel, k=k, eps=eps),
+        grid=grid,
+        in_specs=[one, sc, sc, sc, sc, s1, c1, s1, c1],
+        out_specs=[sc, sc, sc, sc, sc],
+        out_shape=out_shape,
+        interpret=interpret,
+        **kwargs,
+    )
+    return fn(now_arr, zij, eij, pij, tij,
+              counts.reshape(S, 1), zj.reshape(1, C),
+              p_i.reshape(S, 1), p_j.reshape(1, C))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "eps", "bs", "bl", "interpret"))
+def col_update_kernel_call(zij, eij, pij, tij, now, zi_t, p_i, p_j_scalar,
+                           k: DecayCoeffs, eps: float,
+                           bs: int = DEFAULT_BLOCK_S, bl: int = DEFAULT_BLOCK_L,
+                           interpret: bool = False):
+    """Pallas column update; the (R,) column is pre-reshaped to (R/bl, bl)."""
+    S, C = zij.shape
+    grid = (S // bs, C // bl)
+    now_arr = jnp.asarray(now, jnp.int32).reshape(1, 1)
+    sc = pl.BlockSpec((bs, bl), lambda i, j: (i, j))
+    one = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((S, C), jnp.float32)] * 4 \
+        + [jax.ShapeDtypeStruct((S, C), jnp.int32)]
+    kwargs = {}
+    cp = _compiler_params()
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    fn = pl.pallas_call(
+        functools.partial(_col_kernel, k=k, eps=eps),
+        grid=grid,
+        in_specs=[one, sc, sc, sc, sc, sc, sc, one],
+        out_specs=[sc, sc, sc, sc, sc],
+        out_shape=out_shape,
+        interpret=interpret,
+        **kwargs,
+    )
+    return fn(now_arr, zij, eij, pij, tij, zi_t, p_i,
+              jnp.asarray(p_j_scalar, jnp.float32).reshape(1, 1))

@@ -1,0 +1,94 @@
+"""Backend-dispatching jit wrappers around the BCPNN update kernels.
+
+Backends:
+  "ref"               pure-jnp oracle (fast on CPU; default off-TPU)
+  "pallas"            compiled Pallas kernel (TPU target)
+  "pallas_interpret"  Pallas interpret mode (kernel-body semantics on CPU —
+                      used by tests to validate the kernel against the oracle)
+
+Selected via REPRO_KERNEL_BACKEND or the explicit ``backend=`` argument.
+The wrappers own all shape plumbing (padding to (8,128) tiles, column
+reshape), so callers deal only in logical (S, C) / (R,) shapes.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.traces import DecayCoeffs
+from repro.kernels import bcpnn_ref, bcpnn_update
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad2(x, s_to: int, c_to: int, fill=0):
+    S, C = x.shape
+    if S == s_to and C == c_to:
+        return x
+    return jnp.pad(x, ((0, s_to - S), (0, c_to - C)), constant_values=fill)
+
+
+def _pad1(x, n_to: int, fill=0):
+    n = x.shape[0]
+    if n == n_to:
+        return x
+    return jnp.pad(x, (0, n_to - n), constant_values=fill)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def row_update(zij, eij, pij, tij, now, counts, zj, p_i, p_j,
+               coeffs: DecayCoeffs, eps: float, backend: str | None = None):
+    """Fused lazy row update on an (S, C) block of gathered rows.
+
+    Returns (zij', eij', pij', wij', tij'), logical shapes preserved.
+    """
+    backend = backend or default_backend()
+    if backend == "ref":
+        return bcpnn_ref.row_update_ref(zij, eij, pij, tij, now, counts, zj,
+                                        p_i, p_j, coeffs, eps)
+    S, C = zij.shape
+    bs = min(bcpnn_update.DEFAULT_BLOCK_S, _round_up(S, 8))
+    Sp, Cp = _round_up(S, bs), _round_up(C, bcpnn_update.DEFAULT_BLOCK_L)
+    interp = backend == "pallas_interpret"
+    out = bcpnn_update.row_update_kernel_call(
+        _pad2(zij, Sp, Cp), _pad2(eij, Sp, Cp), _pad2(pij, Sp, Cp),
+        _pad2(tij, Sp, Cp, fill=0), now,
+        _pad1(counts, Sp), _pad1(zj, Cp), _pad1(p_i, Sp), _pad1(p_j, Cp),
+        k=coeffs, eps=eps, bs=bs, interpret=interp)
+    return tuple(o[:S, :C] for o in out)
+
+
+def col_update(z_col, e_col, p_col, t_col, now, zi_t, p_i, p_j_scalar,
+               coeffs: DecayCoeffs, eps: float, backend: str | None = None):
+    """Fused lazy column update on an (R,) column (paper: 100 row-sized chunks).
+
+    All column args are (R,); returns (z', e', p', w', t') each (R,).
+    """
+    backend = backend or default_backend()
+    if backend == "ref":
+        return bcpnn_ref.col_update_ref(z_col, e_col, p_col, t_col, now,
+                                        zi_t, p_i, p_j_scalar, coeffs, eps)
+    (R,) = z_col.shape
+    L = bcpnn_update.DEFAULT_BLOCK_L
+    bs = bcpnn_update.DEFAULT_BLOCK_S
+    Rp = _round_up(R, L * bs)
+
+    def shp(x, fill=0):
+        return _pad1(x, Rp, fill).reshape(Rp // L, L)
+
+    interp = backend == "pallas_interpret"
+    out = bcpnn_update.col_update_kernel_call(
+        shp(z_col), shp(e_col), shp(p_col), shp(t_col), now,
+        shp(zi_t), shp(p_i), p_j_scalar, k=coeffs, eps=eps, bs=bs,
+        interpret=interp)
+    return tuple(o.reshape(Rp)[:R] for o in out)

@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first initialization). Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell and extract memory / cost / collective data for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only] \
+      --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --bcpnn
+
+Each cell writes results/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, collective-bytes breakdown and the roofline
+terms; EXPERIMENTS.md tables are generated from these files.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import roofline as RL
+from repro.launch import shardings as SH
+from repro.launch.mesh import make_bcpnn_mesh, make_production_mesh
+from repro.launch.shapes import (SHAPES, applicable, input_specs,
+                                 params_specs_abstract)
+from repro.models.sharding import DEFAULT_RULES, use_rules
+from repro.models.transformer import Model
+from repro.train.optimizer import AdamW
+from repro.train.train_step import make_train_step
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _mem_summary(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(ma, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:  # backend without memory analysis
+        return {"error": str(e)}
+
+
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+               zero_opt: bool = True, donate: bool = True,
+               seq_shard_long: bool = True, remat: bool | None = None,
+               scan: bool | None = None, cfg_override=None,
+               fsdp_bytes: int | None = None, attn_impl: str | None = None,
+               seqp: bool | None = None, moe_cap: bool | None = None):
+    """Lower + compile one cell; returns (compiled, lowered_text, record)."""
+    import dataclasses
+    cfg = cfg_override or get_config(arch_id)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if scan is not None:
+        cfg = dataclasses.replace(cfg, scan_layers=scan)
+    if attn_impl is not None:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    if seqp is not None:
+        cfg = dataclasses.replace(cfg, seq_parallel_residual=seqp)
+    if moe_cap is not None:
+        cfg = dataclasses.replace(cfg, moe_shard_cap=moe_cap)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.size
+    model = Model(cfg)
+    sh = SHAPES[shape_name]
+    specs_in = input_specs(cfg, shape_name)
+    p_abs = params_specs_abstract(cfg)
+    p_specs = SH.param_specs(p_abs, cfg, mesh,
+                             fsdp_threshold_bytes=fsdp_bytes)
+
+    t0 = time.time()
+    with mesh, use_rules(DEFAULT_RULES, mesh):
+        if sh["kind"] == "train":
+            opt = AdamW()
+            o_abs = jax.eval_shape(opt.init, p_abs)
+            o_specs = SH.opt_specs(p_specs, zero=zero_opt, mesh=mesh,
+                                   params=p_abs)
+            b_specs = SH.batch_specs(specs_in["batch"], mesh)
+            step = make_train_step(model, opt)
+            jf = jax.jit(
+                step,
+                in_shardings=(_named(mesh, p_specs), _named(mesh, o_specs),
+                              _named(mesh, b_specs)),
+                out_shardings=(_named(mesh, p_specs), _named(mesh, o_specs),
+                               None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jf.lower(p_abs, o_abs, specs_in["batch"])
+            n_tok = sh["batch"] * sh["seq"]
+            mfl = RL.model_flops(cfg, shape_name, n_tok, train=True)
+        elif sh["kind"] == "prefill":
+            c_specs = SH.cache_specs(specs_in["caches"], cfg, mesh)
+            b_specs = SH.batch_specs(specs_in["batch"], mesh)
+            jf = jax.jit(
+                model.prefill,
+                in_shardings=(_named(mesh, p_specs), _named(mesh, b_specs),
+                              _named(mesh, c_specs)),
+                donate_argnums=(2,) if donate else ())
+            lowered = jf.lower(p_abs, specs_in["batch"], specs_in["caches"])
+            n_tok = sh["batch"] * sh["seq"]
+            mfl = RL.model_flops(cfg, shape_name, n_tok, train=False)
+        else:  # decode
+            seq_shard = seq_shard_long and sh.get("long", False)
+            c_specs = SH.cache_specs(specs_in["caches"], cfg, mesh,
+                                     seq_shard=seq_shard)
+            args = [p_abs, specs_in["token"], specs_in["pos"],
+                    specs_in["caches"]]
+            in_sh = [_named(mesh, p_specs),
+                     NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+                     _named(mesh, c_specs)]
+            if "memory" in specs_in:
+                mem_spec = SH.batch_specs({"m": specs_in["memory"]}, mesh)["m"]
+                args += [specs_in["memory"], specs_in["mem_pos"]]
+                in_sh += [NamedSharding(mesh, mem_spec),
+                          NamedSharding(mesh, P())]
+            jf = jax.jit(model.decode_step,
+                         in_shardings=tuple(in_sh),
+                         donate_argnums=(3,) if donate else ())
+            lowered = jf.lower(*args)
+            n_tok = sh["batch"]
+            mfl = RL.model_flops(cfg, shape_name, n_tok, train=False)
+
+        compiled = lowered.compile()
+        text = compiled.as_text()     # post-SPMD: explicit collective ops
+
+    # scan correction: XLA cost analysis counts while bodies once
+    factor = RL.scan_factor(
+        cfg, extra_repeats=(cfg.n_enc_layers if cfg.enc_dec
+                            and sh["kind"] != "decode" else 0))
+    if not cfg.scan_layers:
+        factor = 1.0
+    tp = mesh.shape.get("model", 1)
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "compile_s": round(time.time() - t0, 1),
+        "memory": _mem_summary(compiled),
+        "collectives_raw": RL.collective_bytes(text),
+        "collectives": RL.collective_bytes(text, loop_factor=factor),
+        "scan_factor": factor,
+        "model_flops": mfl,
+    }
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "bytes accessed", "transcendentals",
+                             "optimal_seconds")}
+        cf, cb = RL.corrected_costs(
+            cfg, sh["kind"], rec["cost"].get("flops", 0.0),
+            rec["cost"].get("bytes accessed", 0.0),
+            sh["batch"], sh["seq"], chips, factor, tp)
+        rec["cost_corrected"] = {"flops": cf, "bytes accessed": cb}
+    except Exception as e:
+        rec["cost"] = {"error": str(e)}
+    return compiled, text, rec
+
+
+def lower_bcpnn(scale: str = "rodent", *, multi_pod: bool,
+                eager: bool = False, donate: bool = True,
+                poisson_route: bool = True, pack: bool = True):
+    """Lower + compile the BCPNN distributed tick on the production mesh."""
+    import importlib
+    import jax.numpy as jnp
+    from repro.core import distributed as DD
+    from repro.core import hcu as H
+    from repro.core import network as N
+
+    mod = importlib.import_module(f"repro.configs.bcpnn_{scale}")
+    p = mod.CONFIG
+    n_hcu = mod.DRYRUN_N_HCU
+    mesh = make_bcpnn_mesh(512 if multi_pod else 256, multi_pod=multi_pod)
+    mesh_name = ("pod2x256" if multi_pod else "pod256") + f"-{scale}"
+    ndev = mesh.size
+    h_local = n_hcu // ndev
+    rc = DD.default_route_config(p, h_local,
+                                 n_dev=ndev if poisson_route else None)
+    rc = rc._replace(pack=pack)
+    axis = ("pod", "hcu") if multi_pod else ("hcu",)
+    tick = DD.make_dist_tick(mesh, p, rc, axis=axis, eager=eager,
+                             donate=donate)
+
+    # abstract state/conn/ext (ShapeDtypeStruct only — no allocation)
+    def make_abstract():
+        st = jax.eval_shape(lambda k: N.init_network(p, k, n_hcu=n_hcu),
+                            jax.random.PRNGKey(0))
+        cn = jax.eval_shape(
+            lambda k: N.make_connectivity(p, k, n_hcu=n_hcu),
+            jax.random.PRNGKey(1))
+        ext = jax.ShapeDtypeStruct((n_hcu, 8), jnp.int32)
+        return st, cn, ext
+
+    st, cn, ext = make_abstract()
+    t0 = time.time()
+    with mesh:
+        lowered = tick.lower(st, cn, ext)
+        compiled = lowered.compile()
+        text = compiled.as_text()     # post-SPMD: explicit collective ops
+    # synaptic traffic per tick (lazy model): rows touched * row bytes * 2
+    cells = (p.in_rate * p.cols + p.out_rate * p.rows) * n_hcu
+    lazy_bytes = cells * 20 * 2
+    rec = {
+        "arch": f"bcpnn-{scale}", "shape": "tick_1ms", "mesh": mesh_name,
+        "chips": ndev, "n_hcu": n_hcu, "h_local": h_local,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": _mem_summary(compiled),
+        "collectives": RL.collective_bytes(text),
+        "model_flops": cells * 60.0,            # FLOPS_PER_CELL
+        "lazy_bytes_per_tick": lazy_bytes,
+    }
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "bytes accessed", "transcendentals")}
+    except Exception as e:
+        rec["cost"] = {"error": str(e)}
+    return compiled, text, rec
+
+
+def run_cell(arch_id, shape_name, multi_pod, out_dir, skip_existing=True,
+             **kw):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch_id}__{shape_name}__{mesh_name}"
+    path = os.path.join(out_dir, tag + ".json")
+    if skip_existing and os.path.exists(path):
+        print(f"[skip] {tag}")
+        return None
+    if not applicable(arch_id, shape_name):
+        rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+               "skipped": "full-attention arch: long_500k inapplicable "
+                          "(DESIGN.md §Arch-applicability)"}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[n/a ] {tag}")
+        return rec
+    print(f"[lower] {tag} ...", flush=True)
+    try:
+        compiled, text, rec = lower_cell(arch_id, shape_name,
+                                         multi_pod=multi_pod, **kw)
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[ok  ] {tag} compile={rec['compile_s']}s "
+              f"flops/chip={rec['cost'].get('flops', 0):.3e} "
+              f"coll={rec['collectives']['total']:.3e}B", flush=True)
+        del compiled, text
+        return rec
+    except Exception as e:
+        traceback.print_exc()
+        rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+               "error": f"{type(e).__name__}: {e}"}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[FAIL] {tag}: {e}", flush=True)
+        return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--bcpnn", action="store_true")
+    ap.add_argument("--eager-bcpnn", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-skip", action="store_true")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, "dry-run needs the 512-device env"
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.bcpnn:
+        for scale in ("rodent", "human"):
+            for mp in (False, True):
+                tag = f"bcpnn-{scale}__tick__{'pod2x256' if mp else 'pod256'}"
+                path = os.path.join(args.out, tag + ".json")
+                if not args.no_skip and os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[lower] {tag}", flush=True)
+                try:
+                    _, _, rec = lower_bcpnn(scale, multi_pod=mp,
+                                            eager=args.eager_bcpnn)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"[ok  ] {tag} compile={rec['compile_s']}s", flush=True)
+                except Exception as e:
+                    traceback.print_exc()
+                    with open(path, "w") as f:
+                        json.dump({"error": str(e)}, f)
+        return
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    pods = []
+    if not args.multi_pod:
+        pods.append(False)
+    if not args.single_pod:
+        pods.append(True)
+    for mp in pods:
+        for a in archs:
+            for s in shapes:
+                run_cell(a, s, mp, args.out, skip_existing=not args.no_skip)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run's
+xla_force_host_platform_device_count dance.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()[:n]        # single-pod uses the first 256 of 512
+    return jax.make_mesh(shape, axes, devices=devs,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_bcpnn_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
+    """BCPNN shards whole HCUs (embarrassingly parallel, paper §II.B): a flat
+    'hcu' axis over every chip; multi-pod adds an explicit 'pod' axis so the
+    spike all_to_all hierarchy (intra/inter pod) is visible to the compiler."""
+    n = n_devices or len(jax.devices())
+    devs = jax.devices()[:n]
+    if multi_pod:
+        return jax.make_mesh((2, n // 2), ("pod", "hcu"), devices=devs,
+                             axis_types=(AxisType.Auto,) * 2)
+    return jax.make_mesh((n,), ("hcu",), devices=devs,
+                         axis_types=(AxisType.Auto,))
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

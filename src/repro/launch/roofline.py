@@ -1,0 +1,273 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds-per-step at TPU v5e-class
+constants:
+
+  compute    = HLO_FLOPs            / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes_accessed   / (chips * 819e9  B/s HBM)
+  collective = collective_bytes     / (chips * 2 * 50e9 B/s ICI links)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(). Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (cross-replica traffic; all-reduce counted ~2x operand
+size for the reduce+broadcast phases of a ring).
+
+Notes on interpretation (see EXPERIMENTS.md):
+  * cost_analysis on the SPMD module reports PER-PARTITION flops/bytes in
+    recent jax/XLA; we detect & normalize to per-chip via sanity comparison
+    against the analytic MODEL_FLOPS.
+  * MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference fwd), N = (active)
+    params, D = tokens processed — the "useful work" yardstick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip (v5e-class)
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+ICI_LINKS = 2                # usable links per chip for a 2D-torus transfer
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, loop_factor: float = 1.0) -> dict:
+    """Sum result-shape bytes per collective kind from optimized HLO.
+
+    XLA's cost/HLO view counts a while-loop (lax.scan) body ONCE, so a
+    collective inside the scanned layer stack executes `repeats` times but
+    appears once in the text. We therefore classify each collective as
+    inside/outside a while-body (via the HLO call graph) and scale the
+    inside ones by `loop_factor` (the stack's weighted trip count — see
+    scan_factor()). Validated against unrolled compiles in EXPERIMENTS.md.
+    """
+    out = {k: 0.0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    count = dict.fromkeys(out, 0)
+    in_loop = _while_body_computations(hlo_text) if loop_factor != 1.0 else set()
+    for comp_name, body in _computations(hlo_text):
+        factor = loop_factor if comp_name in in_loop else 1.0
+        for m in _COLL_RE.finditer(body):
+            shape_str, kind = m.group(1), m.group(2)
+            b = _shape_bytes(shape_str)
+            b = 2 * b if kind == "all-reduce" else b   # ring: ~2x payload
+            out[kind] += b * factor
+            count[kind] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "counts")
+    out["counts"] = count
+    return out
+
+
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+
+
+def _computations(hlo_text: str):
+    """Split optimized HLO text into (computation_name, body_text) pairs.
+
+    Line-based: computation headers are lines ending in '{' that contain
+    '->' (param lists contain nested parens, so regex-free splitting)."""
+    comps = []
+    cur_name, cur_lines = None, []
+    for ln in hlo_text.splitlines():
+        s = ln.rstrip()
+        if s.endswith("{") and "->" in s and \
+                (s.startswith("%") or s.startswith("ENTRY")):
+            if cur_name is not None:
+                comps.append((cur_name, "\n".join(cur_lines)))
+            tok = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+            cur_name = tok.lstrip("%")
+            cur_lines = [s]
+        else:
+            cur_lines.append(ln)
+    if cur_name is not None:
+        comps.append((cur_name, "\n".join(cur_lines)))
+    return comps
+
+
+def _while_body_computations(hlo_text: str) -> set:
+    """Names of computations reachable from any while-loop body."""
+    comps = dict(_computations(hlo_text))
+    calls = {name: set(_CALL_RE.findall(body))
+             for name, body in comps.items()}
+    roots = set()
+    for body in comps.values():
+        roots.update(_WHILE_BODY_RE.findall(body))
+    seen = set()
+    stack = list(roots)
+    while stack:
+        n = stack.pop()
+        if n in seen:
+            continue
+        seen.add(n)
+        stack.extend(calls.get(n, ()))
+    return seen
+
+
+def scan_factor(cfg, extra_repeats: int = 0) -> float:
+    """Weighted trip count of the scanned layer stack.
+
+    F = sum_seg(repeats * blocks) / sum_seg(blocks): multiplying the
+    once-counted scan bodies by F reconstructs total block executions.
+    extra_repeats adds non-stack scans (e.g. the whisper encoder).
+    """
+    from repro.models.transformer import build_stack_spec
+    segs = build_stack_spec(cfg)
+    blocks = sum(len(pat) for pat, _ in segs)
+    execs = sum(len(pat) * rep for pat, rep in segs)
+    if extra_repeats:
+        blocks += 1
+        execs += extra_repeats
+    return execs / max(blocks, 1)
+
+
+def outside_loop_costs(cfg, shape_kind: str, batch: int, seq: int,
+                       chips: int, tp: int = 16):
+    """Analytic per-chip flops/bytes of the NON-scanned part of a step
+    (embedding + LM head + loss + optimizer), used to keep the scan
+    correction from inflating out-of-loop work.
+
+    train : head fwd+bwd ~ 6*B*S*D*V flops; optimizer ~ 12N flops,
+            ~28N bytes f32 traffic (p,mu,nu r/w + grads r)
+    serve : head fwd 2*tokens*D*V; no optimizer
+    Per-chip: matmuls divide by all chips (fully sharded); optimizer traffic
+    divides by the sharding of each buffer (params/grads: TP; moments: ZeRO
+    over all chips).
+    """
+    D, V = cfg.d_model, cfg.vocab
+    N = cfg.param_count()
+    if shape_kind == "train":
+        tokens = batch * seq
+        flops = 6.0 * tokens * D * V / chips + 12.0 * N / chips
+        byts = (12.0 * N / tp           # params+grads r/w, TP-sharded f32
+                + 16.0 * N / chips)     # mu/nu r/w, ZeRO over all chips
+        flops += 2.0 * tokens * D / chips        # embed gather
+    else:
+        # prefill emits logits ONLY for the last position; decode for the
+        # single new token — the head is B tokens either way
+        flops = 2.0 * batch * D * V / chips
+        byts = 4.0 * V * D / tp                   # head weights read
+    return flops, byts
+
+
+def corrected_costs(cfg, shape_kind: str, raw_flops: float, raw_bytes: float,
+                    batch: int, seq: int, chips: int, factor: float,
+                    tp: int = 16):
+    """Scan-corrected per-chip (flops, bytes):
+         corrected = outside + (raw - outside) * factor
+    clamped so a mis-estimated outside part can't push the in-loop share
+    negative. Validated against unrolled compiles (EXPERIMENTS.md §Roofline).
+    """
+    of, ob = outside_loop_costs(cfg, shape_kind, batch, seq, chips, tp)
+    of = min(of, raw_flops)
+    ob = min(ob, raw_bytes)
+    return (of + (raw_flops - of) * factor,
+            ob + (raw_bytes - ob) * factor)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per chip
+    hlo_bytes: float            # per chip
+    coll_bytes: float           # per chip
+    model_flops: float          # useful-work flops per step (global)
+    coll_detail: dict | None = None
+
+    @property
+    def t_compute(self):
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / (ICI_LINKS * ICI_BW)
+
+    @property
+    def bottleneck(self):
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_step(self):
+        # perfectly-overlapped lower bound: max of the three terms
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self):
+        """MODEL_FLOPS / (global HLO flops) — remat/redundancy waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_at_roofline(self):
+        """Model-flop utilization if the step ran exactly at t_step."""
+        return self.model_flops / (self.t_step * self.chips * PEAK_FLOPS) \
+            if self.t_step else 0.0
+
+    def row(self):
+        return (f"{self.arch:28s} {self.shape:12s} {self.mesh:10s} "
+                f"{self.t_compute*1e3:9.3f} {self.t_memory*1e3:9.3f} "
+                f"{self.t_collective*1e3:9.3f}  {self.bottleneck:10s} "
+                f"{self.useful_fraction:7.3f} {self.mfu_at_roofline:6.3f}")
+
+    HEADER = (f"{'arch':28s} {'shape':12s} {'mesh':10s} "
+              f"{'t_comp_ms':>9s} {'t_mem_ms':>9s} {'t_coll_ms':>9s}  "
+              f"{'bottleneck':10s} {'useful':>7s} {'MFU@rl':>6s}")
+
+
+def model_flops(cfg, shape_name: str, n_tokens: int, train: bool) -> float:
+    """6*N*D (train) / 2*N*D (inference) with MoE active params."""
+    n = cfg.active_param_count()
+    mult = 6.0 if train else 2.0
+    return mult * n * n_tokens
+
+
+def analyze(compiled, lowered_text: str, *, arch: str, shape: str,
+            mesh_name: str, chips: int, model_fl: float,
+            per_partition: bool = True) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(lowered_text)
+    if not per_partition:
+        flops /= chips
+        byts /= chips
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=flops, hlo_bytes=byts,
+                    coll_bytes=coll["total"] / chips, model_flops=model_fl,
+                    coll_detail=coll)

@@ -1,0 +1,92 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Four cells per LM architecture (40 total):
+  train_4k     seq 4096,   global batch 256   -> train_step
+  prefill_32k  seq 32768,  global batch 32    -> serve prefill
+  decode_32k   seq 32768,  global batch 128   -> serve decode (1 new token)
+  long_500k    seq 524288, global batch 1     -> long-context decode;
+               sub-quadratic archs only (xlstm, zamba2) — full-attention
+               archs skip with a note (DESIGN.md §Arch-applicability).
+
+No real allocation ever happens here: everything is jax.ShapeDtypeStruct /
+jax.eval_shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+from repro.models.transformer import Model
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1, long=True),
+}
+
+# sub-quadratic archs that run the long_500k cell
+LONG_OK = {"xlstm-125m", "zamba2-7b"}
+
+
+def applicable(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in LONG_OK
+    return True
+
+
+def _modality_specs(cfg: ArchConfig, batch: int):
+    out = {}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.vision_dim), jnp.float32)
+    if cfg.enc_dec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_enc_frames, cfg.vision_dim), jnp.float32)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """ShapeDtypeStruct pytrees for one (arch x shape) cell.
+
+    Returns a dict describing what the corresponding step function consumes:
+      train  : {batch}
+      prefill: {batch, caches}
+      decode : {token, pos, caches[, memory, mem_pos]}
+    """
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    model = Model(cfg)
+    if sh["kind"] == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch.update(_modality_specs(cfg, B))
+        return {"batch": batch}
+    if sh["kind"] == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch.update(_modality_specs(cfg, B))
+        caches = jax.eval_shape(lambda: model.init_cache(B, S))
+        return {"batch": batch, "caches": caches}
+    # decode: one new token against a seq_len-deep cache
+    caches = jax.eval_shape(lambda: model.init_cache(B, S))
+    out = {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+           "pos": jax.ShapeDtypeStruct((), jnp.int32),
+           "caches": caches}
+    if cfg.family == "vlm":
+        out["memory"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), cfg.cdtype)
+        out["mem_pos"] = jax.ShapeDtypeStruct((cfg.n_patches,), jnp.int32)
+    if cfg.enc_dec:
+        out["memory"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_enc_frames, cfg.d_model), cfg.cdtype)
+        out["mem_pos"] = jax.ShapeDtypeStruct((cfg.n_enc_frames,), jnp.int32)
+    return out
+
+
+def params_specs_abstract(cfg: ArchConfig):
+    """Abstract parameter shapes (no allocation)."""
+    model = Model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

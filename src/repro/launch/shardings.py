@@ -1,0 +1,202 @@
+"""Parameter / batch / cache PartitionSpecs for the production meshes.
+
+Rules (baseline — the §Perf hillclimb iterates on these):
+  params : TP over "model" — attention qkv/o projections, MLP in/out, vocab;
+           EP over "model" for MoE expert stacks; tiny/odd tensors replicate.
+           DP axes never shard params (pure replication) — optimizer state
+           can additionally be ZeRO-sharded over "data" (opt_specs(zero=True)).
+  batch  : tokens over ("pod","data").
+  cache  : decode KV caches shard batch over ("pod","data") and kv-heads over
+           "model" when divisible; long-context (batch=1) shards the SEQUENCE
+           dim over ("pod","data") instead.
+
+Every candidate axis is divisibility-checked against the mesh and dropped to
+replication when it doesn't divide — specs are always valid for the mesh.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.base import ArchConfig
+
+# logical mesh axis groups
+DP = ("pod", "data")
+TP = ("model",)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _present(mesh: Mesh, axes):
+    axes = tuple(a for a in (axes if isinstance(axes, tuple) else (axes,))
+                 if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _checked(mesh: Mesh, dim: int, axes):
+    """Axes if they divide `dim`, else None (replicate)."""
+    a = _present(mesh, axes)
+    if a is None or dim % _axis_size(mesh, axes) != 0:
+        return None
+    return a
+
+
+def param_spec(path: str, leaf, cfg: ArchConfig, mesh: Mesh) -> P:
+    """Spec for one parameter, keyed by its tree path (joined key names)."""
+    nd = leaf.ndim
+    name = path.split("/")[-1]
+
+    def at(pos, dim_axes):  # spec with mesh axes at dim `pos` (may be None)
+        spec = [None] * nd
+        spec[pos] = _checked(mesh, leaf.shape[pos], dim_axes)
+        return P(*spec)
+
+    if name == "embed":
+        return at(0, TP)                       # vocab-sharded embedding
+    if name in ("lm_head", "pos_embed"):
+        return at(nd - 1, TP)
+    if "ffn" in path and name in ("wi", "wg", "wo") and nd >= 3 \
+            and cfg.n_experts and "shared" not in path:
+        return at(nd - 3, TP)                  # EP: expert dim over model
+    if name in ("wq", "wk", "wv", "wi", "wg", "up", "in_proj", "w",
+                "router", "vision_proj", "frame_proj"):
+        return at(nd - 1, TP)                  # column-parallel
+    if name in ("wo", "down", "out_proj"):
+        return at(nd - 2, TP)                  # row-parallel
+    if name in ("bq", "bk", "bv", "norm_w", "b"):
+        return at(nd - 1, TP)
+    return P()                                 # norms, gates, scalars, conv
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def param_specs(params, cfg: ArchConfig, mesh: Mesh, *,
+                fsdp_threshold_bytes: int | None = None):
+    """Pytree of PartitionSpec congruent with params.
+
+    With fsdp_threshold_bytes set, parameters larger than the threshold are
+    ADDITIONALLY sharded over the "data" axes on their largest unsharded dim
+    (FSDP / ZeRO-3): GSPMD all-gathers them at use and reduce-scatters
+    gradients. This is what makes the 235B/400B MoE archs fit HBM
+    (EXPERIMENTS.md §Perf).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for kp, leaf in flat:
+        s = param_spec(_path_str(kp), leaf, cfg, mesh)
+        if fsdp_threshold_bytes is not None and leaf.ndim >= 1:
+            size = leaf.size if hasattr(leaf, "size") else 0
+            if size * 4 >= fsdp_threshold_bytes:
+                entries = list(s) + [None] * (leaf.ndim - len(s))
+                for i in sorted(range(leaf.ndim),
+                                key=lambda i: -leaf.shape[i]):
+                    if entries[i] is None:
+                        a = _checked(mesh, leaf.shape[i], DP)
+                        if a is not None:
+                            entries[i] = a
+                            break
+                s = P(*entries)
+        specs.append(s)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(params_specs, zero: bool = False, mesh: Mesh | None = None,
+              params=None):
+    """Optimizer-state specs: mirror params; with zero=True, additionally
+    shard replicated moments over "data" on their largest divisible dim
+    (ZeRO-2-style)."""
+    from repro.train.optimizer import AdamWState
+
+    def zero_extend(spec: P, leaf):
+        if not zero or mesh is None or leaf.ndim == 0:
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        used = {a for e in entries if e is not None
+                for a in (e if isinstance(e, tuple) else (e,))}
+        if "data" in used:          # already FSDP-sharded over data
+            return P(*entries)
+        for i in sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i]):
+            if entries[i] is None:
+                a = _checked(mesh, leaf.shape[i], ("data",))
+                if a is not None:
+                    entries[i] = a
+                    break
+        return P(*entries)
+
+    mu = (jax.tree.map(zero_extend, params_specs, params)
+          if zero else params_specs)
+    return AdamWState(step=P(), mu=mu, nu=mu)
+
+
+def batch_specs(batch_tree, mesh: Mesh):
+    """Shard the leading (batch) dim over DP when divisible."""
+    def one(leaf):
+        return P(_checked(mesh, leaf.shape[0], DP),
+                 *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_specs(cache_tree, cfg: ArchConfig, mesh: Mesh, *,
+                seq_shard: bool = False):
+    """Decode-state shardings.
+
+    KV caches (leaf paths '.k'/'.v', shape (layers, B, S, Kv, hd)):
+      batch over DP (or, with seq_shard for batch==1 long-context, the
+      SEQUENCE dim over DP), kv-heads over TP, falling back to head_dim when
+      the kv count doesn't divide the model axis.
+    Recurrent states (mamba (L,B,H,P,N) / mlstm (L,B,H,dk,dv)...):
+      batch over DP, heads over TP.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+
+    def one(path, leaf):
+        nd = leaf.ndim
+        spec = [None] * nd
+        name = ""
+        for kk in reversed(path):
+            if hasattr(kk, "name"):
+                name = str(kk.name)
+                break
+            if hasattr(kk, "key"):
+                name = str(kk.key)
+                break
+        if name in ("k", "v") and nd == 5:          # stacked KV cache
+            if seq_shard and leaf.shape[1] == 1:
+                spec[2] = _checked(mesh, leaf.shape[2], DP)    # sequence
+            else:
+                spec[1] = _checked(mesh, leaf.shape[1], DP)    # batch
+            spec[3] = _checked(mesh, leaf.shape[3], TP)        # kv heads
+            if spec[3] is None:
+                spec[4] = _checked(mesh, leaf.shape[4], TP)    # head_dim
+        elif nd >= 3:                                # recurrent states
+            spec[1] = _checked(mesh, leaf.shape[1], DP)        # batch
+            spec[2] = _checked(mesh, leaf.shape[2], TP)        # heads
+        return P(*spec)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def shard_params(params, cfg: ArchConfig, mesh: Mesh):
+    specs = param_specs(params, cfg, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        params, specs), specs

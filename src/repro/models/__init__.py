@@ -1,0 +1,7 @@
+"""LM substrate: composable model definitions for the assigned arch pool."""
+from repro.models.base import ArchConfig
+from repro.models.transformer import Model, build_stack_spec
+from repro.models import layers, moe, ssm, sharding
+
+__all__ = ["ArchConfig", "Model", "build_stack_spec", "layers", "moe", "ssm",
+           "sharding"]

@@ -1,0 +1,152 @@
+"""Architecture config schema + parameter init helpers (pure JAX, no flax).
+
+One ArchConfig describes any member of the assigned architecture pool:
+dense / MoE / SSM / hybrid / VLM / audio. Family-specific fields are ignored
+by families that don't use them. Configs are frozen + hashable so they can be
+jit static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+
+    # attention details
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    qkv_bias: bool = False                  # qwen2
+    rope_theta: float = 10_000.0
+    rotary_pct: float = 1.0                 # stablelm partial rotary
+    attn_softcap: Optional[float] = None    # gemma2 50.0
+    final_softcap: Optional[float] = None   # gemma2 30.0
+    sliding_window: Optional[int] = None    # gemma2 local layers
+    local_global_period: int = 0            # gemma2: 2 => alternate local/global
+    query_scale: Optional[float] = None
+    tie_embeddings: bool = False
+    act: str = "silu"                       # silu | gelu
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    n_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_period: int = 1                     # every k-th layer is MoE
+
+    # SSM / hybrid
+    ssm_kind: str = ""                      # mamba2 | xlstm
+    ssm_state: int = 64
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    slstm_period: int = 0                   # xlstm: every k-th block is sLSTM
+    attn_period: int = 0                    # zamba2: shared attn every k ssm layers
+
+    # VLM
+    cross_attn_period: int = 0              # llama3.2-vision: every 5th layer
+    n_patches: int = 1601                   # stub vision tokens
+    vision_dim: int = 1280                  # stub patch embedding dim
+
+    # audio (enc-dec)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    n_enc_frames: int = 1500                # stub conv-frontend output length
+
+    # numerics
+    rms_eps: float = 1e-6
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # substrate behaviour
+    remat: bool = True                      # activation checkpoint per block
+    scan_layers: bool = True
+    attn_impl: str = "dense"                # dense | chunked (flash-style)
+    attn_chunk: int = 1024                  # KV chunk for attn_impl=chunked
+    seq_parallel_residual: bool = False     # shard residual stream seq over TP
+    moe_shard_cap: bool = False             # shard MoE dispatch cap over DP
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        assert self.n_heads % max(self.n_kv, 1) == 0, "GQA group mismatch"
+
+    @property
+    def cdtype(self):
+        return jnp.bfloat16 if self.compute_dtype == "bfloat16" else jnp.float32
+
+    @property
+    def pdtype(self):
+        return jnp.float32 if self.param_dtype == "float32" else jnp.bfloat16
+
+    # ---- parameter counts (roofline MODEL_FLOPS = 6*N*D) -------------------
+    def param_count(self) -> int:
+        """EXACT parameter count from the abstract init tree (eval_shape):
+        zero drift between the count and the implementation."""
+        from repro.models.transformer import count_params  # lazy: no cycle
+        return count_params(self)
+
+    def _param_count_analytic(self) -> int:
+        D, H, Kv, hd = self.d_model, self.n_heads, self.n_kv, self.head_dim
+        attn = D * H * hd + 2 * D * Kv * hd + H * hd * D
+        if self.family in ("ssm", "hybrid") and self.ssm_kind:
+            inner = self.ssm_expand * D
+            ssm = D * inner * 2 + inner * D + inner * (2 * self.ssm_state)
+            mixer = ssm
+        else:
+            mixer = attn
+        if self.n_experts:
+            ff_moe = 3 * D * self.expert_d_ff * self.n_experts \
+                + D * self.n_experts \
+                + 3 * D * self.expert_d_ff * self.n_shared_experts
+            dense_every = self.moe_period
+            n_moe = self.n_layers // dense_every
+            n_dense = self.n_layers - n_moe
+            ff_total = n_moe * ff_moe + n_dense * 3 * D * self.d_ff
+            ff = ff_total / max(self.n_layers, 1)
+        else:
+            ff = 3 * D * self.d_ff
+        per_layer = mixer + ff + 2 * D
+        n_dec = self.n_layers
+        total = n_dec * per_layer + self.vocab * D * (1 if self.tie_embeddings else 2)
+        if self.enc_dec:
+            # encoder layers + decoder cross-attention
+            total += self.n_enc_layers * (attn + 3 * D * self.d_ff + 2 * D)
+            total += n_dec * (attn + D)
+        if self.cross_attn_period:
+            n_x = self.n_layers // self.cross_attn_period
+            total += n_x * (attn + 3 * D * self.d_ff + 2 * D)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: only top_k + shared experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        D = self.d_model
+        full = self.param_count()
+        inactive = (self.n_experts - self.top_k) * 3 * D * self.expert_d_ff
+        n_moe = self.n_layers // self.moe_period
+        return int(full - n_moe * inactive)
+
+
+# ------------------------------ init helpers --------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,254 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention, gated MLP.
+
+All functions are pure; parameters are plain dicts of arrays. Attention
+covers every variant in the assigned pool through arguments:
+  * GQA with arbitrary kv-head count (internlm2/qwen2/gemma2/...)
+  * QKV bias (qwen2)
+  * logit softcapping (gemma2)
+  * sliding-window / local attention (gemma2 alternating layers)
+  * partial rotary (stablelm)
+  * incremental decode with a preallocated KV cache
+Compute runs in cfg.compute_dtype (bf16) with f32 softmax, params in f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, dense_init, split_keys
+from repro.models.sharding import hint
+
+
+def rms_norm(x, w, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def _rope_freqs(positions, dim: int, theta: float, dtype):
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv     # (..., dim/2)
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, positions, theta: float, rotary_pct: float = 1.0):
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    rot = int(hd * rotary_pct) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    cos, sin = _rope_freqs(positions, rot, theta, x.dtype)   # (B,S,rot/2)
+    cos = cos[:, :, None, :] if cos.ndim == 3 else cos[None, :, None, :]
+    sin = sin[:, :, None, :] if sin.ndim == 3 else sin[None, :, None, :]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+def _sdpa_flash(qg, k, v, cfg, scale, sliding_window, kv_len):
+    """Pallas flash-attention path: fold (B,Kv,G) -> BH, broadcast k/v.
+
+    qg: (B,Sq,Kv,G,hd); k,v: (B,Skv,Kv,hd). Interpret mode off-TPU."""
+    import jax as _jax
+    from repro.kernels.flash_attention import flash_attention
+    B, Sq, Kv, G, hd = qg.shape
+    Skv = k.shape[1]
+    qf = qg.transpose(0, 2, 3, 1, 4).reshape(B * Kv * G, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * Kv * G, Skv, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * Kv * G, Skv, hd)
+    out = flash_attention(
+        qf, kf, vf, scale=scale, causal=True, window=sliding_window,
+        softcap=cfg.attn_softcap, kv_len=kv_len,
+        interpret=_jax.default_backend() != "tpu")
+    return out.reshape(B, Kv, G, Sq, hd).transpose(0, 3, 1, 2, 4)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, max_len, Kv, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray   # () int32 — valid prefix length
+
+
+def init_attn(key, cfg: ArchConfig, d_model=None):
+    D = d_model or cfg.d_model
+    H, Kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), cfg.pdtype),
+        "wk": dense_init(ks[1], (D, Kv * hd), cfg.pdtype),
+        "wv": dense_init(ks[2], (D, Kv * hd), cfg.pdtype),
+        "wo": dense_init(ks[3], (H * hd, D), cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((Kv * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((Kv * hd,), cfg.pdtype)
+    return p
+
+
+def _sdpa(q, k, v, mask, softcap, scale):
+    """q: (B,Sq,Kv,G,hd)  k,v: (B,Skv,Kv,hd)  mask: (B|1, Sq, Skv) bool."""
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, mask, softcap, scale, chunk: int):
+    """Flash-style online-softmax attention over KV chunks.
+
+    Identical math to _sdpa but never materializes the (Sq, Skv) logits in
+    HBM: a lax.scan walks KV in `chunk`-sized blocks carrying the running
+    (max, denominator, weighted accumulator). Memory drops from O(Sq*Skv)
+    to O(Sq*chunk) — the hillclimb lever for the memory-bound attention
+    cells (EXPERIMENTS.md §Perf). Shapes as in _sdpa.
+    """
+    B, Sq, Kv, G, hd = q.shape
+    Skv = k.shape[1]
+    nc = -(-Skv // chunk)
+    pad = nc * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, 0), (0, pad)))
+    kc = k.reshape(B, nc, chunk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    mc = mask.reshape(mask.shape[0], Sq, nc, chunk).transpose(2, 0, 1, 3)
+
+    def body(carry, xs):
+        m, l, acc = carry                     # (B,Kv,G,Sq), ..., (..., hd)
+        kb, vb, mb = xs
+        logits = jnp.einsum("bqkgh,bskh->bkgqs", q, kb,
+                            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        logits = jnp.where(mb[:, None, None, :, :], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] \
+            + jnp.einsum("bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, Kv, G, Sq), -jnp.inf, jnp.float32),
+            jnp.zeros((B, Kv, G, Sq), jnp.float32),
+            jnp.zeros((B, Kv, G, Sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (kc, vc, mc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(v.dtype)   # (B,Sq,Kv,G,hd)
+
+
+def attend(params, x, cfg: ArchConfig, *, positions, kv=None, kv_positions=None,
+           causal=True, sliding_window=None, cache: Optional[KVCache] = None,
+           update_cache: bool = False):
+    """Unified attention entry point.
+
+    Self-attention: kv=None. Cross-attention: kv=(memory, memory_positions),
+    causal=False. With `cache` and Sq==1 this is an incremental decode step;
+    with `cache` and update_cache=True it is a prefill that fills the cache.
+    Returns (out (B,Sq,D), new_cache).
+    """
+    B, Sq, D = x.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    G = H // Kv
+    cd = cfg.cdtype
+
+    q = (x @ params["wq"].astype(cd))
+    src = x if kv is None else kv
+    k = (src @ params["wk"].astype(cd))
+    v = (src @ params["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cd)
+        k = k + params["bk"].astype(cd)
+        v = v + params["bv"].astype(cd)
+    q = q.reshape(B, Sq, H, hd)
+    k = k.reshape(B, src.shape[1], Kv, hd)
+    v = v.reshape(B, src.shape[1], Kv, hd)
+
+    if kv is None:  # rope only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+        k = apply_rope(k, kv_positions if kv_positions is not None else positions,
+                       cfg.rope_theta, cfg.rotary_pct)
+    # TP shards heads when they divide the model axis; otherwise fall back
+    # to sequence-parallel attention (queries sharded over "model") instead
+    # of silently replicating the O(S^2) work on every TP rank
+    from repro.models.sharding import mapped_size
+    tp = mapped_size("heads")
+    if tp > 1 and H % tp != 0 and Sq > 1:
+        q = hint(q, "batch", "seq_mp", None, None)
+    else:
+        q = hint(q, "batch", None, "heads", None)
+        k = hint(k, "batch", None, "heads", None)
+
+    if cache is not None and kv is None:
+        # decode (Sq==1) appends at cache.length; prefill writes the prefix
+        nk = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+        nv = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        cache = KVCache(nk, nv, cache.length + Sq)
+        k, v = cache.k, cache.v
+
+    Skv = k.shape[1]
+    q_pos = positions if positions.ndim == 2 else positions[None, :]
+    if cache is not None and kv is None:
+        kv_pos = jnp.arange(Skv)[None, :]
+        valid = kv_pos < cache.length
+    else:
+        kv_pos = (kv_positions if kv_positions is not None
+                  else jnp.arange(Skv))[None, :]
+        valid = jnp.ones((1, Skv), bool)
+    if causal:
+        mask = (q_pos[:, :, None] >= kv_pos[:, None, :]) & valid[:, None, :]
+    else:
+        mask = jnp.broadcast_to(valid[:, None, :], (valid.shape[0], Sq, Skv))
+    if sliding_window:
+        mask = mask & (q_pos[:, :, None] - kv_pos[:, None, :] < sliding_window)
+
+    scale = cfg.query_scale if cfg.query_scale else hd ** -0.5
+    qg = q.reshape(B, Sq, Kv, G, hd)
+    use_flash = (cfg.attn_impl == "pallas_flash" and Sq > 1 and kv is None
+                 and causal and Sq % 128 == 0 and Skv % 128 == 0)
+    if use_flash:
+        out = _sdpa_flash(qg, k, v, cfg, scale, sliding_window,
+                          cache.length if cache is not None else None)
+    elif cfg.attn_impl in ("chunked", "pallas_flash") and Sq > 1 \
+            and Skv > cfg.attn_chunk:
+        out = _sdpa_chunked(qg, k, v, mask, cfg.attn_softcap, scale,
+                            cfg.attn_chunk)
+    else:
+        out = _sdpa(qg, k, v, mask, cfg.attn_softcap, scale)
+    out = out.reshape(B, Sq, H * hd) @ params["wo"].astype(cd)
+    return hint(out, "batch", None, "model_d"), cache
+
+
+def init_mlp(key, cfg: ArchConfig, d_ff=None, d_model=None):
+    D = d_model or cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = split_keys(key, 3)
+    return {
+        "wi": dense_init(ks[0], (D, F), cfg.pdtype),
+        "wg": dense_init(ks[1], (D, F), cfg.pdtype),
+        "wo": dense_init(ks[2], (F, D), cfg.pdtype),
+    }
+
+
+def mlp(params, x, cfg: ArchConfig):
+    cd = cfg.cdtype
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(x @ params["wg"].astype(cd)) * (x @ params["wi"].astype(cd))
+    h = hint(h, "batch", None, "model_d")
+    return h @ params["wo"].astype(cd)

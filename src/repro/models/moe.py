@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch (EP-shardable).
+
+Dispatch is the same fixed-capacity rank-allocation idiom the BCPNN spike
+queues use (sort by destination, rank within group, drop past capacity):
+tokens are routed to expert buffers of shape (E, C, D), experts run as one
+batched einsum (MXU-friendly), and results are combined with router weights.
+Experts shard over the "expert" logical axis (-> mesh "model"); with 128
+experts on a 16-way model axis each device owns 8 experts.
+
+Router runs in f32. Returns (out, aux) where aux carries the switch-style
+load-balance loss and the dropped-token fraction (observability mirrors the
+BCPNN drop counters).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, dense_init, split_keys
+from repro.models.sharding import hint
+
+
+def _rank_within_sorted_key(keys, order):
+    sorted_keys = keys[order]
+    idx = jnp.arange(keys.shape[0])
+    is_first = jnp.concatenate([jnp.array([True]), sorted_keys[1:] != sorted_keys[:-1]])
+    first_pos = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(is_first, idx, 0))
+    rank_sorted = idx - first_pos
+    return jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+
+def init_moe(key, cfg: ArchConfig):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.expert_d_ff
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32, scale=0.02),
+        "wi": dense_init(ks[1], (E, D, F), cfg.pdtype),
+        "wg": dense_init(ks[2], (E, D, F), cfg.pdtype),
+        "wo": dense_init(ks[3], (E, F, D), cfg.pdtype),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.expert_d_ff * cfg.n_shared_experts
+        kss = split_keys(ks[4], 3)
+        p["shared"] = {
+            "wi": dense_init(kss[0], (D, Fs), cfg.pdtype),
+            "wg": dense_init(kss[1], (D, Fs), cfg.pdtype),
+            "wo": dense_init(kss[2], (Fs, D), cfg.pdtype),
+        }
+    return p
+
+
+def moe_ffn(params, x, cfg: ArchConfig):
+    """x: (B, S, D) -> (out (B,S,D), aux dict)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    cd = cfg.cdtype
+    xt = x.reshape(T, D)
+
+    # ---- routing (f32) -----------------------------------------------------
+    logits = xt.astype(jnp.float32) @ params["router"]       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                   # (T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- capacity dispatch (sort + rank-within-expert) ---------------------
+    M = T * K
+    flat_e = top_e.reshape(M)
+    cap = int(max(8, round(T * K / E * cfg.moe_capacity_factor)))
+    order = jnp.argsort(flat_e)
+    rank = _rank_within_sorted_key(flat_e, order)
+    ok = rank < cap
+    slot = jnp.where(ok, flat_e * cap + rank, E * cap)       # OOB -> dropped
+    tok = jnp.arange(M) // K
+
+    buf = jnp.zeros((E * cap, D), cd).at[slot].set(
+        xt.astype(cd)[tok], mode="drop")
+    # cap over DP turns the token->expert reshard into an all-to-all-like
+    # exchange instead of a data-axis all-reduce of replicated buffers
+    cap_ax = "batch" if cfg.moe_shard_cap else None
+    buf = hint(buf.reshape(E, cap, D), "expert", cap_ax, None)
+
+    # ---- expert computation (batched over experts) -------------------------
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", buf, params["wg"].astype(cd))) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["wi"].astype(cd))
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(cd))
+    out_e = hint(out_e, "expert", cap_ax, None).reshape(E * cap, D)
+
+    # ---- combine ------------------------------------------------------------
+    gathered = out_e[jnp.minimum(slot, E * cap - 1)]          # (M, D)
+    w = jnp.where(ok, top_w.reshape(M), 0.0).astype(cd)
+    out = (gathered * w[:, None]).reshape(T, K, D).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        hs = act(xt.astype(cd) @ sp["wg"].astype(cd)) * (xt.astype(cd) @ sp["wi"].astype(cd))
+        out = out + hs @ sp["wo"].astype(cd)
+
+    # switch-style load-balance loss + drop observability
+    me = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = {
+        "lb_loss": E * jnp.sum(me * ce),
+        "drop_frac": 1.0 - jnp.mean(ok.astype(jnp.float32)),
+    }
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,103 @@
+"""Logical sharding hints, decoupled from any concrete mesh.
+
+Models annotate activations with LOGICAL axes ("batch", "seq", "model_d",
+"heads", "vocab", "expert"); the launch layer maps logical axes onto mesh
+axes ("pod", "data", "model") and activates the mapping via `use_rules`.
+Outside a mesh context (CPU smoke tests) hints are identity functions, so
+the same model code runs anywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+# logical axis -> mesh axes mapping used by the production launchers
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),     # DP: batch over pod x data
+    "seq": None,                  # sequence kept local by default
+    "seq_shard": ("data",),       # long-context: sequence over data
+    "seq_mp": ("model",),         # SP fallback: sequence over model when the
+                                  # head count doesn't divide the TP degree
+    "heads": ("model",),          # TP: attention heads
+    "model_d": ("model",),        # TP: hidden/ffn dim
+    "vocab": ("model",),          # TP: embedding/vocab
+    "expert": ("model",),         # EP: experts over model axis
+    "layers": None,
+}
+
+
+def mapped_size(logical_ax) -> int:
+    """Product of mesh-axis sizes a logical axis maps to (1 if inactive)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return 1
+    rules, axis_names, axis_sizes = ctx
+    m = rules.get(logical_ax)
+    if not m:
+        return 1
+    n = 1
+    for a in m:
+        if a in axis_names:
+            n *= axis_sizes.get(a, 1)
+    return n
+
+
+@contextlib.contextmanager
+def use_rules(rules, mesh):
+    """Activate a logical->mesh mapping (launchers only)."""
+    prev = getattr(_state, "ctx", None)
+    axis_names = set(mesh.axis_names) if mesh is not None else set()
+    axis_sizes = dict(mesh.shape) if mesh is not None else {}
+    _state.ctx = (rules, axis_names, axis_sizes)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def spec(*logical_axes, shape=None) -> P:
+    """Resolve logical axes to a PartitionSpec under the active rules.
+
+    With `shape`, axes that do not evenly divide the corresponding dim are
+    dropped (a 2-kv-head tensor is never forced onto a 16-way axis — that
+    triggers involuntary full rematerialization in the SPMD partitioner)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return P()
+    rules, axis_names, axis_sizes = ctx
+    out = []
+    for i, ax in enumerate(logical_axes):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        m = tuple(a for a in m if a in axis_names)
+        import os
+        if os.environ.get("REPRO_HINT_NO_DIVCHECK"):   # perf-ablation toggle
+            shape = None
+        if shape is not None and m:
+            n = 1
+            for a in m:
+                n *= axis_sizes.get(a, 1)
+            if n == 0 or shape[i] % n != 0:
+                m = ()
+        out.append(m if len(m) > 1 else (m[0] if m else None))
+    return P(*out)
+
+
+def hint(x, *logical_axes):
+    """with_sharding_constraint if a mapping is active; identity otherwise."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, spec(*logical_axes, shape=x.shape))
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,332 @@
+"""State-space and recurrent mixers: Mamba2 (SSD), mLSTM, sLSTM.
+
+These are the sub-quadratic backbones for zamba2-7b (Mamba2 + shared attn)
+and xlstm-125m (mLSTM/sLSTM). Each mixer exposes:
+  init_*(key, cfg)            parameters
+  *_seq(params, x, cfg)       full-sequence form (train / prefill)
+  *_step(params, x_t, state)  single-token recurrent form (decode)
+and the recurrent state doubles as the "KV cache" — O(1) in sequence length,
+which is what makes the long_500k decode cell feasible for these archs.
+
+Mamba2 uses the chunked SSD algorithm (quadratic only within Q=128 chunks,
+linear across chunks) so train-time memory is O(S*Q) not O(S^2) and the
+inter-chunk state hand-off is an associative scan.
+There is an echo of the paper here: "decay + rank-1 spike injection" is
+exactly the BCPNN trace update; the SSD state update h' = a*h + dt*B x^T is
+the same algebraic shape (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, dense_init, split_keys
+from repro.models.sharding import hint
+
+CHUNK = 128
+
+
+# ================================ Mamba2 (SSD) ===============================
+
+def init_mamba2(key, cfg: ArchConfig):
+    D = cfg.d_model
+    inner = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    P = 64                                   # head dim
+    H = inner // P
+    ks = split_keys(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * inner + 2 * N + H), cfg.pdtype),
+        "conv": dense_init(ks[1], (4, inner + 2 * N), cfg.pdtype, scale=0.3),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.zeros((inner,), cfg.pdtype),
+        "out_proj": dense_init(ks[2], (inner, D), cfg.pdtype),
+    }
+
+
+def _mamba_projections(params, x, cfg: ArchConfig):
+    D = cfg.d_model
+    inner = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    P = 64
+    H = inner // P
+    cd = cfg.cdtype
+    zxbcdt = x @ params["in_proj"].astype(cd)
+    z, xc, Bm, Cm, dt = jnp.split(
+        zxbcdt, [inner, 2 * inner, 2 * inner + N, 2 * inner + 2 * N], axis=-1)
+    return z, xc, Bm, Cm, dt, (inner, N, P, H)
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv, window 4. u: (B,S,C), w: (4,C)."""
+    pad = jnp.pad(u, ((0, 0), (3, 0), (0, 0)))
+    return sum(pad[:, i:i + u.shape[1], :] * w[i][None, None, :]
+               for i in range(4))
+
+
+def mamba2_seq(params, x, cfg: ArchConfig, state=None, return_state=False):
+    """Chunked SSD over the full sequence. x: (B,S,D)."""
+    B, S, D = x.shape
+    cd = cfg.cdtype
+    z, xc, Bm, Cm, dt, (inner, N, P, H) = _mamba_projections(params, x, cfg)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv"].astype(cd)))
+    xc, Bm, Cm = jnp.split(conv_out, [inner, inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(params["a_log"])                                      # (H,)
+    dA_log = dt * a[None, None, :]                                     # (B,S,H) <= 0
+
+    Q = min(CHUNK, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+    xh = xc.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    dAc = dA_log.reshape(B, nc, Q, H)
+
+    cum = jnp.cumsum(dAc, axis=2)                                      # (B,nc,Q,H)
+    # intra-chunk (quadratic within Q): L[t,s] = exp(cum_t - cum_s) for s<=t
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]                # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    G = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)                          # (B,nc,Q,Q)
+    W = G[..., None] * L                                               # (B,nc,Q,Q,H)
+    xdt = xh * dtc[..., None]                                          # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", W, xdt)
+
+    # chunk summaries: state contributed by each chunk at its end
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                    # (B,nc,Q,H)
+    S_c = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", decay_to_end * dtc, xh, Bc)
+
+    # inter-chunk scan: h_{c} = exp(sum dA_c) * h_{c-1} + S_c
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                            # (B,nc,H)
+    if state is None:
+        state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def comb(c1, c2):
+        a1, s1 = c1
+        a2, s2 = c2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_scan, s_scan = jax.lax.associative_scan(
+        comb, (chunk_decay.transpose(1, 0, 2),
+               S_c.transpose(1, 0, 2, 3, 4)), axis=0)
+    # prepend incoming state
+    h_before = jnp.concatenate([
+        jnp.broadcast_to(state[None], (1, B, H, P, N)),
+        s_scan[:-1] + a_scan[:-1][..., None, None]
+        * state[None]], axis=0)                                        # (nc,B,H,P,N)
+    h_final = s_scan[-1] + a_scan[-1][..., None, None] * state
+
+    # inter-chunk contribution: y_t += C_t . (decay_from_chunk_start_t * h_prev)
+    decay_from_start = jnp.exp(cum)                                    # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,cbhpn,bcqh->bcqhp",
+                         Cc, h_before, decay_from_start)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + params["d_skip"][None, None, :, None] * xh.reshape(B, S, H, P)
+    y = y.reshape(B, S, inner).astype(cd)
+
+    # gated RMSNorm + out projection
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + params["norm_w"].astype(jnp.float32))).astype(cd)
+    out = y @ params["out_proj"].astype(cd)
+    out = hint(out, "batch", None, "model_d")
+    if return_state:
+        conv_tail = conv_in[:, -3:, :]          # decode conv window hand-off
+        return out, (h_final, conv_tail)
+    return out
+
+
+def mamba2_step(params, x_t, state, cfg: ArchConfig, conv_buf=None):
+    """Single decode step. x_t: (B,1,D); state: (B,H,P,N); conv_buf: (B,3,C)."""
+    B = x_t.shape[0]
+    cd = cfg.cdtype
+    z, xc, Bm, Cm, dt, (inner, N, P, H) = _mamba_projections(params, x_t, cfg)
+    u = jnp.concatenate([xc, Bm, Cm], axis=-1)                         # (B,1,C)
+    if conv_buf is None:
+        conv_buf = jnp.zeros((B, 3, u.shape[-1]), u.dtype)
+    window = jnp.concatenate([conv_buf, u], axis=1)                    # (B,4,C)
+    w = params["conv"].astype(cd)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w))[:, None, :]
+    new_buf = window[:, 1:, :]
+    xc, Bm, Cm = jnp.split(conv_out, [inner, inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    dA = jnp.exp(dt * a[None, :])                                      # (B,H)
+    xh = xc.reshape(B, H, P).astype(jnp.float32)
+    Bv = Bm[:, 0, :].astype(jnp.float32)                               # (B,N)
+    Cv = Cm[:, 0, :].astype(jnp.float32)
+    state = state * dA[:, :, None, None] \
+        + (dt[:, :, None] * xh)[..., None] * Bv[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv) \
+        + params["d_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, inner).astype(cd) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + params["norm_w"].astype(jnp.float32))).astype(cd)
+    return y @ params["out_proj"].astype(cd), state, new_buf
+
+
+# ================================== mLSTM ====================================
+
+def init_mlstm(key, cfg: ArchConfig):
+    D = cfg.d_model
+    inner = cfg.ssm_expand * D
+    assert inner % cfg.n_heads == 0
+    hd = inner // cfg.n_heads
+    ks = split_keys(key, 7)
+    return {
+        "up": dense_init(ks[0], (D, 2 * inner), cfg.pdtype),
+        "wq": dense_init(ks[1], (inner, cfg.n_heads * hd), cfg.pdtype),
+        "wk": dense_init(ks[2], (inner, cfg.n_heads * hd), cfg.pdtype),
+        "wv": dense_init(ks[3], (inner, cfg.n_heads * hd), cfg.pdtype),
+        "wif": dense_init(ks[4], (inner, 2 * cfg.n_heads), jnp.float32, scale=0.02),
+        "if_bias": jnp.zeros((2 * cfg.n_heads,), jnp.float32),
+        "norm_w": jnp.zeros((cfg.n_heads * hd,), cfg.pdtype),
+        "down": dense_init(ks[5], (cfg.n_heads * hd, D), cfg.pdtype),
+    }
+
+
+def mlstm_seq(params, x, cfg: ArchConfig, return_state: bool = False):
+    """Parallel (attention-like) stabilized mLSTM. x: (B,S,D)."""
+    B, S, D = x.shape
+    cd = cfg.cdtype
+    inner = cfg.ssm_expand * D
+    Hh = cfg.n_heads
+    up = x @ params["up"].astype(cd)
+    u, gate = jnp.split(up, 2, axis=-1)
+    q = (u @ params["wq"].astype(cd)).reshape(B, S, Hh, -1)
+    k = (u @ params["wk"].astype(cd)).reshape(B, S, Hh, -1)
+    v = (u @ params["wv"].astype(cd)).reshape(B, S, Hh, -1)
+    hd = q.shape[-1]
+    gates = u.astype(jnp.float32) @ params["wif"] + params["if_bias"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                        # (B,S,H)
+    logf = jax.nn.log_sigmoid(f_pre)
+    cumf = jnp.cumsum(logf, axis=1)                                    # (B,S,H)
+    # a[t,s] = cumf_t - cumf_s + i_s   (s <= t)
+    a = cumf[:, :, None, :] - cumf[:, None, :, :] + i_pre[:, None, :, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    a = jnp.where(mask[None, :, :, None], a, -jnp.inf)
+    m = jnp.max(a, axis=2, keepdims=True)                              # (B,S,1,H)
+    Dmat = jnp.exp(a - m)                                              # (B,S,S,H)
+    qk = jnp.einsum("bqhd,bshd->bqsh", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * hd ** -0.5
+    C = qk * Dmat
+    n = jnp.maximum(jnp.abs(C.sum(axis=2)), jnp.exp(-m[:, :, 0, :]))   # (B,S,H)
+    y = jnp.einsum("bqsh,bshd->bqhd", C, v.astype(jnp.float32)) \
+        / n[..., None]
+    y = y.reshape(B, S, Hh * hd).astype(cd)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + params["norm_w"].astype(jnp.float32))).astype(cd)
+    y = y * jax.nn.silu(gate)
+    out = y @ params["down"].astype(cd)
+    if return_state:
+        # reconstruct the recurrent state at position S-1 from the parallel
+        # quantities: m_T = max_s a[T,s];  C = sum_s e^{a-m} k v^T;  n likewise
+        aT = a[:, -1, :, :]                                   # (B,S,H)
+        mT = m[:, -1, 0, :]                                   # (B,H)
+        wgt = jnp.exp(aT - mT[:, None, :])                    # (B,S,H)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        Cmat = jnp.einsum("bsh,bshk,bshv->bhkv", wgt, kf, vf)
+        nvec = jnp.einsum("bsh,bshk->bhk", wgt, kf)
+        return out, (Cmat, nvec, mT)
+    return out
+
+
+def mlstm_step(params, x_t, state, cfg: ArchConfig):
+    """Recurrent mLSTM step. state = (Cmat (B,H,dk,dv), n (B,H,dk), m (B,H))."""
+    B = x_t.shape[0]
+    cd = cfg.cdtype
+    Hh = cfg.n_heads
+    up = x_t @ params["up"].astype(cd)
+    u, gate = jnp.split(up, 2, axis=-1)
+    q = (u @ params["wq"].astype(cd)).reshape(B, Hh, -1).astype(jnp.float32)
+    k = (u @ params["wk"].astype(cd)).reshape(B, Hh, -1).astype(jnp.float32)
+    v = (u @ params["wv"].astype(cd)).reshape(B, Hh, -1).astype(jnp.float32)
+    hd = q.shape[-1]
+    gates = u[:, 0].astype(jnp.float32) @ params["wif"] + params["if_bias"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                        # (B,H)
+    logf = jax.nn.log_sigmoid(f_pre)
+    Cm, n, m = state
+    m_new = jnp.maximum(logf + m, i_pre)
+    fdec = jnp.exp(logf + m - m_new)
+    iamp = jnp.exp(i_pre - m_new)
+    Cm = Cm * fdec[..., None, None] \
+        + iamp[..., None, None] * k[:, :, :, None] * v[:, :, None, :]
+    n = n * fdec[..., None] + iamp[..., None] * k
+    qs = q * hd ** -0.5
+    num = jnp.einsum("bhk,bhkv->bhv", qs, Cm)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, Hh * hd).astype(cd)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + params["norm_w"].astype(jnp.float32))).astype(cd)
+    y = y * jax.nn.silu(gate)
+    return y @ params["down"].astype(cd), (Cm, n, m_new)
+
+
+# ================================== sLSTM ====================================
+
+def init_slstm(key, cfg: ArchConfig):
+    D = cfg.d_model
+    ks = split_keys(key, 3)
+    return {
+        "w": dense_init(ks[0], (D, 4 * D), cfg.pdtype),
+        "r": dense_init(ks[1], (4, D), cfg.pdtype, scale=0.02),  # diag recurrent
+        "b": jnp.zeros((4 * D,), jnp.float32),
+        "down": dense_init(ks[2], (D, D), cfg.pdtype),
+    }
+
+
+def _slstm_cell(params, u_t, carry):
+    """u_t: (B, 4D) preactivations; carry = (h, c, n, m) each (B, D)."""
+    h, c, n, m = carry
+    D = h.shape[-1]
+    r = params["r"].astype(jnp.float32)
+    rec = h[:, None, :] * r[None, :, :]                                # (B,4,D)
+    pre = u_t.reshape(-1, 4, D).astype(jnp.float32) + rec \
+        + params["b"].reshape(4, D)[None]
+    zi, ii, fi, oi = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    m_new = jnp.maximum(jax.nn.log_sigmoid(fi) + m, ii)
+    i_g = jnp.exp(ii - m_new)
+    f_g = jnp.exp(jax.nn.log_sigmoid(fi) + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(zi)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(oi) * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_seq(params, x, cfg: ArchConfig, return_state: bool = False):
+    B, S, D = x.shape
+    cd = cfg.cdtype
+    u = x @ params["w"].astype(cd)
+
+    def step(carry, u_t):
+        carry = _slstm_cell(params, u_t, carry)
+        return carry, carry[0]
+
+    init = (jnp.zeros((B, D), jnp.float32), jnp.zeros((B, D), jnp.float32),
+            jnp.zeros((B, D), jnp.float32), jnp.full((B, D), -1e30, jnp.float32))
+    final, hs = jax.lax.scan(step, init, u.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(cd)
+    out = y @ params["down"].astype(cd)
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_step(params, x_t, state, cfg: ArchConfig):
+    u = (x_t @ params["w"].astype(cfg.cdtype))[:, 0]
+    carry = _slstm_cell(params, u, state)
+    y = carry[0][:, None, :].astype(cfg.cdtype)
+    return y @ params["down"].astype(cfg.cdtype), carry

@@ -1,0 +1,448 @@
+"""Model assembly: pattern-grouped, scanned layer stacks for all families.
+
+Every assigned architecture is a sequence of blocks drawn from a small kind
+vocabulary:
+
+  attn         self-attention + dense MLP            (dense archs)
+  attn_local   sliding-window self-attention + MLP   (gemma2 odd layers)
+  attn_moe     self-attention + MoE FFN              (qwen3-moe, llama4)
+  mamba        Mamba2 mixer block                    (zamba2 backbone)
+  mlstm/slstm  xLSTM blocks                          (xlstm-125m)
+  shared_attn  attention + MLP with SHARED weights   (zamba2 global block)
+  cross        cross-attention + MLP                 (llama3.2-vision)
+  enc_attn     bidirectional attention + MLP         (whisper encoder)
+  dec_cross    self-attn + cross-attn + MLP          (whisper decoder)
+
+The layer list is grouped into segments of a repeating pattern
+(e.g. gemma2 = 21 x (attn_local, attn); zamba2 = 13 x (6 x mamba,
+shared_attn) + 3 x mamba). Parameters are STACKED along the repeat axis and
+the stack runs under jax.lax.scan — HLO size is O(pattern), not O(layers),
+which keeps 94-layer × 512-device dry-run compiles tractable; caches are
+scanned alongside as per-repeat slices. cfg.remat wraps the scan body in
+jax.checkpoint for activation recomputation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.base import ArchConfig, dense_init, split_keys
+from repro.models.layers import (KVCache, attend, init_attn, init_mlp, mlp,
+                                 rms_norm)
+from repro.models.sharding import hint
+
+
+# --------------------------- stack specification ----------------------------
+
+def build_stack_spec(cfg: ArchConfig):
+    """Return [(pattern: tuple[str], repeats: int), ...] for the decoder."""
+    L = cfg.n_layers
+    if cfg.family == "ssm" and cfg.ssm_kind == "xlstm":
+        per = cfg.slstm_period
+        if per and L >= per:
+            pat = ("mlstm",) * (per - 1) + ("slstm",)
+            segs = [(pat, L // per)]
+            if L % per:
+                segs.append((("mlstm",), L % per))
+            return segs
+        return [(("mlstm",), L)]
+    if cfg.family == "hybrid":
+        per = cfg.attn_period
+        pat = ("mamba",) * per + ("shared_attn",)
+        segs = [(pat, L // per)]
+        if L % per:
+            segs.append((("mamba",), L % per))
+        return segs
+    if cfg.family == "vlm" and cfg.cross_attn_period:
+        per = cfg.cross_attn_period
+        pat = ("attn",) * (per - 1) + ("cross",)
+        segs = [(pat, L // per)]
+        if L % per:
+            segs.append((("attn",), L % per))
+        return segs
+    if cfg.enc_dec:
+        return [(("dec_cross",), L)]
+    kind = "attn_moe" if cfg.n_experts else "attn"
+    if cfg.n_experts and cfg.moe_period > 1:
+        pat = ("attn",) * (cfg.moe_period - 1) + ("attn_moe",)
+        segs = [(pat, L // cfg.moe_period)]
+        if L % cfg.moe_period:
+            segs.append((("attn",), L % cfg.moe_period))
+        return segs
+    if cfg.local_global_period:
+        pat = ("attn_local", "attn") * (cfg.local_global_period // 2)
+        return [(pat, L // cfg.local_global_period)]
+    return [((kind,), L)]
+
+
+# ------------------------------ block init ----------------------------------
+
+def init_block(key, cfg: ArchConfig, kind: str):
+    ks = split_keys(key, 6)
+    D = cfg.d_model
+    p: dict[str, Any] = {"norm1": jnp.zeros((D,), cfg.pdtype)}
+    if kind in ("attn", "attn_local", "attn_moe", "shared_attn", "enc_attn"):
+        p["attn"] = init_attn(ks[0], cfg)
+        p["norm2"] = jnp.zeros((D,), cfg.pdtype)
+        p["ffn"] = (moe_mod.init_moe(ks[1], cfg) if kind == "attn_moe"
+                    else init_mlp(ks[1], cfg))
+    elif kind == "cross":
+        p["attn"] = init_attn(ks[0], cfg)
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_ffn"] = jnp.zeros((), jnp.float32)
+        p["norm2"] = jnp.zeros((D,), cfg.pdtype)
+        p["ffn"] = init_mlp(ks[1], cfg)
+    elif kind == "dec_cross":
+        p["attn"] = init_attn(ks[0], cfg)
+        p["norm_x"] = jnp.zeros((D,), cfg.pdtype)
+        p["xattn"] = init_attn(ks[2], cfg)
+        p["norm2"] = jnp.zeros((D,), cfg.pdtype)
+        p["ffn"] = init_mlp(ks[1], cfg)
+    elif kind == "mamba":
+        p["mixer"] = ssm.init_mamba2(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mixer"] = ssm.init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["mixer"] = ssm.init_slstm(ks[0], cfg)
+        p["norm2"] = jnp.zeros((D,), cfg.pdtype)
+        p["ffn"] = init_mlp(ks[1], cfg, d_ff=max(4 * D // 3, 8))
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_cache_for_kind(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    Kv, hd = cfg.n_kv, cfg.head_dim
+    cd = cfg.cdtype
+    if kind in ("attn", "attn_local", "attn_moe", "shared_attn", "cross",
+                "dec_cross"):
+        c = KVCache(jnp.zeros((batch, max_len, Kv, hd), cd),
+                    jnp.zeros((batch, max_len, Kv, hd), cd),
+                    jnp.zeros((), jnp.int32))
+        return c
+    if kind == "mamba":
+        inner = cfg.ssm_expand * cfg.d_model
+        Hm = inner // 64
+        conv_c = inner + 2 * cfg.ssm_state
+        return (jnp.zeros((batch, Hm, 64, cfg.ssm_state), jnp.float32),
+                jnp.zeros((batch, 3, conv_c), cd))
+    if kind == "mlstm":
+        inner = cfg.ssm_expand * cfg.d_model
+        hd_m = inner // cfg.n_heads
+        return (jnp.zeros((batch, cfg.n_heads, hd_m, hd_m), jnp.float32),
+                jnp.zeros((batch, cfg.n_heads, hd_m), jnp.float32),
+                jnp.full((batch, cfg.n_heads), -1e30, jnp.float32))
+    if kind == "slstm":
+        D = cfg.d_model
+        return (jnp.zeros((batch, D), jnp.float32),
+                jnp.zeros((batch, D), jnp.float32),
+                jnp.zeros((batch, D), jnp.float32),
+                jnp.full((batch, D), -1e30, jnp.float32))
+    if kind == "enc_attn":
+        return None
+    raise ValueError(kind)
+
+
+# ------------------------------ block apply ----------------------------------
+
+def apply_block(p, x, cfg: ArchConfig, kind: str, *, positions,
+                memory=None, memory_positions=None, cache=None,
+                shared_params=None, decode: bool = False):
+    """Apply one block; returns (x, new_cache, aux_losses)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "shared_attn":
+        p = dict(shared_params)
+    if kind in ("attn", "attn_local", "attn_moe", "shared_attn", "enc_attn"):
+        sw = cfg.sliding_window if kind == "attn_local" else None
+        h = rms_norm(x, p["norm1"], cfg.rms_eps)
+        a, cache = attend(p["attn"], h, cfg, positions=positions,
+                          causal=(kind != "enc_attn"), sliding_window=sw,
+                          cache=cache)
+        x = x + a
+        h = rms_norm(x, p["norm2"], cfg.rms_eps)
+        if kind == "attn_moe":
+            f, moe_aux = moe_mod.moe_ffn(p["ffn"], h, cfg)
+            aux = aux + moe_aux["lb_loss"]
+        else:
+            f = mlp(p["ffn"], h, cfg)
+        return x + f, cache, aux
+    if kind == "cross":
+        h = rms_norm(x, p["norm1"], cfg.rms_eps)
+        a, _ = attend(p["attn"], h, cfg, positions=positions, kv=memory,
+                      kv_positions=memory_positions, causal=False)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+        h = rms_norm(x, p["norm2"], cfg.rms_eps)
+        x = x + jnp.tanh(p["gate_ffn"]).astype(x.dtype) * mlp(p["ffn"], h, cfg)
+        return x, cache, aux
+    if kind == "dec_cross":
+        h = rms_norm(x, p["norm1"], cfg.rms_eps)
+        a, cache = attend(p["attn"], h, cfg, positions=positions, causal=True,
+                          cache=cache)
+        x = x + a
+        h = rms_norm(x, p["norm_x"], cfg.rms_eps)
+        a, _ = attend(p["xattn"], h, cfg, positions=positions, kv=memory,
+                      kv_positions=memory_positions, causal=False)
+        x = x + a
+        h = rms_norm(x, p["norm2"], cfg.rms_eps)
+        return x + mlp(p["ffn"], h, cfg), cache, aux
+    if kind == "mamba":
+        h = rms_norm(x, p["norm1"], cfg.rms_eps)
+        if decode:
+            state, conv_buf = cache
+            y, state, conv_buf = ssm.mamba2_step(p["mixer"], h, state, cfg,
+                                                 conv_buf)
+            return x + y, (state, conv_buf), aux
+        if cache is not None:   # prefill: produce the recurrent state
+            y, cache = ssm.mamba2_seq(p["mixer"], h, cfg, return_state=True)
+            return x + y, cache, aux
+        return x + ssm.mamba2_seq(p["mixer"], h, cfg), cache, aux
+    if kind == "mlstm":
+        h = rms_norm(x, p["norm1"], cfg.rms_eps)
+        if decode:
+            y, cache = ssm.mlstm_step(p["mixer"], h, cache, cfg)
+            return x + y, cache, aux
+        if cache is not None:
+            y, cache = ssm.mlstm_seq(p["mixer"], h, cfg, return_state=True)
+            return x + y, cache, aux
+        return x + ssm.mlstm_seq(p["mixer"], h, cfg), cache, aux
+    if kind == "slstm":
+        h = rms_norm(x, p["norm1"], cfg.rms_eps)
+        if decode:
+            y, cache = ssm.slstm_step(p["mixer"], h, cache, cfg)
+        elif cache is not None:
+            y, cache = ssm.slstm_seq(p["mixer"], h, cfg, return_state=True)
+        else:
+            y = ssm.slstm_seq(p["mixer"], h, cfg)
+        x = x + y
+        h = rms_norm(x, p["norm2"], cfg.rms_eps)
+        return x + mlp(p["ffn"], h, cfg), cache, aux
+    raise ValueError(kind)
+
+
+def count_params(cfg: ArchConfig) -> int:
+    """Exact parameter count via abstract init (no allocation)."""
+    abs_tree = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+    return int(sum(int(np_prod(l.shape)) for l in jax.tree.leaves(abs_tree)))
+
+
+def np_prod(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+# ------------------------------- the model ----------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---------------- init ----------------
+    def init(self, key):
+        cfg = self.cfg
+        ks = split_keys(key, 8)
+        params: dict[str, Any] = {
+            "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), cfg.pdtype,
+                                scale=0.02),
+            "final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab),
+                                           cfg.pdtype)
+        spec = build_stack_spec(cfg)
+        segs = []
+        kseg = split_keys(ks[2], len(spec))
+        for (pattern, repeats), k in zip(spec, kseg):
+            kpos = split_keys(k, len(pattern))
+            seg_params = []
+            for kind, kp in zip(pattern, kpos):
+                if kind == "shared_attn":
+                    seg_params.append(None)   # shared: stored once below
+                    continue
+                stack = jax.vmap(
+                    functools.partial(init_block, cfg=cfg, kind=kind)
+                )(jax.random.split(kp, repeats))
+                seg_params.append(stack)
+            segs.append(seg_params)
+        params["stack"] = segs
+        if any(kind == "shared_attn" for pat, _ in spec for kind in pat):
+            params["shared_attn"] = init_block(ks[3], cfg, "shared_attn")
+        if cfg.family == "vlm":
+            params["vision_proj"] = dense_init(
+                ks[4], (cfg.vision_dim, cfg.d_model), cfg.pdtype)
+        if cfg.enc_dec:
+            enc_stack = jax.vmap(
+                functools.partial(init_block, cfg=cfg, kind="enc_attn")
+            )(jax.random.split(ks[5], cfg.n_enc_layers))
+            params["encoder"] = {
+                "stack": enc_stack,
+                "final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+                "frame_proj": dense_init(ks[6], (cfg.vision_dim, cfg.d_model),
+                                         cfg.pdtype),
+            }
+            # sized for the largest assigned decode cell (32k); the real
+            # whisper caps at 448 decoder positions — see DESIGN.md
+            params["pos_embed"] = dense_init(
+                ks[7], (32_768, cfg.d_model), cfg.pdtype, scale=0.02)
+        return params
+
+    # ---------------- shared stack runner ----------------
+    def _run_stack(self, params, x, *, positions, memory=None,
+                   memory_positions=None, caches=None, decode=False):
+        cfg = self.cfg
+        spec = build_stack_spec(cfg)
+        shared = params.get("shared_attn")
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        has_cache = caches is not None
+        for si, (pattern, repeats) in enumerate(spec):
+            seg_params = params["stack"][si]
+            seg_cache = caches[si] if has_cache else None
+
+            def body(carry, xs, pattern=pattern):
+                xx, aux_acc = carry
+                ps, cs = xs
+                if cfg.seq_parallel_residual and not decode:
+                    # Megatron-style sequence parallelism: the block-boundary
+                    # residual (what remat saves) is sharded seq-over-TP,
+                    # cutting saved-activation HBM by the TP degree
+                    xx = hint(xx, "batch", "seq_mp", None)
+                new_cs = []
+                aux_step = jnp.zeros((), jnp.float32)
+                for pi, kind in enumerate(pattern):
+                    c_in = cs[pi] if has_cache else None
+                    xx, c_out, aux = apply_block(
+                        ps[pi], xx, cfg, kind,
+                        positions=positions, memory=memory,
+                        memory_positions=memory_positions, cache=c_in,
+                        shared_params=shared, decode=decode)
+                    aux_step = aux_step + aux
+                    new_cs.append(c_out if has_cache else ())
+                return (xx, aux_acc + aux_step), tuple(new_cs)
+
+            body_fn = jax.checkpoint(body) if (cfg.remat and not decode
+                                               and not has_cache) else body
+            # scan needs uniform pytrees: shared params scan as empty tuples
+            xs = (tuple(p if p is not None else () for p in seg_params),
+                  tuple(seg_cache[pi] if has_cache else ()
+                        for pi in range(len(pattern))))
+            if cfg.scan_layers:
+                (x, aux_total), seg_new_cache = jax.lax.scan(
+                    body_fn, (x, aux_total), xs)
+            else:
+                # unrolled python loop (validation of the scan-corrected
+                # roofline accounting; see EXPERIMENTS.md §Roofline)
+                outs = []
+                for r in range(repeats):
+                    sl = jax.tree.map(lambda a: a[r], xs)
+                    (x, aux_total), yc = body_fn((x, aux_total), sl)
+                    outs.append(yc)
+                seg_new_cache = jax.tree.map(
+                    lambda *ys: jnp.stack(ys), *outs) if outs else ()
+            new_caches.append(list(seg_new_cache))
+        return x, new_caches, aux_total
+
+    # ---------------- embedding / heads ----------------
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"].astype(cfg.cdtype)[tokens]
+        if cfg.arch_id.startswith("gemma"):
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+        return hint(x, "batch", None, None)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(cfg.cdtype)
+        logits = x @ head
+        if cfg.final_softcap:
+            logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+        return hint(logits, "batch", None, "vocab")
+
+    def _encode_memory(self, params, batch):
+        """VLM / audio frontends (stubs provide precomputed embeddings)."""
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            mem = batch["patch_embeds"].astype(cfg.cdtype) \
+                @ params["vision_proj"].astype(cfg.cdtype)
+            return mem, jnp.arange(mem.shape[1])
+        if cfg.enc_dec:
+            enc = params["encoder"]
+            mem = batch["frames"].astype(cfg.cdtype) \
+                @ enc["frame_proj"].astype(cfg.cdtype)
+            pos = jnp.arange(mem.shape[1])
+
+            def body(xx, ps):
+                out, _, _ = apply_block(ps, xx, cfg, "enc_attn", positions=pos)
+                return out, ()
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            mem, _ = jax.lax.scan(body_fn, mem, enc["stack"])
+            mem = rms_norm(mem, enc["final_norm"], cfg.rms_eps)
+            return mem, pos
+        return None, None
+
+    # ---------------- public entry points ----------------
+    def forward(self, params, batch):
+        """Training forward: batch = {tokens (B,S), [patch_embeds|frames]}.
+        Returns (logits (B,S,V), aux)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        memory, mem_pos = self._encode_memory(params, batch)
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        if self.cfg.enc_dec:
+            x = x + params["pos_embed"].astype(x.dtype)[None, :S, :]
+        x, _, aux = self._run_stack(params, x, positions=positions,
+                                    memory=memory, memory_positions=mem_pos)
+        return self._logits(params, x), aux
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        spec = build_stack_spec(cfg)
+        caches = []
+        for pattern, repeats in spec:
+            seg = []
+            for kind in pattern:
+                one = init_cache_for_kind(cfg, kind, batch_size, max_len)
+                stacked = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (repeats,) + a.shape), one)
+                seg.append(stacked)
+            caches.append(seg)
+        return caches
+
+    def prefill(self, params, batch, caches):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        memory, mem_pos = self._encode_memory(params, batch)
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        if self.cfg.enc_dec:
+            x = x + params["pos_embed"].astype(x.dtype)[None, :S, :]
+        x, caches, _ = self._run_stack(params, x, positions=positions,
+                                       memory=memory,
+                                       memory_positions=mem_pos,
+                                       caches=caches, decode=False)
+        return self._logits(params, x[:, -1:, :]), caches
+
+    def decode_step(self, params, token, pos, caches, memory=None,
+                    mem_pos=None):
+        """token: (B,1) int32; pos: () int32 current position."""
+        B = token.shape[0]
+        x = self._embed(params, token)
+        if self.cfg.enc_dec:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"].astype(x.dtype), pos, 1, 0)[None]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        x, caches, _ = self._run_stack(params, x, positions=positions,
+                                       memory=memory, memory_positions=mem_pos,
+                                       caches=caches, decode=True)
+        return self._logits(params, x), caches

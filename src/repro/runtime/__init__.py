@@ -1,0 +1,3 @@
+from repro.runtime.elastic import RestartableLoop, StragglerMonitor, remesh
+
+__all__ = ["RestartableLoop", "StragglerMonitor", "remesh"]

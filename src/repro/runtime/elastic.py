@@ -1,0 +1,110 @@
+"""Elastic scaling, failure recovery, and straggler mitigation.
+
+BCPNN makes elasticity unusually clean: every HCU's state is self-contained
+("no memory consistency problem", paper §II.B), so re-scaling is pure data
+movement — re-place the same logical arrays under a new mesh. The same holds
+for LM training state (params/optimizer are logical arrays; GSPMD re-lowers
+the step for the new mesh).
+
+Components:
+  remesh(tree, mesh, specs)   re-place a pytree onto a (new) mesh
+  StragglerMonitor            per-step deadline tracking; slow-step log +
+                              skip-budget accounting (BCPNN spikes are
+                              droppable by design — the paper's queue-drop
+                              budget, Fig 7, prices exactly this)
+  RestartableLoop             run steps with checkpoint/restore + simulated
+                              failure injection (used by tests)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.checkpoint import AsyncCheckpointer, restore_latest
+
+
+def remesh(tree, mesh: Mesh, specs):
+    """Re-place `tree` onto `mesh` using a congruent pytree of PartitionSpecs
+    (or one spec broadcast to all leaves)."""
+    if isinstance(specs, PartitionSpec):
+        specs = jax.tree.map(lambda _: specs, tree)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Deadline-based straggler accounting for a fixed-rate loop.
+
+    In a real multi-host deployment each host reports step wall time; a step
+    exceeding `deadline_s` is logged and (for droppable work like BCPNN spike
+    delivery) may be skipped against a drop budget instead of stalling the
+    collective — the paper's 1-spike-per-month budget generalized.
+    """
+    deadline_s: float
+    slow_steps: int = 0
+    skipped: int = 0
+    total: int = 0
+    _last: float = 0.0
+
+    def start(self):
+        self._last = time.monotonic()
+
+    def finish(self) -> bool:
+        """Returns True if the step met its deadline."""
+        dt = time.monotonic() - self._last
+        self.total += 1
+        if dt > self.deadline_s:
+            self.slow_steps += 1
+            return False
+        return True
+
+    def skip(self):
+        self.skipped += 1
+
+    def summary(self):
+        return {"total": self.total, "slow": self.slow_steps,
+                "skipped": self.skipped}
+
+
+class RestartableLoop:
+    """Checkpointed step loop with failure recovery.
+
+    fail_injector(step) -> bool lets tests simulate node failures; on
+    failure the loop restores the latest checkpoint and continues, exactly
+    the restart path a real deployment takes after re-scheduling.
+    """
+
+    def __init__(self, ckpt_dir: str, save_every: int = 10,
+                 fail_injector: Callable[[int], bool] | None = None):
+        self.ckpt = AsyncCheckpointer(ckpt_dir)
+        self.ckpt_dir = ckpt_dir
+        self.save_every = save_every
+        self.fail_injector = fail_injector
+        self.restarts = 0
+
+    def run(self, state: Any, step_fn: Callable[[Any, int], Any],
+            n_steps: int):
+        step = 0
+        while step < n_steps:
+            try:
+                if self.fail_injector and self.fail_injector(step):
+                    raise RuntimeError(f"injected failure at step {step}")
+                state = step_fn(state, step)
+                step += 1
+                if step % self.save_every == 0:
+                    self.ckpt.save_async(step, state)
+            except RuntimeError:
+                self.ckpt.wait()
+                restored, s = restore_latest(self.ckpt_dir, state)
+                if restored is None:
+                    step = 0          # no checkpoint yet: restart from scratch
+                else:
+                    state, step = restored, s
+                self.restarts += 1
+        self.ckpt.wait()
+        return state, step

@@ -1,0 +1,8 @@
+from repro.train.optimizer import AdamW, AdamWState
+from repro.train.train_step import (cross_entropy, make_eval_step,
+                                    make_loss_fn, make_train_step)
+from repro.train.serve_step import generate, make_decode_step, make_prefill
+
+__all__ = ["AdamW", "AdamWState", "cross_entropy", "make_eval_step",
+           "make_loss_fn", "make_train_step", "generate", "make_decode_step",
+           "make_prefill"]

@@ -1,0 +1,69 @@
+"""AdamW in pure JAX (optax is not available in this environment).
+
+Optimizer state is a pytree congruent with params, so the launch layer can
+shard it with the same (or ZeRO-extended) PartitionSpecs as the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(z, params),
+                          nu=jax.tree.map(z, params))
+
+    def schedule(self, step):
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        return self.lr * warm
+
+    def update(self, grads, state: AdamWState, params):
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        step = state.step + 1
+        lr = self.schedule(step)
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm,
+                                                       "lr": lr}

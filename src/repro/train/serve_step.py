@@ -1,0 +1,55 @@
+"""Serving steps: batched prefill + incremental decode with sampling.
+
+serve_step (decode) is what the decode_32k / long_500k dry-run cells lower:
+one new token against a seq_len-deep cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+def sample(logits, key, temperature: float = 0.0):
+    """logits (B,1,V) -> (B,1) token ids. temperature==0 => greedy."""
+    if temperature == 0.0:
+        return jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    g = jax.random.categorical(key, logits[:, -1, :] / temperature)
+    return g[:, None].astype(jnp.int32)
+
+
+def make_prefill(model: Model):
+    def prefill(params, batch, caches):
+        return model.prefill(params, batch, caches)
+    return prefill
+
+
+def make_decode_step(model: Model, temperature: float = 0.0):
+    def decode_step(params, token, pos, caches, key, memory=None,
+                    mem_pos=None):
+        logits, caches = model.decode_step(params, token, pos, caches,
+                                           memory, mem_pos)
+        nxt = sample(logits, key, temperature)
+        return nxt, logits, caches
+    return decode_step
+
+
+def generate(model: Model, params, batch, max_new: int, max_len: int,
+             temperature: float = 0.0, key=None):
+    """Host-loop generation driver (examples/serving)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    B, S = batch["tokens"].shape
+    caches = model.init_cache(B, max_len)
+    memory, mem_pos = model._encode_memory(params, batch)
+    prefill = jax.jit(make_prefill(model))
+    step = jax.jit(make_decode_step(model, temperature))
+    logits, caches = prefill(params, batch, caches)
+    tok = sample(logits, key, temperature)
+    out = [tok]
+    for i in range(max_new - 1):
+        key = jax.random.fold_in(key, i)
+        tok, logits, caches = step(params, tok, jnp.asarray(S + i, jnp.int32),
+                                   caches, key, memory, mem_pos)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

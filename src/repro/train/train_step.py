@@ -1,0 +1,60 @@
+"""Training step factory: loss, grads, AdamW update, metrics.
+
+The returned step is a single jit-able function of (params, opt_state,
+batch); the launch layer binds it to a mesh with in/out shardings (DP over
+pod+data, TP/EP over model, ZeRO-style optimizer-state sharding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.train.optimizer import AdamW
+
+AUX_LOSS_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-4
+
+
+def cross_entropy(logits, labels, z_loss: float = Z_LOSS_WEIGHT):
+    """Token-mean CE with z-loss; logits (B,S,V) any dtype, labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - ll)
+    zl = jnp.mean(jnp.square(lse))
+    return ce + z_loss * zl, ce
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        total, ce = cross_entropy(logits, batch["labels"])
+        total = total + AUX_LOSS_WEIGHT * aux
+        return total, {"loss": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(model: Model, opt: AdamW):
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, total=total, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

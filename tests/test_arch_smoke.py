@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family configs,
+one forward + one train step on CPU, asserting output shapes and no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.transformer import Model, build_stack_spec
+from repro.train import AdamW, make_train_step
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.vision_dim), jnp.float32)
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.n_enc_frames, cfg.vision_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_shapes_and_finite(arch_id):
+    cfg = get_smoke_config(arch_id)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    logits, aux = jax.jit(model.forward)(params, _batch(cfg, key))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_one_train_step_updates_params(arch_id):
+    cfg = get_smoke_config(arch_id)
+    model = Model(cfg)
+    opt = AdamW(lr=1e-3, warmup_steps=1)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    p2, o2, metrics = step(params, opt_state, _batch(cfg, key))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # embeddings must actually move
+    delta = float(jnp.max(jnp.abs(p2["embed"] - params["embed"])))
+    assert delta > 0.0
+    # no NaNs anywhere in the updated tree
+    for leaf in jax.tree.leaves(p2):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), arch_id
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_matches_forward(arch_id):
+    """Prefill + incremental decode must reproduce teacher-forced logits.
+    (MoE: capacity raised so no tokens drop — drops differ by batch shape.)"""
+    cfg = get_smoke_config(arch_id)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=16.0)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(2)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    toks = batch["tokens"]
+    logits_full, _ = jax.jit(model.forward)(params, batch)
+
+    pre = S // 2
+    caches = model.init_cache(B, S + 2)
+    pb = dict(batch)
+    pb["tokens"] = toks[:, :pre]
+    memory, mem_pos = model._encode_memory(params, batch)
+    lp, caches = jax.jit(model.prefill)(params, pb, caches)
+    errs = [float(jnp.max(jnp.abs(lp[:, 0] - logits_full[:, pre - 1])))]
+    for i in range(pre, S):
+        lo, caches = jax.jit(model.decode_step)(
+            params, toks[:, i:i + 1], jnp.asarray(i, jnp.int32), caches,
+            memory, mem_pos)
+        errs.append(float(jnp.max(jnp.abs(lo[:, 0] - logits_full[:, i]))))
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1e-6
+    rel = max(errs) / scale
+    tol = 0.05 if cfg.family in ("ssm", "hybrid") else 1e-3
+    assert rel < tol, f"{arch_id}: decode/fwd rel err {rel:.4f}"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_matches_assignment(arch_id):
+    """The FULL configs carry the exact assigned dimensions."""
+    cfg = get_config(arch_id)
+    expect = {
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    }[arch_id]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_ff,
+           cfg.vocab)
+    assert got == expect
+    # stack spec covers exactly n_layers backbone blocks (zamba2's shared
+    # attention block is an INSERTION between the 81 mamba layers, not one
+    # of them — exclude it from the count)
+    n = sum(sum(1 for k in pat if k != "shared_attn") * rep
+            for pat, rep in build_stack_spec(cfg))
+    assert n == cfg.n_layers, f"{arch_id}: stack covers {n} != {cfg.n_layers}"
+
+
+def test_moe_assignment_details():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert (cfg.n_experts, cfg.top_k) == (128, 8)
+    cfg = get_config("llama4-maverick-400b-a17b")
+    assert (cfg.n_experts, cfg.top_k) == (128, 1)
+
+
+def test_param_counts_in_family_range():
+    """Analytic param counts should land near the advertised sizes."""
+    approx = {
+        "xlstm-125m": (0.08e9, 0.3e9),
+        "internlm2-1.8b": (1.2e9, 2.4e9),
+        "qwen2-1.5b": (1.0e9, 2.1e9),
+        "gemma2-9b": (8e9, 11e9),
+        "qwen3-moe-235b-a22b": (180e9, 260e9),
+        "llama4-maverick-400b-a17b": (300e9, 480e9),
+        "zamba2-7b": (5e9, 9.5e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+    }
+    for aid, (lo, hi) in approx.items():
+        n = get_config(aid).param_count()
+        assert lo <= n <= hi, f"{aid}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"

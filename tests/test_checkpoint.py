@@ -1,0 +1,113 @@
+"""Checkpointing + fault tolerance: roundtrip, atomicity, restart loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step, restore,
+                              restore_latest, save)
+from repro.runtime import RestartableLoop, StragglerMonitor, remesh
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32),
+                  "d": (jnp.zeros(()), jnp.full((2, 2), 7.0))}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 3, t)
+    r = restore(str(tmp_path), 3, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(a, b)
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_restore_latest_and_prune(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save(str(tmp_path), s, t, keep_last=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_4", "step_5"]
+    r, s = restore_latest(str(tmp_path), t)
+    assert s == 5 and r is not None
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    bad = dict(t, a=jnp.zeros((2, 2)))
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), 1, bad)
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path))
+    t = _tree()
+    ck.save_async(7, t)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 7
+
+
+def test_no_partial_dirs_on_disk(tmp_path):
+    save(str(tmp_path), 1, _tree())
+    assert not any(d.startswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_restartable_loop_recovers(tmp_path):
+    """Inject failures; the loop must resume from checkpoints and finish
+    with the same result as an uninterrupted run."""
+    failures = {7, 23}
+
+    def injector(step):
+        if step in failures:
+            failures.discard(step)
+            return True
+        return False
+
+    def step_fn(state, step):
+        return {"x": state["x"] + step}
+
+    loop = RestartableLoop(str(tmp_path), save_every=5,
+                           fail_injector=injector)
+    out, n = loop.run({"x": jnp.zeros(())}, step_fn, 30)
+    assert n == 30 and loop.restarts == 2
+    ref = {"x": jnp.zeros(())}
+    for s in range(30):
+        ref = step_fn(ref, s)
+    np.testing.assert_allclose(out["x"], ref["x"])
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(deadline_s=10.0)
+    mon.start()
+    assert mon.finish() is True
+    mon2 = StragglerMonitor(deadline_s=0.0)
+    mon2.start()
+    assert mon2.finish() is False
+    mon2.skip()
+    assert mon2.summary() == {"total": 1, "slow": 1, "skipped": 1}
+
+
+def test_remesh_roundtrip():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(shape=(1, 1))
+    t = _tree()
+    out = remesh(t, mesh, P())
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_bcpnn_state_checkpoint_roundtrip(tmp_path):
+    """Flushed BCPNN network state is checkpointable and bit-stable."""
+    from repro.core import init_network, test_scale
+    p = test_scale(n_hcu=2, rows=32, cols=16)
+    st = init_network(p, jax.random.PRNGKey(0))
+    save(str(tmp_path), 0, st)
+    r = restore(str(tmp_path), 0, st)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,62 @@
+"""Sharded runtime equivalence — runs in a subprocess with 4 host devices
+(XLA device count must be set before jax initializes, so it cannot be done
+inside the main pytest process)."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import *
+    from repro.core import distributed as DD
+
+    p = test_scale(n_hcu=8, rows=64, cols=16)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    # two independent (identical) states: ticks donate their buffers, and
+    # device_put may alias the host copy, so dist/single must not share
+    s0 = init_network(p, key)
+    s_s = init_network(p, key)
+
+    mesh = jax.make_mesh((4,), ("hcu",))
+    rc = DD.default_route_config(p, 2)
+    tick = DD.make_dist_tick(mesh, p, rc, axis="hcu")
+    s_d, conn_d = DD.shard_network(mesh, s0, conn)
+
+    rng = np.random.default_rng(7)
+    def ext():
+        out = np.full((p.n_hcu, 8), p.rows, np.int32)
+        for h in range(p.n_hcu):
+            n = min(8, rng.poisson(3))
+            out[h, :n] = rng.integers(0, p.rows, n)
+        return jnp.asarray(out)
+
+    exts = [ext() for _ in range(25)]
+    for e in exts:
+        s_d, fd = tick(s_d, conn_d, e)
+    # single-device trajectory with matching per-device fire cap semantics
+    for e in exts:
+        s_s, fs = network_tick(s_s, conn, e, p, cap_fire=8)
+
+    now = s_d.t
+    a = jax.vmap(lambda s: flush(s, now, p))(s_d.hcus)
+    b = jax.vmap(lambda s: flush(s, now, p))(s_s.hcus)
+    for name in ["zij", "eij", "pij", "wij", "zi", "pi", "zj", "pj", "h"]:
+        np.testing.assert_allclose(getattr(a, name), getattr(b, name),
+                                   rtol=3e-4, atol=3e-4, err_msg=name)
+    assert int(s_d.t) == 25
+    print("DIST_OK")
+""")
+
+
+def test_distributed_matches_single_device():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                                       "HOME": "/root"})
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    assert "DIST_OK" in r.stdout

@@ -1,0 +1,90 @@
+"""Unit tests for HCU-level semantics (dedup, row/column updates, flush)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hcu as H
+from repro.core import test_scale as tiny_scale
+from repro.core.traces import ZEP, decay_zep
+
+
+P = tiny_scale(n_hcu=1, rows=32, cols=16)
+
+
+def test_dedup_rows_merges_duplicates():
+    rows = jnp.array([5, 3, 5, 32, 3, 5, 32, 32], jnp.int32)  # 32 == padding
+    r, c = H.dedup_rows(rows, 32)
+    got = {int(a): int(b) for a, b in zip(r, c) if int(a) < 32}
+    assert got == {3: 2, 5: 3}
+    # dropped slots point out of range with zero count
+    assert all(int(a) == 32 for a, b in zip(r, c) if int(b) == 0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_dedup_rows_property(seed):
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(0, 12, size=8)
+    pad = rng.integers(0, 8)
+    raw[8 - pad:] = 12
+    r, c = H.dedup_rows(jnp.asarray(raw, jnp.int32), 12)
+    # total multiplicity preserved
+    assert int(jnp.sum(c)) == int((raw < 12).sum())
+    # each unique row appears exactly once among kept slots
+    kept = [int(a) for a, b in zip(r, c) if int(b) > 0]
+    assert len(kept) == len(set(kept))
+
+
+def test_row_update_touches_only_selected_rows():
+    st_ = H.init_hcu_state(P)
+    rows = jnp.full((4,), P.rows, jnp.int32).at[0].set(7)
+    st2, w_rows, counts, _ = H.row_updates(st_, rows, 5, P)
+    changed = np.asarray(st2.tij != st_.tij)
+    assert changed[7].all() and changed.sum() == P.cols
+    assert int(st2.ti[7]) == 5 and int(st2.ti[3]) == 0
+    assert float(st2.zi[7]) > 0.0
+
+
+def test_column_update_masked_noop():
+    st_ = H.init_hcu_state(P)
+    st2 = H.column_update(st_, jnp.asarray(-1, jnp.int32), 5, P)
+    np.testing.assert_array_equal(st2.zij, st_.zij)
+    np.testing.assert_array_equal(st2.tij, st_.tij)
+    np.testing.assert_array_equal(st2.zj, st_.zj)
+
+
+def test_column_update_applies_increment():
+    st_ = H.init_hcu_state(P)
+    # give presynaptic traces something to correlate with
+    rows = jnp.full((4,), P.rows, jnp.int32).at[0].set(3)
+    st_, *_ = H.row_updates(st_, rows, 2, P)
+    st2 = H.column_update(st_, jnp.asarray(4, jnp.int32), 6, P)
+    # column 4 stamped at t=6; zj[4] incremented
+    assert int(st2.tij[0, 4]) == 6 and int(st2.tij[0, 3]) == 0
+    assert float(st2.zj[4]) == 1.0
+    # Zij[3,4] must have gained ~Zi_3(6) (decayed from t=2)
+    zi6 = float(decay_zep(ZEP(st_.zi[3], st_.ei[3], st_.pi[3]), 4.0,
+                          H.coeffs_i(P)).z)
+    got = float(st2.zij[3, 4])
+    assert abs(got - zi6) < 1e-5
+
+
+def test_flush_is_idempotent():
+    st_ = H.init_hcu_state(P)
+    rows = jnp.full((4,), P.rows, jnp.int32).at[0].set(1).at[1].set(9)
+    st_, *_ = H.row_updates(st_, rows, 3, P)
+    f1 = H.flush(st_, 10, P)
+    f2 = H.flush(f1, 10, P)
+    for a, b in zip(f1, f2):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_flush_equals_stepwise_decay():
+    st_ = H.init_hcu_state(P)
+    rows = jnp.full((4,), P.rows, jnp.int32).at[0].set(1)
+    st_, *_ = H.row_updates(st_, rows, 1, P)
+    direct = H.flush(st_, 21, P)
+    two_step = H.flush(H.flush(st_, 11, P), 21, P)
+    np.testing.assert_allclose(direct.pij, two_step.pij, rtol=1e-5)
+    np.testing.assert_allclose(direct.zij, two_step.zij, rtol=1e-5, atol=1e-7)

@@ -1,0 +1,102 @@
+"""Pallas kernel vs pure-jnp oracle, swept over shapes/dtypes (interpret mode).
+
+Per-kernel allclose against ref.py as required: the kernel body executes in
+Python on CPU via interpret=True; on a real TPU the same pallas_call lowers
+to Mosaic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.traces import make_coeffs
+from repro.kernels import ops
+
+K = make_coeffs(2.5, 100.0, 1000.0)
+EPS = 1e-4
+
+
+def _row_args(rng, S, C, tmax=100):
+    return dict(
+        zij=jnp.asarray(rng.uniform(0, 2, (S, C)), jnp.float32),
+        eij=jnp.asarray(rng.uniform(0, 2, (S, C)), jnp.float32),
+        pij=jnp.asarray(rng.uniform(1e-3, 1, (S, C)), jnp.float32),
+        tij=jnp.asarray(rng.integers(0, tmax, (S, C)), jnp.int32),
+        now=tmax,
+        counts=jnp.asarray(rng.integers(0, 4, (S,)), jnp.float32),
+        zj=jnp.asarray(rng.uniform(0, 2, (C,)), jnp.float32),
+        p_i=jnp.asarray(rng.uniform(1e-3, 1, (S,)), jnp.float32),
+        p_j=jnp.asarray(rng.uniform(1e-3, 1, (C,)), jnp.float32),
+    )
+
+
+@pytest.mark.parametrize("S,C", [(1, 1), (3, 17), (8, 100), (36, 100),
+                                 (5, 128), (16, 256), (40, 100)])
+def test_row_kernel_matches_ref_shapes(S, C):
+    rng = np.random.default_rng(S * 1000 + C)
+    a = _row_args(rng, S, C)
+    ref = ops.row_update(**a, coeffs=K, eps=EPS, backend="ref")
+    pal = ops.row_update(**a, coeffs=K, eps=EPS, backend="pallas_interpret")
+    for r, p_, name in zip(ref, pal, "zepwt"):
+        np.testing.assert_allclose(r, p_, rtol=3e-6, atol=3e-6,
+                                   err_msg=f"plane {name} S={S} C={C}")
+
+
+@pytest.mark.parametrize("R", [1, 100, 300, 1024, 1200, 2048])
+def test_col_kernel_matches_ref_shapes(R):
+    rng = np.random.default_rng(R)
+    args = dict(
+        z_col=jnp.asarray(rng.uniform(0, 2, (R,)), jnp.float32),
+        e_col=jnp.asarray(rng.uniform(0, 2, (R,)), jnp.float32),
+        p_col=jnp.asarray(rng.uniform(1e-3, 1, (R,)), jnp.float32),
+        t_col=jnp.asarray(rng.integers(0, 60, (R,)), jnp.int32),
+        now=60,
+        zi_t=jnp.asarray(rng.uniform(0, 2, (R,)), jnp.float32),
+        p_i=jnp.asarray(rng.uniform(1e-3, 1, (R,)), jnp.float32),
+        p_j_scalar=0.37,
+    )
+    ref = ops.col_update(**args, coeffs=K, eps=EPS, backend="ref")
+    pal = ops.col_update(**args, coeffs=K, eps=EPS, backend="pallas_interpret")
+    for r, p_, name in zip(ref, pal, "zepwt"):
+        np.testing.assert_allclose(r, p_, rtol=3e-6, atol=3e-6,
+                                   err_msg=f"plane {name} R={R}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.integers(1, 12), c=st.integers(1, 40),
+       seed=st.integers(0, 2**31 - 1), now=st.integers(1, 10_000))
+def test_row_kernel_property_sweep(s, c, seed, now):
+    rng = np.random.default_rng(seed)
+    a = _row_args(rng, s, c, tmax=now)
+    ref = ops.row_update(**a, coeffs=K, eps=EPS, backend="ref")
+    pal = ops.row_update(**a, coeffs=K, eps=EPS, backend="pallas_interpret")
+    for r, p_ in zip(ref, pal):
+        np.testing.assert_allclose(r, p_, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_coeff_variants():
+    """Different tau triplets (e.g. rodent vs human presets) stay correct."""
+    for taus in [(2.5, 100.0, 1000.0), (5.0, 50.0, 500.0), (1.0, 20.0, 5000.0)]:
+        k = make_coeffs(*taus)
+        rng = np.random.default_rng(hash(taus) % 2**31)
+        a = _row_args(rng, 8, 100)
+        ref = ops.row_update(**a, coeffs=k, eps=EPS, backend="ref")
+        pal = ops.row_update(**a, coeffs=k, eps=EPS,
+                             backend="pallas_interpret")
+        for r, p_ in zip(ref, pal):
+            np.testing.assert_allclose(r, p_, rtol=3e-6, atol=3e-6)
+
+
+def test_padding_cells_do_not_leak():
+    """Padded lanes/rows must not alter logical outputs: results for a
+    (S, C) block must be independent of the padding added to reach tiles."""
+    rng = np.random.default_rng(0)
+    a = _row_args(rng, 9, 37)          # forces both-dim padding
+    out_a = ops.row_update(**a, coeffs=K, eps=EPS,
+                           backend="pallas_interpret")
+    # same logical content embedded in a bigger call via ref on exact shapes
+    out_b = ops.row_update(**a, coeffs=K, eps=EPS, backend="ref")
+    for x, y in zip(out_a, out_b):
+        assert x.shape == y.shape == (9, 37)
+        np.testing.assert_allclose(x, y, rtol=3e-6, atol=3e-6)

@@ -1,0 +1,58 @@
+"""Row-Merge layout: bijection property + paper Fig 10 objective."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (RowMergeLayout, best_tile,
+                               dram_row_misses_per_s, paper_fig10_table,
+                               tile_bytes_touched_per_s)
+
+
+def test_fig10_minimum_at_x_10():
+    """Paper Fig 10: X=10 minimizes DRAM row misses, ~5x better than X=1."""
+    table = paper_fig10_table()
+    best_x = min(table, key=table.get)
+    assert best_x == 10
+    assert table[1] / table[10] >= 4.5   # "5 times less compared to direct"
+
+
+def test_fig10_closed_form_values():
+    # rowmiss(X) = 10000 * (X + 100/X) * 2
+    assert dram_row_misses_per_s(1) == 10000 * 101 * 2
+    assert dram_row_misses_per_s(10) == 10000 * 20 * 2
+    assert dram_row_misses_per_s(100) == 10000 * 101 * 2
+
+
+@settings(max_examples=40, deadline=None)
+@given(r=st.integers(1, 300), c=st.integers(1, 200), seed=st.integers(0, 999))
+def test_pack_unpack_bijection(r, c, seed):
+    lay = RowMergeLayout(rows=r, cols=c, xr=8, xc=128)
+    rng = np.random.default_rng(seed)
+    plane = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
+    np.testing.assert_array_equal(lay.unpack(lay.pack(plane)), plane)
+
+
+def test_tiled_shape_is_tpu_aligned():
+    lay = RowMergeLayout(rows=10_000, cols=100)
+    t = lay.pack(jnp.zeros((10_000, 100), jnp.float32))
+    assert t.shape == (1250, 1, 8, 128)
+    assert t.shape[-1] % 128 == 0 and t.shape[-2] % 8 == 0
+
+
+def test_tpu_tile_objective_prefers_balanced_tiles():
+    """With BCPNN's 100:1 row:column access ratio the objective must punish
+    huge row-tiles (column reads explode) and huge col-tiles alike —
+    the same trade-off as the paper's X sweep."""
+    R, C, rr, cr = 10_000, 100, 10_000.0, 100.0
+    best, scored = best_tile(R, C, rr, cr)
+    # degenerate huge tiles must lose to the (8..32, 128) family
+    assert scored[best] <= scored[(256, 128)]
+    assert scored[best] <= scored[(8, 512)]
+    # and the model reproduces the paper's asymmetry: row cost ~ flat in xr,
+    # column cost shrinks with xr
+    a = tile_bytes_touched_per_s(8, 128, R, C, rr, cr)
+    b = tile_bytes_touched_per_s(64, 128, R, C, rr, cr)
+    col_a = 2 * 8 * 128 * 20 * cr * (-(-R // 8))
+    col_b = 2 * 64 * 128 * 20 * cr * (-(-R // 64))
+    assert abs(col_a - col_b) / col_a < 0.01  # same column bytes (mod ceil)...
+    assert b > a                               # ...but row cost grows with xr

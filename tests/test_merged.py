@@ -1,0 +1,122 @@
+"""eBrainIII merged-column-update mode (core/merged.py) vs the golden model.
+
+The paper's §IX roadmap eliminates column updates by reconstructing them at
+the next row touch. These tests prove the reconstruction is exact (up to
+ring truncation, which the test regimes keep un-exercised) against the
+dense eager reference — same spikes, same trace state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (flush, init_network, make_connectivity, network_tick,
+                        test_scale as tiny_scale)
+from repro.core import merged as M
+from repro.core import hcu as H
+from repro.core.params import BCPNNParams
+
+
+def _ext_stream(p, seed, n_ticks, width=8, lam=5.0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_ticks):
+        e = np.full((p.n_hcu, width), p.rows, np.int32)
+        for h in range(p.n_hcu):
+            n = min(width, rng.poisson(lam))
+            e[h, :n] = rng.integers(0, p.rows, n)
+        yield jnp.asarray(e)
+
+
+@pytest.mark.parametrize("seed,n_ticks,out_rate", [(0, 40, 0.3), (7, 20, 0.5)])
+def test_merged_matches_eager(seed, n_ticks, out_rate):
+    # Exactness holds while no column receives more than RING_DEPTH output
+    # spikes between consecutive touches of any row. The paper's regime
+    # (rows touched every ~R/10 ms, per-column fire rate out_rate/C) gives
+    # Poisson(~1) spikes per interval — overflow P < 1e-6 at depth 8. The
+    # test uses few rows + high input rate so every row is touched every
+    # ~5 ticks, scaling that ratio faithfully even with WTA concentration.
+    p = BCPNNParams(n_hcu=4, rows=24, cols=16, fanout=4, active_queue=8,
+                    max_delay=8, out_rate=out_rate)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    s_m = init_network(p, key, merged=True)
+    s_e = init_network(p, key)
+    fired_m, fired_e = [], []
+    for ext in _ext_stream(p, seed, n_ticks):
+        s_m, fm = network_tick(s_m, conn, ext, p, merged=True,
+                               cap_fire=p.n_hcu)
+        s_e, fe = network_tick(s_e, conn, ext, p, eager=True,
+                               cap_fire=p.n_hcu)
+        fired_m.append(np.asarray(fm))
+        fired_e.append(np.asarray(fe))
+    np.testing.assert_array_equal(np.stack(fired_m), np.stack(fired_e))
+    assert (np.stack(fired_m) >= 0).sum() > 0, "must exercise output spikes"
+
+    now = s_m.t
+    a = jax.vmap(lambda s, g: M.flush_merged(s, g, now, p))(s_m.hcus,
+                                                            s_m.jring)
+    b = jax.vmap(lambda s: flush(s, now, p))(s_e.hcus)
+    for name in ["zij", "eij", "pij", "wij", "zi", "pi", "zj", "pj", "h"]:
+        np.testing.assert_allclose(
+            getattr(a, name), getattr(b, name), rtol=4e-4, atol=4e-4,
+            err_msg=f"merged-mode trace {name} diverged")
+
+
+def test_merged_exact_under_ring_overflow():
+    """Pathological regime: out_rate=1.0 concentrates >RING_DEPTH fires on
+    one column between row touches — the overflow-triggered column flush
+    must keep the mode exact (this regime diverged before the flush)."""
+    p = BCPNNParams(n_hcu=2, rows=64, cols=8, fanout=2, active_queue=8,
+                    max_delay=8, out_rate=1.0)
+    key = jax.random.PRNGKey(3)
+    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    s_m = init_network(p, key, merged=True)
+    s_e = init_network(p, key)
+    for ext in _ext_stream(p, 11, 50, lam=2.0):
+        s_m, fm = network_tick(s_m, conn, ext, p, merged=True,
+                               cap_fire=p.n_hcu)
+        s_e, fe = network_tick(s_e, conn, ext, p, eager=True,
+                               cap_fire=p.n_hcu)
+        np.testing.assert_array_equal(np.asarray(fm), np.asarray(fe))
+    now = s_m.t
+    a = jax.vmap(lambda s, g: M.flush_merged(s, g, now, p))(s_m.hcus,
+                                                            s_m.jring)
+    b = jax.vmap(lambda s: flush(s, now, p))(s_e.hcus)
+    np.testing.assert_allclose(a.pij, b.pij, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(a.eij, b.eij, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(a.zij, b.zij, rtol=5e-4, atol=5e-4)
+
+
+def test_ring_push_and_overflow():
+    p = tiny_scale(n_hcu=1, rows=32, cols=4)
+    ring = M.init_ring(p)
+    for t in (3, 5, 9, 11, 15):
+        ring = M.push_ring(ring, jnp.asarray(2), jnp.asarray(t))
+    # column 2 holds the LAST four times, sorted ascending
+    np.testing.assert_array_equal(ring[2][-4:], [5, 9, 11, 15])
+    assert int(ring[0, -1]) == M.RING_EMPTY
+    # masked push (j = -1) is a no-op
+    ring2 = M.push_ring(ring, jnp.asarray(-1), jnp.asarray(20))
+    np.testing.assert_array_equal(ring, ring2)
+
+
+def test_flush_merged_idempotent():
+    p = tiny_scale(n_hcu=1, rows=32, cols=8)
+    st = H.init_hcu_state(p)
+    ring = M.init_ring(p)
+    rows = jnp.full((4,), p.rows, jnp.int32).at[0].set(3)
+    st, *_ = M.row_updates_merged(st, ring, rows, 2, p)
+    ring = M.push_ring(ring, jnp.asarray(5), jnp.asarray(4))
+    f1 = M.flush_merged(st, ring, 10, p)
+    f2 = M.flush_merged(f1, ring, 10, p)
+    for x, y in zip(f1, f2):
+        np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-7)
+
+
+def test_worst_case_budget_reduction():
+    """EQ2 with merged columns: human scale loses the 10,000-cell term."""
+    from repro.core.params import human_scale
+    out = M.worst_case_cells_merged(human_scale())
+    assert out["classic_cells"] == 36 * 100 + 10_000
+    assert out["merged_cells"] == 3600
+    assert 3.7 < out["reduction"] < 3.8

@@ -1,0 +1,69 @@
+"""Queue dimensioning (paper §IV, Fig 7) and runtime queue behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (enqueue_spikes, init_network, make_connectivity,
+                        network_tick, test_scale as tiny_scale)
+from repro.core.queues import (drop_probability_per_ms,
+                               expected_drops_per_month,
+                               min_queue_for_monthly_drop_budget, p_x_or_more)
+
+
+def test_eq1_poisson_tail_paper_anchors():
+    """Fig 7 anchor points: P(0+)=1, P(10+)~0.5 at lambda=10, ~0 after 22+."""
+    assert p_x_or_more(0, 10.0) == 1.0
+    assert abs(p_x_or_more(10, 10.0) - 0.542) < 0.02   # ~0.5 per the paper
+    assert p_x_or_more(23, 10.0) < 3e-4                # "near 0 after 22+"
+
+
+def test_queue_36_monthly_drop_budget():
+    """Paper: queue of 36 => ~30% probability of one drop per month."""
+    drops = expected_drops_per_month(36, 10.0)
+    assert 0.05 < drops < 1.0, f"expected O(0.3)/month, got {drops}"
+    # and the minimal queue for a <=1/month budget is in the mid-30s
+    q = min_queue_for_monthly_drop_budget(10.0, budget=1.0)
+    assert 30 <= q <= 36
+
+
+def test_drop_probability_monotone_in_queue():
+    probs = [drop_probability_per_ms(q, 10.0) for q in (5, 10, 22, 36)]
+    assert all(a > b for a, b in zip(probs, probs[1:]))
+
+
+def test_enqueue_respects_capacity_and_counts_drops():
+    p = tiny_scale(n_hcu=2, rows=64, cols=16)      # active_queue == 8
+    st = init_network(p, jax.random.PRNGKey(0))
+    m = 3 * p.active_queue                          # oversubscribe one bucket
+    dest_h = jnp.zeros((m,), jnp.int32)
+    dest_r = jnp.arange(m, dtype=jnp.int32) % p.rows
+    delay = jnp.full((m,), 2, jnp.int32)
+    valid = jnp.ones((m,), bool)
+    st2 = enqueue_spikes(st, dest_h, dest_r, delay, valid, p, p.n_hcu)
+    b = int((st.t + 2) % p.max_delay)
+    assert int(st2.delay_count[0, b]) == p.active_queue
+    assert int(st2.drops_in) == m - p.active_queue
+    # stored rows are a subset of the sent rows; no slot left empty
+    rows = np.asarray(st2.delay_rows[0, b])
+    assert (rows < p.rows).all()
+
+
+def test_delayed_delivery_timing():
+    """A spike with delay d must be consumed exactly d ticks later."""
+    p = tiny_scale(n_hcu=1, rows=32, cols=16)
+    st = init_network(p, jax.random.PRNGKey(0))
+    d = 3
+    st = enqueue_spikes(st, jnp.array([0]), jnp.array([5]),
+                        jnp.array([d]), jnp.array([True]), p, 1)
+    conn = make_connectivity(p, jax.random.PRNGKey(1), n_hcu=1)
+    empty = jnp.full((1, 4), p.rows, jnp.int32)
+    for i in range(1, d + 1):
+        bucket = (st.t + 1) % p.max_delay
+        pending = int(st.delay_count[0, bucket])
+        st, _ = network_tick(st, conn, empty, p)
+        if i == d:
+            assert pending == 1, "spike must be in the consumed bucket at t+d"
+        else:
+            assert pending == 0
+    # after consumption the bucket is recycled
+    assert int(st.delay_count.sum()) == 0 or int(st.drops_in) == 0

@@ -1,0 +1,69 @@
+"""Property tests for the closed-form lazy trace algebra (repro.core.traces)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.traces import ZEP, decay_zep, euler_zep, make_coeffs
+
+K = make_coeffs(2.5, 100.0, 1000.0)
+
+pos = st.floats(min_value=0.0, max_value=5.0, allow_nan=False, width=32)
+gap = st.floats(min_value=0.0, max_value=500.0, allow_nan=False, width=32)
+
+
+@settings(max_examples=200, deadline=None)
+@given(z=pos, e=pos, p=pos, d1=gap, d2=gap)
+def test_semigroup(z, e, p, d1, d2):
+    """decay(d1+d2) == decay(d2) o decay(d1) — the correctness basis of lazy
+    evaluation (skipping N ticks == N per-tick decays)."""
+    zep0 = ZEP(jnp.float32(z), jnp.float32(e), jnp.float32(p))
+    a = decay_zep(decay_zep(zep0, d1, K), d2, K)
+    b = decay_zep(zep0, d1 + d2, K)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(z=pos, e=pos, p=pos)
+def test_identity_at_zero_gap(z, e, p):
+    zep0 = ZEP(jnp.float32(z), jnp.float32(e), jnp.float32(p))
+    out = decay_zep(zep0, 0.0, K)
+    for x, y in zip(out, zep0):
+        np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("dt", [1.0, 5.0, 25.0])
+def test_matches_euler_ode(dt):
+    """Closed form must agree with fine-step Euler integration of the ODEs."""
+    zep0 = ZEP(jnp.float32(1.0), jnp.float32(0.3), jnp.float32(0.05))
+    exact = decay_zep(zep0, dt, K)
+    approx = euler_zep(zep0, dt, n_steps=20000, K=None) if False else \
+        euler_zep(zep0, dt, 20000, K)
+    for x, y in zip(exact, approx):
+        np.testing.assert_allclose(x, y, rtol=3e-3, atol=1e-5)
+
+
+def test_monotone_decay_to_zero():
+    zep = ZEP(jnp.float32(1.0), jnp.float32(1.0), jnp.float32(1.0))
+    prev = 3.0
+    for d in [10.0, 100.0, 1000.0, 10000.0]:
+        out = decay_zep(zep, d, K)
+        total = float(out.z + out.e + out.p)
+        assert total < prev
+        prev = total
+    assert total < 1e-3
+
+
+def test_decay_vectorized_matches_scalar():
+    rng = np.random.default_rng(0)
+    z, e, p = (jnp.asarray(rng.uniform(0, 2, (7, 11)), jnp.float32)
+               for _ in range(3))
+    d = jnp.asarray(rng.uniform(0, 50, (7, 11)), jnp.float32)
+    out = decay_zep(ZEP(z, e, p), d, K)
+    for i in range(7):
+        for j in range(0, 11, 3):
+            ref = decay_zep(ZEP(z[i, j], e[i, j], p[i, j]), d[i, j], K)
+            for a, b in zip((out.z[i, j], out.e[i, j], out.p[i, j]), ref):
+                np.testing.assert_allclose(a, b, rtol=1e-6)

