@@ -1,0 +1,16 @@
+# Tier-1 verification (mirrors .github/workflows/ci.yml)
+PY ?= python
+
+.PHONY: verify test bench bench-json
+
+verify: test bench
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast
+
+# full wall-clock benchmarks + BENCH_tick_loop.json (perf trajectory)
+bench-json:
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast --json

@@ -15,34 +15,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (init_network, make_connectivity, network_tick)
+from repro.core import init_network, make_connectivity, network_run
 from repro.core.params import BCPNNParams
 
 
-def _bench(p, eager: bool, n_ticks: int = 20, warmup: int = 3,
-           merged: bool = False):
+def _bench(p, eager: bool, n_ticks: int = 64, merged: bool = False):
+    """Per-tick cost through the scan-compiled runtime — measures the
+    pipelines' compute, not per-tick dispatch (benchmarks/tick_loop.py
+    measures that separately)."""
     key = jax.random.PRNGKey(0)
     conn = make_connectivity(p, jax.random.fold_in(key, 1))
-    st = init_network(p, key, merged=merged)
     rng = np.random.default_rng(0)
 
-    def ext():
-        out = np.full((p.n_hcu, 8), p.rows, np.int32)
+    ext = np.full((n_ticks, p.n_hcu, 8), p.rows, np.int32)
+    for t in range(n_ticks):
         for h in range(p.n_hcu):
             n = min(8, rng.poisson(4))
-            out[h, :n] = rng.integers(0, p.rows, n)
-        return jnp.asarray(out)
+            ext[t, h, :n] = rng.integers(0, p.rows, n)
+    ext = jnp.asarray(ext)
 
-    exts = [ext() for _ in range(n_ticks + warmup)]
-    for e in exts[:warmup]:
-        st, _ = network_tick(st, conn, e, p, eager=eager, merged=merged,
-                             cap_fire=p.n_hcu)
+    st = init_network(p, key, merged=merged)       # warmup/compile pass
+    st, _ = network_run(st, conn, ext, p, chunk=n_ticks, eager=eager,
+                        merged=merged, cap_fire=p.n_hcu)
     jax.block_until_ready(st.hcus.zij)
+    st = init_network(p, key, merged=merged)
     t0 = time.perf_counter()
-    for e in exts[warmup:]:
-        st, _ = network_tick(st, conn, e, p, eager=eager, merged=merged,
-                             cap_fire=p.n_hcu)
-    jax.block_until_ready(st.hcus.zij)
+    st, f = network_run(st, conn, ext, p, chunk=n_ticks, eager=eager,
+                        merged=merged, cap_fire=p.n_hcu)
+    jax.block_until_ready(f)
     return (time.perf_counter() - t0) / n_ticks
 
 

@@ -1,25 +1,43 @@
 """Benchmark harness: one function per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--json]
 
-Prints ``name,us_per_call,derived`` CSV rows. The dry-run roofline tables
+Prints ``name,us_per_call,derived`` CSV rows. ``--json`` additionally runs
+the tick-loop runtime benchmark (host loop vs scan-compiled network_run,
+benchmarks/tick_loop.py) and writes BENCH_tick_loop.json so the perf
+trajectory is tracked across PRs. The dry-run roofline tables
 (EXPERIMENTS.md §Roofline) are produced separately by repro.launch.dryrun +
 benchmarks.roofline_report, since they need the 512-device environment.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import pathlib
 import sys
 import traceback
+
+# XLA's thunk runtime (default since jax 0.4.3x) has a high fixed per-op
+# dispatch cost on CPU that dominates the many-small-op BCPNN tick graph;
+# the legacy runtime executes the same HLO ~3-4x faster at these sizes.
+# Applied process-wide (before jax initializes), i.e. identically to every
+# measured pipeline — host loop and scan runtime alike.
+if "xla_cpu_use_thunk_runtime" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_cpu_use_thunk_runtime=false").strip()
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the measured (wall-clock) benchmarks")
+    ap.add_argument("--json", action="store_true",
+                    help="run the tick-loop benchmark (even with --fast) and "
+                         "write BENCH_tick_loop.json")
     args = ap.parse_args()
 
-    from benchmarks import bcpnn_tables, fig14_lazy_vs_eager
+    from benchmarks import bcpnn_tables, fig14_lazy_vs_eager, tick_loop
 
     suites = [
         bcpnn_tables.table1_requirements,
@@ -34,6 +52,8 @@ def main() -> None:
             fig14_lazy_vs_eager.lazy_vs_eager,
             fig14_lazy_vs_eager.kernel_row_update,
         ]
+        if not args.json:
+            suites += [tick_loop.tick_loop]
 
     print("name,us_per_call,derived")
     failed = 0
@@ -44,6 +64,20 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed += 1
+
+    if args.json:
+        try:
+            results = tick_loop.measure_sizes()
+            for name, us, derived in tick_loop.tick_loop(results):
+                print(f"{name},{us:.3f},{derived:.6g}")
+            out = pathlib.Path(__file__).resolve().parent.parent \
+                / "BENCH_tick_loop.json"
+            out.write_text(json.dumps(results, indent=2) + "\n")
+            print(f"# wrote {out}", file=sys.stderr)
+        except Exception:
+            traceback.print_exc()
+            failed += 1
+
     if failed:
         sys.exit(1)
 

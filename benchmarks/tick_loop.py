@@ -1,0 +1,109 @@
+"""Tick-loop runtime benchmark: per-tick host loop vs scan-compiled runtime.
+
+The tentpole perf claim of the compiled runtime (core/network.py): the
+per-tick host loop pays one jit dispatch + one device sync per simulated ms,
+which dominates wall-clock long before the fused cell math does; `network_run`
+compiles the whole loop with lax.scan and pays one dispatch per chunk.
+
+Two sizes are measured (CPU `ref` backend):
+  * default — small planes, the dispatch-bound regime the scan runtime is
+    built to eliminate (this is the size the ≥5x acceptance gate runs at);
+  * rodent16 — rodent-ish R/C dimensioning (R=1200, C=70, 16 HCUs). On CPU
+    this regime is bounded by XLA's copy-per-scatter on scan carries rather
+    than dispatch, so the speedup is smaller; tracked across PRs to catch
+    regressions on both axes.
+
+`python -m benchmarks.run --json` writes the results to BENCH_tick_loop.json.
+benchmarks.run pins `--xla_cpu_use_thunk_runtime=false` (legacy XLA CPU
+runtime) for the whole process — it executes the identical HLO with ~3-4x
+lower per-op overhead, for the host loop and the scan runtime alike.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import init_network, make_connectivity, network_run, run
+from repro.core.params import BCPNNParams
+
+# dispatch-bound default: the acceptance gate (scan >= 5x host ticks/sec)
+DEFAULT = ("default", BCPNNParams(n_hcu=8, rows=128, cols=16, fanout=8,
+                                  active_queue=16, max_delay=16))
+RODENT = ("rodent16", BCPNNParams(n_hcu=16, rows=1200, cols=70, fanout=16,
+                                  active_queue=16, max_delay=16))
+
+N_SCAN = 128         # ticks per measured scan call (one compiled chunk)
+N_HOST = 32          # ticks per measured host-loop pass
+REPEATS = 3          # median over repeats (host dispatch cost is noisy)
+
+
+def _ext_tensor(p, T, width=8, lam=4.0, seed=0):
+    rng = np.random.default_rng(seed)
+    out = np.full((T, p.n_hcu, width), p.rows, np.int32)
+    for t in range(T):
+        for h in range(p.n_hcu):
+            n = min(width, rng.poisson(lam))
+            out[t, h, :n] = rng.integers(0, p.rows, n)
+    return jnp.asarray(out)
+
+
+def _measure(p, backend="ref"):
+    """Returns (host_us_per_tick, scan_us_per_tick), medians over REPEATS."""
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    ext = _ext_tensor(p, N_SCAN)
+    kw = dict(backend=backend)
+
+    # warm both compilation caches
+    st, _ = run(init_network(p, key), conn, lambda t: ext[(t - 1) % N_SCAN],
+                2, p, **kw)
+    st, _ = network_run(init_network(p, key), conn, ext, p, chunk=N_SCAN, **kw)
+    jax.block_until_ready(st.hcus.zij)
+
+    host_t, scan_t = [], []
+    for _ in range(REPEATS):
+        st = init_network(p, key)
+        t0 = time.perf_counter()
+        st, f = run(st, conn, lambda t: ext[(t - 1) % N_SCAN], N_HOST, p, **kw)
+        jax.block_until_ready(f)
+        host_t.append((time.perf_counter() - t0) / N_HOST)
+
+        st = init_network(p, key)
+        t0 = time.perf_counter()
+        st, f = network_run(st, conn, ext, p, chunk=N_SCAN, **kw)
+        jax.block_until_ready(f)
+        scan_t.append((time.perf_counter() - t0) / N_SCAN)
+    return statistics.median(host_t) * 1e6, statistics.median(scan_t) * 1e6
+
+
+def measure_sizes(sizes=(DEFAULT, RODENT)):
+    """Returns {name: {host_us_per_tick, scan_us_per_tick, host_ticks_per_sec,
+    scan_ticks_per_sec, speedup, n_hcu, rows, cols}}."""
+    results = {}
+    for name, p in sizes:
+        host_us, scan_us = _measure(p)
+        results[name] = {
+            "n_hcu": p.n_hcu, "rows": p.rows, "cols": p.cols,
+            "host_us_per_tick": host_us, "scan_us_per_tick": scan_us,
+            "host_ticks_per_sec": 1e6 / host_us,
+            "scan_ticks_per_sec": 1e6 / scan_us,
+            "speedup": host_us / scan_us,
+        }
+    return results
+
+
+def tick_loop(results=None):
+    """benchmarks.run suite hook: CSV rows from the measured sizes."""
+    results = results or measure_sizes()
+    rows = []
+    for name, r in results.items():
+        rows.append((f"tick_loop/{name}/host_us_per_tick",
+                     r["host_us_per_tick"], r["host_ticks_per_sec"]))
+        rows.append((f"tick_loop/{name}/scan_us_per_tick",
+                     r["scan_us_per_tick"], r["scan_ticks_per_sec"]))
+        rows.append((f"tick_loop/{name}/scan_speedup", 0.0, r["speedup"]))
+    return rows

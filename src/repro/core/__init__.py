@@ -3,7 +3,8 @@
 Public API:
   BCPNNParams / human_scale / rodent_scale / test_scale  — model dimensioning
   HCUState, init_hcu_state, hcu_tick_pre, column_update, flush — HCU semantics
-  NetworkState, init_network, make_connectivity, network_tick, run — networks
+  NetworkState, init_network, make_connectivity, network_tick — networks
+  network_run / stage_external — scan-compiled tick runtime (run = host loop)
   traces — closed-form lazy ZEP trace algebra
   RowMergeLayout — BCPNN-specific synaptic data organization
 """
@@ -12,8 +13,9 @@ from repro.core.hcu import (HCUState, init_hcu_state, hcu_tick_pre,
                             column_update, row_updates, periodic_update,
                             flush, dedup_rows)
 from repro.core.network import (NetworkState, Connectivity, init_network,
-                                make_connectivity, network_tick, run,
-                                enqueue_spikes, column_updates_batched)
+                                make_connectivity, network_tick, network_run,
+                                stage_external, run, enqueue_spikes,
+                                column_updates_batched)
 from repro.core.layout import RowMergeLayout
 from repro.core import traces, queues
 
@@ -22,6 +24,7 @@ __all__ = [
     "HCUState", "init_hcu_state", "hcu_tick_pre", "column_update",
     "row_updates", "periodic_update", "flush", "dedup_rows",
     "NetworkState", "Connectivity", "init_network", "make_connectivity",
-    "network_tick", "run", "enqueue_spikes", "column_updates_batched",
+    "network_tick", "network_run", "stage_external", "run",
+    "enqueue_spikes", "column_updates_batched",
     "RowMergeLayout", "traces", "queues",
 ]

@@ -14,16 +14,39 @@ Because every HCU's state is self-contained ("no memory consistency
 problem", §II.B), HCU shards are freely relocatable: elastic re-sharding and
 failure recovery move whole HCUs between devices without any consistency
 protocol (see repro.runtime.elastic).
+
+Two drivers, same per-device tick body (`_local_tick`):
+  * make_dist_tick — one compiled sharded tick per call (host loop);
+  * make_dist_run  — the scan-compiled twin of `network.network_run`: the
+    whole pre-staged (T, H, A_ext) input runs in ONE compiled computation,
+    all_to_all exchanges included — zero host round-trips per tick.
 """
 from __future__ import annotations
 
 import functools
 from typing import NamedTuple
 
+import inspect
+
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# replication checking kwarg was renamed check_rep -> check_vma across jax
+# versions; resolve whichever this jax has (disabled either way: the spike
+# exchange's all_to_all is deliberately unreplicated).
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: False})
 
 from repro.core import hcu as H
 from repro.core import network as N
@@ -93,15 +116,11 @@ def _local_tick(state: N.NetworkState, conn: N.Connectivity,
     h_local = state.delay_rows.shape[0]
     ndev = jax.lax.psum(1, axis)
     dev = jax.lax.axis_index(axis)
-    D = p.max_delay
     t = state.t + 1
 
     # ---- consume bucket, row updates, WTA (identical to single-device) ----
-    bucket = state.delay_rows[:, t % D, :]
+    state, bucket = N.consume_bucket(state, t, p, h_local)
     rows = jnp.concatenate([bucket, ext_rows], axis=1)
-    state = state._replace(
-        delay_rows=state.delay_rows.at[:, t % D, :].set(p.rows),
-        delay_count=state.delay_count.at[:, t % D].set(0))
 
     k_t = jax.random.fold_in(state.base_key, t)
     # RNG folded by GLOBAL hcu id => invariant to device count (elasticity)
@@ -133,8 +152,7 @@ def _local_tick(state: N.NetworkState, conn: N.Connectivity,
     dest_dev = dest_h // h_local
     dest_loc = dest_h % h_local
     key = jnp.where(valid, dest_dev, ndev)
-    order = jnp.argsort(key)
-    rank = N._rank_within_key(key, order)
+    rank = N._rank_within_key(key)
     ok = valid & (rank < rc.cap_route)
     route_drops = jnp.sum(valid) - jnp.sum(ok)
     flat = jnp.where(ok, dest_dev * rc.cap_route + rank, ndev * rc.cap_route)
@@ -167,20 +185,25 @@ def _local_tick(state: N.NetworkState, conn: N.Connectivity,
     return state._replace(drops_fire=state.drops_fire + route_drops), fired
 
 
+def _shard_specs(axes):
+    """(state, conn, per-HCU, replicated) PartitionSpecs for an HCU shard."""
+    spec_h = P(axes)      # shard leading (HCU) dim over the flattened axes
+    rep = P()
+    state_specs = N.NetworkState(
+        hcus=H.HCUState(*([spec_h] * len(H.HCUState._fields))),
+        delay_rows=spec_h, delay_count=spec_h,
+        t=rep, drops_in=rep, drops_fire=rep, base_key=rep)
+    conn_specs = N.Connectivity(spec_h, spec_h, spec_h)
+    return state_specs, conn_specs, spec_h, rep
+
+
 def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
                    axis="hcu", eager: bool = False,
                    backend: str | None = None, donate: bool = True):
     """Build the sharded tick: state/conn/ext sharded over `axis`, which may
     be a single mesh axis name or a tuple of axis names (flattened)."""
     axes = axis if isinstance(axis, tuple) else (axis,)
-    spec_h = P(axes)      # shard leading (HCU) dim over the flattened axes
-    rep = P()
-
-    state_specs = N.NetworkState(
-        hcus=H.HCUState(*([spec_h] * len(H.HCUState._fields))),
-        delay_rows=spec_h, delay_count=spec_h,
-        t=rep, drops_in=rep, drops_fire=rep, base_key=rep)
-    conn_specs = N.Connectivity(spec_h, spec_h, spec_h)
+    state_specs, conn_specs, spec_h, _ = _shard_specs(axes)
 
     fn = shard_map(
         functools.partial(_local_tick, p=p, rc=rc, axis=axes,
@@ -188,11 +211,41 @@ def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
         mesh=mesh,
         in_specs=(state_specs, conn_specs, spec_h),
         out_specs=(state_specs, spec_h),
-        check_vma=False,
     )
     # donating the state lets XLA scatter the touched rows/columns in place
     # — the lazy model's bytes-per-tick then match the paper's traffic
     # budget instead of copying whole synaptic planes (§Perf iteration)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def make_dist_run(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
+                  axis="hcu", eager: bool = False,
+                  backend: str | None = None, donate: bool = True):
+    """Scan-compiled multi-tick sharded driver (network_run's sharded twin).
+
+    Returns fn(state, conn, ext) -> (state', fired (T, H)) where ext is the
+    pre-staged (T, H, A_ext) tensor sharded on the HCU axis. The whole
+    T-tick loop — including the per-tick all_to_all spike exchange — runs
+    inside ONE compiled computation: zero host round-trips, exactly the
+    per-tick trajectory of `make_dist_tick` applied T times.
+    """
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    state_specs, conn_specs, spec_h, _ = _shard_specs(axes)
+    ext_spec = P(None, axes)            # (T, H_local, A): time replicated
+    fired_spec = P(None, axes)
+
+    def _local_run(state, conn, ext):
+        def body(s, e):
+            return _local_tick(s, conn, e, p=p, rc=rc, axis=axes,
+                               eager=eager, backend=backend)
+        return jax.lax.scan(body, state, ext)
+
+    fn = shard_map(
+        _local_run,
+        mesh=mesh,
+        in_specs=(state_specs, conn_specs, ext_spec),
+        out_specs=(state_specs, fired_spec),
+    )
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
 

@@ -25,6 +25,12 @@ from repro.core.params import BCPNNParams
 from repro.core.traces import ZEP, bias, decay_zep, make_coeffs
 from repro.kernels import ops
 
+# Below this many cells the scatter-free write paths (fused where / one-hot
+# reduce) win on XLA CPU's fixed per-scatter cost; above it they would touch
+# O(cells) per tick and break the lazy-traffic property (paper EQ2), so the
+# O(touched) scatter forms are kept for rodent/human scales.
+DENSE_CELLS_MAX = 1 << 16
+
 
 class HCUState(NamedTuple):
     # synaptic ij-matrix planes, (R, C)
@@ -84,10 +90,18 @@ def dedup_rows(rows: jnp.ndarray, n_rows: int):
     index n_rows with count 0, which gathers clipped (harmless) and scatters
     dropped (JAX OOB-scatter drop semantics).
     """
+    # O(A log A) sort + segment bounds via cummax/cummin (replaces the old
+    # all-pairs O(A^2) comparison matrix; scatter-free — each segment's
+    # count is its end bound minus its start bound)
+    A = rows.shape[0]
     a = jnp.sort(rows)
-    eq = a[:, None] == a[None, :]
-    counts = jnp.sum(eq, axis=1).astype(jnp.float32)
-    first = jnp.concatenate([jnp.array([True]), a[1:] != a[:-1]])
+    idx = jnp.arange(A)
+    brk = a[1:] != a[:-1]
+    first = jnp.concatenate([jnp.array([True]), brk])
+    last = jnp.concatenate([brk, jnp.array([True])])
+    start = jax.lax.cummax(jnp.where(first, idx, 0))
+    end = jax.lax.cummin(jnp.where(last, idx + 1, A), reverse=True)
+    counts = (end - start).astype(jnp.float32)             # multiplicity per slot
     keep = first & (a < n_rows)
     rows_u = jnp.where(keep, a, n_rows)
     counts_u = jnp.where(keep, counts, 0.0)
@@ -122,18 +136,54 @@ def row_updates(st: HCUState, rows: jnp.ndarray, now, p: BCPNNParams,
     g = lambda plane: plane[safe]            # (A, C) gathered rows
     z1, e1, p1, w1, t1 = ops.row_update(
         g(st.zij), g(st.eij), g(st.pij), g(st.tij), now,
-        counts, st.zj, zep_i.p, st.pj, coeffs_ij(p), p.eps, backend=backend)
+        counts, st.zj, zep_i.p, st.pj, coeffs_ij(p), p.eps, backend=backend,
+        wij=g(st.wij))
 
-    scat = lambda plane, val: plane.at[rows_u].set(val, mode="drop")
-    st = st._replace(
-        zij=scat(st.zij, z1), eij=scat(st.eij, e1), pij=scat(st.pij, p1),
-        wij=scat(st.wij, w1), tij=scat(st.tij, t1),
-        zi=st.zi.at[rows_u].set(zi_new, mode="drop"),
-        ei=st.ei.at[rows_u].set(zep_i.e, mode="drop"),
-        pi=st.pi.at[rows_u].set(zep_i.p, mode="drop"),
-        ti=st.ti.at[rows_u].set(jnp.full_like(ti_g, now), mode="drop"),
-    )
+    st = write_rows(st, rows_u, now, p, z1, e1, p1, w1,
+                    zi_new, zep_i.e, zep_i.p)
     return st, w1, counts, rows_u
+
+
+def write_rows(st: HCUState, rows_u, now, p: BCPNNParams,
+               zij, eij, pij, wij, zi, ei, pi) -> HCUState:
+    """Write back a row update: (A, C) plane rows + (A,) i-vector entries at
+    `rows_u` (padding == p.rows dropped), stamping Tij/ti to `now`.
+
+    Two bitwise-identical branches (shared by lazy and merged row updates):
+    below DENSE_CELLS_MAX the timestamp writes are fused wheres and the
+    i-vector writes are fused one-hot reduces (exactly one hit per touched
+    row, so the select is bit-exact) — XLA CPU scatters carry a high fixed
+    per-op cost, and these were 5 of the 9 scatters on the tick hot path.
+    At scale the O(touched)-traffic scatter forms are kept (paper EQ2).
+    """
+    R = p.rows
+    scat = lambda plane, val: plane.at[rows_u].set(val, mode="drop")
+    if R * p.cols <= DENSE_CELLS_MAX:
+        onehot = (rows_u[:, None] == jnp.arange(R)[None, :])   # (A, R)
+        touched = jnp.any(onehot, axis=0)
+        ohf = onehot.astype(st.zi.dtype)
+        # sum-of-products (not a matvec: a fused bcast-mul + reduce avoids
+        # the tiny-matmul fixed cost on CPU); one nonzero per column
+        blendv = lambda vec, val: jnp.where(
+            touched, jnp.sum(val[:, None] * ohf, axis=0), vec)
+        return st._replace(
+            zij=scat(st.zij, zij), eij=scat(st.eij, eij),
+            pij=scat(st.pij, pij), wij=scat(st.wij, wij),
+            tij=jnp.where(touched[:, None], now, st.tij),
+            zi=blendv(st.zi, zi), ei=blendv(st.ei, ei),
+            pi=blendv(st.pi, pi),
+            ti=jnp.where(touched, now, st.ti),
+        )
+    return st._replace(
+        zij=scat(st.zij, zij), eij=scat(st.eij, eij), pij=scat(st.pij, pij),
+        wij=scat(st.wij, wij),
+        tij=scat(st.tij, jnp.full((rows_u.shape[0], p.cols), now, jnp.int32)),
+        zi=st.zi.at[rows_u].set(zi, mode="drop"),
+        ei=st.ei.at[rows_u].set(ei, mode="drop"),
+        pi=st.pi.at[rows_u].set(pi, mode="drop"),
+        ti=st.ti.at[rows_u].set(jnp.full(rows_u.shape, now, st.ti.dtype),
+                                mode="drop"),
+    )
 
 
 def periodic_update(st: HCUState, w_rows, counts, now, key, p: BCPNNParams):
@@ -168,15 +218,18 @@ def column_update(st: HCUState, j: jnp.ndarray, now, p: BCPNNParams,
     d_i = (now - st.ti).astype(st.zi.dtype)
     zep_i = decay_zep(ZEP(st.zi, st.ei, st.pi), d_i, coeffs_i(p))
 
-    g = lambda plane: jax.lax.dynamic_index_in_dim(plane.T, safe_j, 0, False)
+    # gather/scatter along the last axis directly — the transpose round trip
+    # (`plane.T.at[j].set(..).T`) materialized two full (R, C) copies per call
+    g = lambda plane: jax.lax.dynamic_index_in_dim(plane, safe_j, 1, False)
     z1, e1, p1, w1, t1 = ops.col_update(
         g(st.zij), g(st.eij), g(st.pij), g(st.tij), now,
-        zep_i.z, zep_i.p, st.pj[safe_j], coeffs_ij(p), p.eps, backend=backend)
+        zep_i.z, zep_i.p, st.pj[safe_j], coeffs_ij(p), p.eps, backend=backend,
+        w_col=g(st.wij))
 
     def put(plane, val):
-        col = jax.lax.dynamic_index_in_dim(plane.T, safe_j, 0, False)
+        col = jax.lax.dynamic_index_in_dim(plane, safe_j, 1, False)
         new = jnp.where(active, val, col)
-        return plane.T.at[safe_j].set(new).T
+        return plane.at[:, safe_j].set(new)
 
     st = st._replace(zij=put(st.zij, z1), eij=put(st.eij, e1),
                      pij=put(st.pij, p1), wij=put(st.wij, w1),

@@ -70,7 +70,6 @@ def row_updates_merged(st: H.HCUState, ring, rows, now, p: BCPNNParams,
     if touch_only:
         counts = jnp.zeros_like(counts)
     safe = jnp.minimum(rows_u, R - 1)
-    A = rows_u.shape[0]
 
     # --- i-vector lazy decay + spike increment ------------------------------
     zi_g, ei_g, pi_g, ti_g = (st.zi[safe], st.ei[safe], st.pi[safe],
@@ -102,18 +101,9 @@ def row_updates_merged(st: H.HCUState, ring, rows, now, p: BCPNNParams,
     # --- own (row) spike increment + Bayesian weight ------------------------
     z1 = zep.z + counts[:, None] * st.zj[None, :]
     w1 = bayesian_weight(zep.p, zep_i.p[:, None], st.pj[None, :], p.eps)
-    t1 = jnp.full((A, p.cols), now, jnp.int32)
 
-    scat = lambda plane, val: plane.at[rows_u].set(val, mode="drop")
-    st = st._replace(
-        zij=scat(st.zij, z1), eij=scat(st.eij, zep.e),
-        pij=scat(st.pij, zep.p), wij=scat(st.wij, w1),
-        tij=scat(st.tij, t1),
-        zi=st.zi.at[rows_u].set(zi_new, mode="drop"),
-        ei=st.ei.at[rows_u].set(zep_i.e, mode="drop"),
-        pi=st.pi.at[rows_u].set(zep_i.p, mode="drop"),
-        ti=st.ti.at[rows_u].set(jnp.full_like(ti_g, now), mode="drop"),
-    )
+    st = H.write_rows(st, rows_u, now, p, z1, zep.e, zep.p, w1,
+                      zi_new, zep_i.e, zep_i.p)
     return st, w1, counts, rows_u
 
 
@@ -125,7 +115,8 @@ def column_flush_merged(st: H.HCUState, ring, j, now, apply_fire,
     classic column write happens once per RING_DEPTH fires, not per fire
     (the eBrainIII amortization), and the mode stays EXACT."""
     kij, ki = H.coeffs_ij(p), H.coeffs_i(p)
-    gcol = lambda plane: jax.lax.dynamic_index_in_dim(plane.T, j, 0, False)
+    # last-axis gather/scatter: no (R, C) transpose materialization
+    gcol = lambda plane: jax.lax.dynamic_index_in_dim(plane, j, 1, False)
     z, e, pp = gcol(st.zij), gcol(st.eij), gcol(st.pij)     # (R,)
     t0f = gcol(st.tij).astype(jnp.float32)
     tif = st.ti.astype(jnp.float32)
@@ -149,9 +140,9 @@ def column_flush_merged(st: H.HCUState, ring, j, now, apply_fire,
     w1 = bayesian_weight(zep.p, pi_now, st.pj[j], p.eps)
 
     def put(plane, val):
-        old = jax.lax.dynamic_index_in_dim(plane.T, j, 0, False)
+        old = jax.lax.dynamic_index_in_dim(plane, j, 1, False)
         new = jnp.where(apply_fire, val, old)
-        return plane.T.at[j].set(new).T
+        return plane.at[:, j].set(new)
 
     return st._replace(
         zij=put(st.zij, z1), eij=put(st.eij, zep.e), pij=put(st.pij, zep.p),

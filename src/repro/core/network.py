@@ -20,6 +20,37 @@ Maps the paper's infrastructure (§II.A.3, §IV, §VI.D-E) onto JAX:
 Everything is a pure function of NetworkState; `eager=True` swaps the lazy
 HCU pipeline for the dense golden reference with identical queue semantics
 and RNG stream, so the two trajectories are directly comparable.
+
+Tick-loop runtimes
+------------------
+Two drivers share the exact same single-tick body (`_tick_core`), so their
+trajectories are bitwise identical under a fixed PRNG key:
+
+  * `run`          — per-tick host loop (one jit dispatch + host sync per
+                     ms). Kept as the baseline and for callers that need a
+                     host-side decision between ticks.
+  * `network_run`  — the production path: external input is pre-staged as a
+                     dense (T, H, A_ext) tensor (`stage_external`), and the
+                     loop is compiled with `jax.lax.scan` in chunks of
+                     `chunk` ticks (default 128). Per chunk there is exactly
+                     ONE dispatch; the NetworkState carry is donated, so
+                     state planes are threaded through the scan with zero
+                     host round-trips and no per-tick reallocation — the
+                     runtime analogue of the paper's ping-pong buffering
+                     (compute never waits on the host the way the ASIC never
+                     waits on DRAM, §VI.C).
+
+Scan-chunking contract:
+  * ext staging      — ext[k] is consumed by tick t0+k+1 where t0 is
+                       state.t at entry (matching `run`, which calls
+                       ext_fn(state.t + 1) before each tick);
+  * fired history    — returned as (T, H) int32, fired[k, h] = MCU index
+                       that HCU h fired at tick t0+k+1, or -1;
+  * chunking         — T need not divide by `chunk`: full chunks compile
+                       one scan, the remainder compiles a second (at most
+                       two compilations per (shape, mode));
+  * donation         — the caller's `state` is donated; use the returned
+                       state (same semantics as `network_tick`).
 """
 from __future__ import annotations
 
@@ -90,16 +121,51 @@ def init_network(p: BCPNNParams, key, n_hcu: int | None = None,
     )
 
 
-def _rank_within_key(keys: jnp.ndarray, order: jnp.ndarray) -> jnp.ndarray:
-    """Given sort order of `keys`, rank of each element within its key group."""
+# Below this message count the O(M^2) fused compare-reduce rank beats the
+# sort-based path on op overhead; above it the sort path's O(M log M) wins.
+_RANK_DENSE_MAX = 2048
+
+
+def _rank_within_key(keys: jnp.ndarray) -> jnp.ndarray:
+    """Rank of each element within its key group (stable: by position).
+
+    rank[i] == #{j < i : keys[j] == keys[i]} — identical to position within
+    the group under a stable sort.
+    """
+    M = keys.shape[0]
+    if M <= _RANK_DENSE_MAX:
+        eq = keys[:, None] == keys[None, :]                 # (M, M)
+        earlier = jnp.arange(M)[None, :] < jnp.arange(M)[:, None]
+        return jnp.sum(eq & earlier, axis=1).astype(keys.dtype)
+    order = jnp.argsort(keys)                               # stable
     sorted_keys = keys[order]
-    idx = jnp.arange(keys.shape[0])
-    is_first = jnp.concatenate([jnp.array([True]), sorted_keys[1:] != sorted_keys[:-1]])
-    first_pos = jnp.where(is_first, idx, 0)
-    first_pos = jax.lax.associative_scan(jnp.maximum, first_pos)
+    idx = jnp.arange(M)
+    is_first = jnp.concatenate([jnp.array([True]),
+                                sorted_keys[1:] != sorted_keys[:-1]])
+    first_pos = jax.lax.cummax(jnp.where(is_first, idx, 0))
     rank_sorted = idx - first_pos
-    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
-    return rank
+    return jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+
+def consume_bucket(state: NetworkState, t, p: BCPNNParams, n: int):
+    """Read this tick's delay bucket and clear it. Shared by the local and
+    sharded tick bodies (keeping their trajectories identical). On small
+    networks the clear is a fused iota-compare where (cheaper than the
+    dynamic-update-slice scatter on XLA CPU); at scale the slice update
+    touches only the one bucket."""
+    D = p.max_delay
+    bucket = state.delay_rows[:, t % D, :]                     # (H, A)
+    if n * D * p.active_queue <= H.DENSE_CELLS_MAX:
+        is_bucket = jnp.arange(D) == t % D                     # (D,)
+        state = state._replace(
+            delay_rows=jnp.where(is_bucket[None, :, None], p.rows,
+                                 state.delay_rows),
+            delay_count=jnp.where(is_bucket[None, :], 0, state.delay_count))
+    else:
+        state = state._replace(
+            delay_rows=state.delay_rows.at[:, t % D, :].set(p.rows),
+            delay_count=state.delay_count.at[:, t % D].set(0))
+    return state, bucket
 
 
 def enqueue_spikes(state: NetworkState, dest_h, dest_row, delay, valid,
@@ -113,9 +179,8 @@ def enqueue_spikes(state: NetworkState, dest_h, dest_row, delay, valid,
     D, A = p.max_delay, p.active_queue
     M = dest_h.shape[0]
     bucket = (state.t + delay) % D
-    key = jnp.where(valid, dest_h * D + bucket, n_hcu * D)      # invalid sort last
-    order = jnp.argsort(key)
-    rank = _rank_within_key(key, order)
+    key = jnp.where(valid, dest_h * D + bucket, n_hcu * D)      # invalid rank last
+    rank = _rank_within_key(key)
     base = state.delay_count[dest_h, bucket]                    # (M,)
     slot = base + rank
     ok = valid & (slot < A)
@@ -123,8 +188,17 @@ def enqueue_spikes(state: NetworkState, dest_h, dest_row, delay, valid,
     delay_rows = state.delay_rows.reshape(-1).at[flat_idx].set(
         dest_row, mode="drop").reshape(n_hcu, D, A)
     # bucket occupancy: add arrivals, clip at capacity
-    arrivals = jnp.zeros((n_hcu, D), jnp.int32).at[dest_h, bucket].add(
-        valid.astype(jnp.int32), mode="drop")
+    if M * n_hcu * D <= H.DENSE_CELLS_MAX:
+        # dense compare+reduce ((M, H*D) one-hot sum) instead of
+        # scatter-add: integer sum is order-independent (bitwise-identical)
+        # and avoids the scatter op cost on small networks. `key` is the
+        # (h, bucket) flat index with invalids sent out of range.
+        arrivals = jnp.sum(
+            (key[:, None] == jnp.arange(n_hcu * D)[None, :]).astype(jnp.int32),
+            axis=0).reshape(n_hcu, D)
+    else:
+        arrivals = jnp.zeros((n_hcu, D), jnp.int32).at[dest_h, bucket].add(
+            valid.astype(jnp.int32), mode="drop")
     new_count = jnp.minimum(state.delay_count + arrivals, A)
     dropped = jnp.sum(state.delay_count + arrivals - new_count)
     return state._replace(delay_rows=delay_rows, delay_count=new_count,
@@ -172,44 +246,47 @@ def column_updates_batched(hcus: H.HCUState, h_idx, j_idx, now,
     pj_sc = hcus.pj[safe_h, j_idx]                            # (K,)
 
     z1, e1, p1, w1, t1 = jax.vmap(
-        lambda z, e, pp, t, zi, pi, pj: H.ops.col_update(
+        lambda z, e, pp, t, w, zi, pi, pj: H.ops.col_update(
             z, e, pp, t, now, zi, pi, pj, H.coeffs_ij(p), p.eps,
-            backend=backend)
+            backend=backend, w_col=w)
     )(gcol(hcus.zij), gcol(hcus.eij), gcol(hcus.pij), gcol(hcus.tij),
-      zep_i.z, zep_i.p, pj_sc)
+      gcol(hcus.wij), zep_i.z, zep_i.p, pj_sc)
 
     put = lambda plane, val: plane.at[h_ix, r_ix, j_ix].set(val, mode="drop")
     hcus = hcus._replace(
         zij=put(hcus.zij, z1), eij=put(hcus.eij, e1), pij=put(hcus.pij, p1),
-        wij=put(hcus.wij, w1), tij=put(hcus.tij, t1))
-    zj = hcus.zj.at[h_idx, j_idx].add(1.0, mode="drop")
-    return hcus._replace(zj=zj)
+        wij=put(hcus.wij, w1))
+    if n * R * p.cols <= H.DENSE_CELLS_MAX:
+        # fired-cell mask (H, C): padding h_idx == n never matches
+        # arange(n); fused where beats scatter for the constant-valued Tij
+        # write and the +1.0 Zj bump (XLA CPU scatter has a high fixed
+        # per-op cost). Bitwise-identical to the scatter branch.
+        fired_hc = jnp.any(
+            (h_idx[:, None, None] == jnp.arange(n)[None, :, None])
+            & (j_idx[:, None, None]
+               == jnp.arange(hcus.zj.shape[1])[None, None, :]),
+            axis=0)
+        return hcus._replace(
+            tij=jnp.where(fired_hc[:, None, :], now, hcus.tij),
+            zj=jnp.where(fired_hc, hcus.zj + 1.0, hcus.zj))
+    return hcus._replace(
+        tij=put(hcus.tij, t1),
+        zj=hcus.zj.at[h_idx, j_idx].add(1.0, mode="drop"))
 
 
-@functools.partial(jax.jit, static_argnames=("p", "eager", "backend",
-                                             "cap_fire", "merged"),
-                   donate_argnums=(0,))
-def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
-                 p: BCPNNParams, *, eager: bool = False, merged: bool = False,
-                 backend: str | None = None, cap_fire: int | None = None):
-    """Advance the whole network by one 1 ms tick.
-
-    ext_rows: (H, A_ext) external input spikes (row index, padding == p.rows)
-    Returns (state', fired (H,)) with fired[h] = MCU index or -1.
-    merged=True runs the eBrainIII merged-column-update mode (core/merged.py;
-    state must be built with init_network(..., merged=True)).
-    """
+def _tick_core(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
+               p: BCPNNParams, eager: bool, merged: bool,
+               backend: str | None, cap_fire: int | None):
+    """Single-tick body shared by `network_tick` (per-tick jit) and
+    `network_run` (lax.scan) — one implementation, bitwise-identical
+    trajectories."""
     n = state.delay_rows.shape[0]
-    D = p.max_delay
     t = state.t + 1
     cap = cap_fire or max(2, int(0.35 * n) + 1)
 
     # 1. consume this tick's delay bucket and merge with external input
-    bucket = state.delay_rows[:, t % D, :]                     # (H, A)
+    state, bucket = consume_bucket(state, t, p, n)
     rows = jnp.concatenate([bucket, ext_rows], axis=1)
-    state = state._replace(
-        delay_rows=state.delay_rows.at[:, t % D, :].set(p.rows),
-        delay_count=state.delay_count.at[:, t % D].set(0))
 
     # 2. per-HCU tick (row updates + periodic/WTA), identical RNG all paths
     k_t = jax.random.fold_in(state.base_key, t)
@@ -254,9 +331,86 @@ def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
     return state, fired
 
 
+@functools.partial(jax.jit, static_argnames=("p", "eager", "backend",
+                                             "cap_fire", "merged"),
+                   donate_argnums=(0,))
+def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
+                 p: BCPNNParams, *, eager: bool = False, merged: bool = False,
+                 backend: str | None = None, cap_fire: int | None = None):
+    """Advance the whole network by one 1 ms tick.
+
+    ext_rows: (H, A_ext) external input spikes (row index, padding == p.rows)
+    Returns (state', fired (H,)) with fired[h] = MCU index or -1.
+    merged=True runs the eBrainIII merged-column-update mode (core/merged.py;
+    state must be built with init_network(..., merged=True)).
+    """
+    return _tick_core(state, conn, ext_rows, p, eager, merged, backend,
+                      cap_fire)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "eager", "backend",
+                                             "cap_fire", "merged"),
+                   donate_argnums=(0,))
+def _run_chunk(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
+               p: BCPNNParams, *, eager: bool, merged: bool,
+               backend: str | None, cap_fire: int | None):
+    """One compiled scan over ext (T_chunk, H, A_ext): a single dispatch
+    advances the network T_chunk ticks, threading the donated state."""
+    def body(s, e):
+        return _tick_core(s, conn, e, p, eager, merged, backend, cap_fire)
+    return jax.lax.scan(body, state, ext)
+
+
+def network_run(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
+                p: BCPNNParams, *, chunk: int = 128, eager: bool = False,
+                merged: bool = False, backend: str | None = None,
+                cap_fire: int | None = None):
+    """Scan-compiled multi-tick driver (see module docstring contract).
+
+    ext: (T, H, A_ext) pre-staged external spikes — use `stage_external`.
+    Returns (state', fired_hist (T, H) int32). Bitwise-equivalent to `run`
+    with the same inputs, ~dispatch-free: one compiled step per `chunk`
+    ticks instead of one per tick.
+    """
+    ext = jnp.asarray(ext)
+    T = ext.shape[0]
+    n = state.delay_rows.shape[0]
+    if T == 0:
+        return state, jnp.zeros((0, n), jnp.int32)
+    hist = []
+    i = 0
+    while i < T:
+        step = min(chunk, T - i)
+        state, fired = _run_chunk(state, conn, ext[i:i + step], p,
+                                  eager=eager, merged=merged, backend=backend,
+                                  cap_fire=cap_fire)
+        hist.append(fired)
+        i += step
+    return state, (hist[0] if len(hist) == 1 else jnp.concatenate(hist))
+
+
+def stage_external(ext, n_ticks: int | None = None, t0: int = 0) -> jnp.ndarray:
+    """Stage external input as the dense (T, H, A_ext) tensor `network_run`
+    consumes. `ext` is either an iterable of (H, A_ext) arrays or a callable
+    ext_fn(t) (the `run` protocol); t0 is state.t at entry, so ext_fn is
+    sampled at t0+1 .. t0+n_ticks exactly like the host loop."""
+    if callable(ext):
+        assert n_ticks is not None, "n_ticks required with a callable"
+        ext = [ext(t0 + 1 + k) for k in range(n_ticks)]
+    else:
+        ext = list(ext)
+    return jnp.stack([jnp.asarray(e) for e in ext])
+
+
 def run(state: NetworkState, conn: Connectivity, ext_fn, n_ticks: int,
         p: BCPNNParams, **kw):
-    """Host-loop driver: ext_fn(t) -> (H, A_ext) external spike rows."""
+    """Per-tick host-loop driver: ext_fn(t) -> (H, A_ext) external rows.
+
+    One jit dispatch + `int(state.t)` host sync per tick — kept as the
+    dispatch-bound baseline (benchmarks/tick_loop.py) and for callers that
+    need host-side control between ticks. Production paths should stage
+    input and use `network_run`.
+    """
     fired_hist = []
     for _ in range(n_ticks):
         ext = ext_fn(int(state.t) + 1)

@@ -16,6 +16,11 @@ Two entry points:
   row_update_kernel_call : (S, C) row blocks, rank-1 increment counts x zj
   col_update_kernel_call : a column viewed as (R/128, 128) lanes, full-rank dz
 
+Both alias the five state-plane inputs onto their outputs
+(``input_output_aliases``), so the Zij/Eij/Pij/Wij/Tij planes are rewritten
+in place — the paper's in-situ 192-bit cell rewrite — instead of allocating
+five fresh planes per call.
+
 Validated against `bcpnn_ref` in interpret mode (tests/test_kernels.py); on a
 real TPU the same code path compiles to Mosaic.
 """
@@ -56,33 +61,37 @@ def _cell_math(z, e, p, dt, dz, p_pre, p_post, k: DecayCoeffs, eps: float):
     return z1, e1, p1, w1
 
 
-def _row_kernel(now_ref, z_ref, e_ref, p_ref, t_ref, counts_ref, zj_ref,
-                pi_ref, pj_ref, zo_ref, eo_ref, po_ref, wo_ref, to_ref,
-                *, k: DecayCoeffs, eps: float):
+def _row_kernel(now_ref, z_ref, e_ref, p_ref, w_ref, t_ref, counts_ref,
+                zj_ref, pi_ref, pj_ref, zo_ref, eo_ref, po_ref, wo_ref,
+                to_ref, *, k: DecayCoeffs, eps: float):
+    # w_ref is never read: Wij is recomputed, but threading it through as an
+    # input lets pallas_call alias it onto wo_ref (in-place plane rewrite).
+    del w_ref
     now = now_ref[0, 0]
     dt = (now - t_ref[...]).astype(jnp.float32)
     dz = counts_ref[...] * zj_ref[...]          # (BS,1) * (1,BL) rank-1 bcast
     z1, e1, p1, w1 = _cell_math(z_ref[...], e_ref[...], p_ref[...], dt, dz,
                                 pi_ref[...], pj_ref[...], k, eps)
+    to_ref[...] = jnp.full_like(t_ref[...], now)
     zo_ref[...] = z1
     eo_ref[...] = e1
     po_ref[...] = p1
     wo_ref[...] = w1
-    to_ref[...] = jnp.full_like(t_ref[...], now)
 
 
-def _col_kernel(now_ref, z_ref, e_ref, p_ref, t_ref, zi_ref, pi_ref, pj_ref,
-                zo_ref, eo_ref, po_ref, wo_ref, to_ref,
+def _col_kernel(now_ref, z_ref, e_ref, p_ref, w_ref, t_ref, zi_ref, pi_ref,
+                pj_ref, zo_ref, eo_ref, po_ref, wo_ref, to_ref,
                 *, k: DecayCoeffs, eps: float):
+    del w_ref                                    # alias-only input (see above)
     now = now_ref[0, 0]
     dt = (now - t_ref[...]).astype(jnp.float32)
     z1, e1, p1, w1 = _cell_math(z_ref[...], e_ref[...], p_ref[...], dt,
                                 zi_ref[...], pi_ref[...], pj_ref[...], k, eps)
+    to_ref[...] = jnp.full_like(t_ref[...], now)
     zo_ref[...] = z1
     eo_ref[...] = e1
     po_ref[...] = p1
     wo_ref[...] = w1
-    to_ref[...] = jnp.full_like(t_ref[...], now)
 
 
 def _compiler_params():
@@ -98,13 +107,22 @@ def _compiler_params():
     return None
 
 
+# Alias the five state planes onto the five outputs: Zij/Eij/Pij/Wij/Tij are
+# rewritten in place (the TPU analogue of the paper's in-situ 192-bit cell
+# rewrite, §VI.C) — per update the planes cost one HBM read + one write
+# instead of read + write-to-fresh-allocation, halving traffic on the planes.
+# Input indices: 0=now, 1=zij, 2=eij, 3=pij, 4=wij, 5=tij.
+_PLANE_ALIASES = {1: 0, 2: 1, 3: 2, 4: 3, 5: 4}
+
+
 @functools.partial(jax.jit, static_argnames=("k", "eps", "bs", "bl", "interpret"))
-def row_update_kernel_call(zij, eij, pij, tij, now, counts, zj, p_i, p_j,
+def row_update_kernel_call(zij, eij, pij, wij, tij, now, counts, zj, p_i, p_j,
                            k: DecayCoeffs, eps: float,
                            bs: int = DEFAULT_BLOCK_S, bl: int = DEFAULT_BLOCK_L,
                            interpret: bool = False):
     """Pallas row update over (S, C) blocks. S % bs == 0, C % bl == 0 required
-    (ops.py pads). counts (S,), zj (C,), p_i (S,), p_j (C,)."""
+    (ops.py pads). counts (S,), zj (C,), p_i (S,), p_j (C,). All five plane
+    inputs are donated to the outputs via input_output_aliases."""
     S, C = zij.shape
     grid = (S // bs, C // bl)
     now_arr = jnp.asarray(now, jnp.int32).reshape(1, 1)
@@ -121,23 +139,25 @@ def row_update_kernel_call(zij, eij, pij, tij, now, counts, zj, p_i, p_j,
     fn = pl.pallas_call(
         functools.partial(_row_kernel, k=k, eps=eps),
         grid=grid,
-        in_specs=[one, sc, sc, sc, sc, s1, c1, s1, c1],
+        in_specs=[one, sc, sc, sc, sc, sc, s1, c1, s1, c1],
         out_specs=[sc, sc, sc, sc, sc],
         out_shape=out_shape,
+        input_output_aliases=_PLANE_ALIASES,
         interpret=interpret,
         **kwargs,
     )
-    return fn(now_arr, zij, eij, pij, tij,
+    return fn(now_arr, zij, eij, pij, wij, tij,
               counts.reshape(S, 1), zj.reshape(1, C),
               p_i.reshape(S, 1), p_j.reshape(1, C))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "eps", "bs", "bl", "interpret"))
-def col_update_kernel_call(zij, eij, pij, tij, now, zi_t, p_i, p_j_scalar,
+def col_update_kernel_call(zij, eij, pij, wij, tij, now, zi_t, p_i, p_j_scalar,
                            k: DecayCoeffs, eps: float,
                            bs: int = DEFAULT_BLOCK_S, bl: int = DEFAULT_BLOCK_L,
                            interpret: bool = False):
-    """Pallas column update; the (R,) column is pre-reshaped to (R/bl, bl)."""
+    """Pallas column update; the (R,) column is pre-reshaped to (R/bl, bl).
+    Plane inputs alias the outputs (in-place update, see _PLANE_ALIASES)."""
     S, C = zij.shape
     grid = (S // bs, C // bl)
     now_arr = jnp.asarray(now, jnp.int32).reshape(1, 1)
@@ -152,11 +172,12 @@ def col_update_kernel_call(zij, eij, pij, tij, now, zi_t, p_i, p_j_scalar,
     fn = pl.pallas_call(
         functools.partial(_col_kernel, k=k, eps=eps),
         grid=grid,
-        in_specs=[one, sc, sc, sc, sc, sc, sc, one],
+        in_specs=[one, sc, sc, sc, sc, sc, sc, sc, one],
         out_specs=[sc, sc, sc, sc, sc],
         out_shape=out_shape,
+        input_output_aliases=_PLANE_ALIASES,
         interpret=interpret,
         **kwargs,
     )
-    return fn(now_arr, zij, eij, pij, tij, zi_t, p_i,
+    return fn(now_arr, zij, eij, pij, wij, tij, zi_t, p_i,
               jnp.asarray(p_j_scalar, jnp.float32).reshape(1, 1))

@@ -47,38 +47,48 @@ def _round_up(n: int, m: int) -> int:
 
 
 def row_update(zij, eij, pij, tij, now, counts, zj, p_i, p_j,
-               coeffs: DecayCoeffs, eps: float, backend: str | None = None):
+               coeffs: DecayCoeffs, eps: float, backend: str | None = None,
+               wij=None):
     """Fused lazy row update on an (S, C) block of gathered rows.
 
     Returns (zij', eij', pij', wij', tij'), logical shapes preserved.
+    ``wij`` (optional) is the current weight plane block: it is never read,
+    but passing it lets the Pallas path alias all five planes in place
+    (callers on the hot path should always pass it).
     """
     backend = backend or default_backend()
     if backend == "ref":
         return bcpnn_ref.row_update_ref(zij, eij, pij, tij, now, counts, zj,
                                         p_i, p_j, coeffs, eps)
     S, C = zij.shape
+    if wij is None:
+        wij = jnp.zeros_like(zij)
     bs = min(bcpnn_update.DEFAULT_BLOCK_S, _round_up(S, 8))
     Sp, Cp = _round_up(S, bs), _round_up(C, bcpnn_update.DEFAULT_BLOCK_L)
     interp = backend == "pallas_interpret"
     out = bcpnn_update.row_update_kernel_call(
         _pad2(zij, Sp, Cp), _pad2(eij, Sp, Cp), _pad2(pij, Sp, Cp),
-        _pad2(tij, Sp, Cp, fill=0), now,
+        _pad2(wij, Sp, Cp), _pad2(tij, Sp, Cp, fill=0), now,
         _pad1(counts, Sp), _pad1(zj, Cp), _pad1(p_i, Sp), _pad1(p_j, Cp),
         k=coeffs, eps=eps, bs=bs, interpret=interp)
     return tuple(o[:S, :C] for o in out)
 
 
 def col_update(z_col, e_col, p_col, t_col, now, zi_t, p_i, p_j_scalar,
-               coeffs: DecayCoeffs, eps: float, backend: str | None = None):
+               coeffs: DecayCoeffs, eps: float, backend: str | None = None,
+               w_col=None):
     """Fused lazy column update on an (R,) column (paper: 100 row-sized chunks).
 
     All column args are (R,); returns (z', e', p', w', t') each (R,).
+    ``w_col`` (optional) is aliased in place by the Pallas path (never read).
     """
     backend = backend or default_backend()
     if backend == "ref":
         return bcpnn_ref.col_update_ref(z_col, e_col, p_col, t_col, now,
                                         zi_t, p_i, p_j_scalar, coeffs, eps)
     (R,) = z_col.shape
+    if w_col is None:
+        w_col = jnp.zeros_like(z_col)
     L = bcpnn_update.DEFAULT_BLOCK_L
     bs = bcpnn_update.DEFAULT_BLOCK_S
     Rp = _round_up(R, L * bs)
@@ -88,7 +98,7 @@ def col_update(z_col, e_col, p_col, t_col, now, zi_t, p_i, p_j_scalar,
 
     interp = backend == "pallas_interpret"
     out = bcpnn_update.col_update_kernel_call(
-        shp(z_col), shp(e_col), shp(p_col), shp(t_col), now,
+        shp(z_col), shp(e_col), shp(p_col), shp(w_col), shp(t_col), now,
         shp(zi_t), shp(p_i), p_j_scalar, k=coeffs, eps=eps, bs=bs,
         interpret=interp)
     return tuple(o.reshape(Rp)[:R] for o in out)

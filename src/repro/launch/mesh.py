@@ -7,7 +7,19 @@ xla_force_host_platform_device_count dance.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on the mesh
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: make_mesh has no axis_types kwarg
+    AxisType = None
+
+
+def _make_mesh(shape, axes, devices=None):
+    """jax.make_mesh across versions: 0.4.x lacks the axis_types kwarg."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes, devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,8 +31,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     for s in shape:
         n *= s
     devs = jax.devices()[:n]        # single-pod uses the first 256 of 512
-    return jax.make_mesh(shape, axes, devices=devs,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, devices=devs)
 
 
 def make_bcpnn_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
@@ -30,10 +41,8 @@ def make_bcpnn_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
     n = n_devices or len(jax.devices())
     devs = jax.devices()[:n]
     if multi_pod:
-        return jax.make_mesh((2, n // 2), ("pod", "hcu"), devices=devs,
-                             axis_types=(AxisType.Auto,) * 2)
-    return jax.make_mesh((n,), ("hcu",), devices=devs,
-                         axis_types=(AxisType.Auto,))
+        return _make_mesh((2, n // 2), ("pod", "hcu"), devices=devs)
+    return _make_mesh((n,), ("hcu",), devices=devs)
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):
@@ -41,5 +50,4 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     n = len(jax.devices())
     if shape is None:
         shape = (n, 1)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

@@ -101,9 +101,12 @@ def _sdpa(q, k, v, mask, softcap, scale):
     if softcap:
         logits = jnp.tanh(logits / softcap) * softcap
     logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
-    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
-    return out
+    # keep P and the PV accumulation in f32 (same as the QK einsum and the
+    # chunked/flash paths); only the stored output drops to the compute dtype
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
 
 
 def _sdpa_chunked(q, k, v, mask, softcap, scale, chunk: int):

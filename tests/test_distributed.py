@@ -37,11 +37,26 @@ SCRIPT = textwrap.dedent("""
         return jnp.asarray(out)
 
     exts = [ext() for _ in range(25)]
+    fired_d = []
     for e in exts:
         s_d, fd = tick(s_d, conn_d, e)
+        fired_d.append(np.asarray(fd))
     # single-device trajectory with matching per-device fire cap semantics
     for e in exts:
         s_s, fs = network_tick(s_s, conn, e, p, cap_fire=8)
+
+    # scan-compiled sharded driver: bitwise the same trajectory as the
+    # per-tick sharded loop, in ONE compiled computation
+    s_r = init_network(p, key)
+    s_r, conn_r = DD.shard_network(mesh, s_r, conn)
+    run_fn = DD.make_dist_run(mesh, p, rc, axis="hcu")
+    s_r, f_r = run_fn(s_r, conn_r, jnp.stack(exts))
+    np.testing.assert_array_equal(np.asarray(f_r), np.stack(fired_d))
+    assert int(s_r.t) == 25
+    for name in ["zij", "eij", "pij", "wij", "tij", "zi", "pi", "zj"]:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s_r.hcus, name)),
+            np.asarray(getattr(s_d.hcus, name)), err_msg=name)
 
     now = s_d.t
     a = jax.vmap(lambda s: flush(s, now, p))(s_d.hcus)

@@ -1,7 +1,7 @@
 """Row-Merge layout: bijection property + paper Fig 10 objective."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.layout import (RowMergeLayout, best_tile,
                                dram_row_misses_per_s, paper_fig10_table,
