@@ -11,6 +11,7 @@ test:
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast
 
-# full wall-clock benchmarks + BENCH_tick_loop.json (perf trajectory)
+# full wall-clock benchmarks + BENCH_tick_loop.json (perf trajectory);
+# --legacy-cpu pins the XLA CPU runtime the committed numbers use
 bench-json:
-	PYTHONPATH=src $(PY) -m benchmarks.run --fast --json
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast --json --legacy-cpu

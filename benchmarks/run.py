@@ -1,6 +1,6 @@
 """Benchmark harness: one function per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast] [--json]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--json] [--legacy-cpu]
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--json`` additionally runs
 the tick-loop runtime benchmark (host loop vs scan-compiled network_run,
@@ -8,6 +8,16 @@ benchmarks/tick_loop.py) and writes BENCH_tick_loop.json so the perf
 trajectory is tracked across PRs. The dry-run roofline tables
 (EXPERIMENTS.md §Roofline) are produced separately by repro.launch.dryrun +
 benchmarks.roofline_report, since they need the 512-device environment.
+
+``--legacy-cpu`` pins XLA's legacy CPU runtime
+(--xla_cpu_use_thunk_runtime=false) for this benchmark process. The thunk
+runtime (default since jax 0.4.3x) has a high fixed per-op dispatch cost on
+CPU that dominates the many-small-op BCPNN tick graph; the legacy runtime
+executes the same HLO ~3-4x faster at these sizes, and the committed
+BENCH_tick_loop.json numbers are measured with it. It is an explicit
+opt-in flag — NOT an import side effect — so merely importing this module
+(e.g. from a notebook or an embedding process) never mutates the
+environment of the host process.
 """
 from __future__ import annotations
 
@@ -18,14 +28,15 @@ import pathlib
 import sys
 import traceback
 
-# XLA's thunk runtime (default since jax 0.4.3x) has a high fixed per-op
-# dispatch cost on CPU that dominates the many-small-op BCPNN tick graph;
-# the legacy runtime executes the same HLO ~3-4x faster at these sizes.
-# Applied process-wide (before jax initializes), i.e. identically to every
-# measured pipeline — host loop and scan runtime alike.
-if "xla_cpu_use_thunk_runtime" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + " --xla_cpu_use_thunk_runtime=false").strip()
+
+def pin_legacy_cpu_runtime() -> None:
+    """Opt into the legacy XLA CPU runtime for this process. Must run before
+    jax initializes (main() calls it before importing any jax-using
+    module); applied identically to every measured pipeline."""
+    if "xla_cpu_use_thunk_runtime" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_cpu_use_thunk_runtime=false"
+                                   ).strip()
 
 
 def main() -> None:
@@ -35,7 +46,13 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="run the tick-loop benchmark (even with --fast) and "
                          "write BENCH_tick_loop.json")
+    ap.add_argument("--legacy-cpu", action="store_true",
+                    help="pin the legacy XLA CPU runtime (the configuration "
+                         "the committed BENCH_tick_loop.json was measured "
+                         "with); off by default")
     args = ap.parse_args()
+    if args.legacy_cpu:
+        pin_legacy_cpu_runtime()
 
     from benchmarks import bcpnn_tables, fig14_lazy_vs_eager, tick_loop
 

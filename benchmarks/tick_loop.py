@@ -8,15 +8,18 @@ compiles the whole loop with lax.scan and pays one dispatch per chunk.
 Two sizes are measured (CPU `ref` backend):
   * default — small planes, the dispatch-bound regime the scan runtime is
     built to eliminate (this is the size the ≥5x acceptance gate runs at);
-  * rodent16 — rodent-ish R/C dimensioning (R=1200, C=70, 16 HCUs). On CPU
-    this regime is bounded by XLA's copy-per-scatter on scan carries rather
-    than dispatch, so the speedup is smaller; tracked across PRs to catch
-    regressions on both axes.
+    stays on the per-HCU fused dense forms (below `hcu.use_worklist`).
+  * rodent16 — rodent-ish R/C dimensioning (R=1200, C=70, 16 HCUs). This
+    regime used to be bounded by XLA's copy-per-scatter on the scan-carried
+    planes; the flat-plane worklist runtime (core/worklist.py) replaces
+    those scatters with in-place dynamic-slice loops, so the tick is
+    O(touched rows) and this entry tracks that property across PRs.
 
 `python -m benchmarks.run --json` writes the results to BENCH_tick_loop.json.
-benchmarks.run pins `--xla_cpu_use_thunk_runtime=false` (legacy XLA CPU
-runtime) for the whole process — it executes the identical HLO with ~3-4x
-lower per-op overhead, for the host loop and the scan runtime alike.
+The committed numbers are measured with `--legacy-cpu` (benchmarks.run's
+opt-in pin of `--xla_cpu_use_thunk_runtime=false`): the legacy XLA CPU
+runtime executes the identical HLO with ~3-4x lower per-op overhead, for
+the host loop and the scan runtime alike.
 """
 from __future__ import annotations
 

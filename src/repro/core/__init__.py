@@ -7,6 +7,10 @@ Public API:
   network_run / stage_external — scan-compiled tick runtime (run = host loop)
   traces — closed-form lazy ZEP trace algebra
   RowMergeLayout — BCPNN-specific synaptic data organization
+  worklist — flat-plane in-place worklist update primitives (O(touched rows)
+             per tick at rodent/human scales; `worklist=` on the tick
+             drivers forces the path on/off, `hcu.use_worklist` is the
+             size guard)
 """
 from repro.core.params import BCPNNParams, human_scale, rodent_scale, test_scale
 from repro.core.hcu import (HCUState, init_hcu_state, hcu_tick_pre,
@@ -17,7 +21,7 @@ from repro.core.network import (NetworkState, Connectivity, init_network,
                                 stage_external, run, enqueue_spikes,
                                 column_updates_batched)
 from repro.core.layout import RowMergeLayout
-from repro.core import traces, queues
+from repro.core import traces, queues, worklist
 
 __all__ = [
     "BCPNNParams", "human_scale", "rodent_scale", "test_scale",
@@ -26,5 +30,5 @@ __all__ = [
     "NetworkState", "Connectivity", "init_network", "make_connectivity",
     "network_tick", "network_run", "stage_external", "run",
     "enqueue_spikes", "column_updates_batched",
-    "RowMergeLayout", "traces", "queues",
+    "RowMergeLayout", "traces", "queues", "worklist",
 ]

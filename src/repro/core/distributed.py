@@ -111,7 +111,7 @@ def unpack_spikes(w, p: BCPNNParams, h_local: int):
 
 def _local_tick(state: N.NetworkState, conn: N.Connectivity,
                 ext_rows: jnp.ndarray, p: BCPNNParams, rc: RouteConfig,
-                axis, eager: bool, backend):
+                axis, eager: bool, backend, worklist: bool | None = None):
     """Per-device body executed under shard_map."""
     h_local = state.delay_rows.shape[0]
     ndev = jax.lax.psum(1, axis)
@@ -130,15 +130,15 @@ def _local_tick(state: N.NetworkState, conn: N.Connectivity,
         hcus, fired = jax.vmap(
             lambda s, r, k: N.reference.eager_tick(s, r, t, k, p)
         )(state.hcus, rows, keys)
+        h_idx, j_idx, n_drop = N._select_fired(fired, rc.cap_fire)
     else:
-        hcus, fired = jax.vmap(
-            lambda s, r, k: H.hcu_tick_pre(s, r, t, k, p, backend=backend)
-        )(state.hcus, rows, keys)
-
-    h_idx, j_idx, n_drop = N._select_fired(fired, rc.cap_fire)
-    if not eager:
-        hcus = N.column_updates_batched(hcus, h_idx, j_idx, t, p,
-                                        backend=backend)
+        # vmap path or flat-plane worklist path by size guard — the same
+        # shared body as the single-device tick, so sharded trajectories
+        # stay bitwise-identical across the two forms. Columns here are
+        # unconditional (no lax.cond), matching the historical sharded tick.
+        hcus, fired, h_idx, j_idx, n_drop = N.lazy_batch_update(
+            state.hcus, rows, t, keys, p, rc.cap_fire, backend=backend,
+            worklist=worklist, cond_columns=False)
     state = state._replace(hcus=hcus, t=t,
                            drops_fire=state.drops_fire + n_drop)
 
@@ -199,15 +199,18 @@ def _shard_specs(axes):
 
 def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
                    axis="hcu", eager: bool = False,
-                   backend: str | None = None, donate: bool = True):
+                   backend: str | None = None, donate: bool = True,
+                   worklist: bool | None = None):
     """Build the sharded tick: state/conn/ext sharded over `axis`, which may
-    be a single mesh axis name or a tuple of axis names (flattened)."""
+    be a single mesh axis name or a tuple of axis names (flattened).
+    `worklist` forces the flat-plane worklist update path on/off (default:
+    auto by size, `hcu.use_worklist`)."""
     axes = axis if isinstance(axis, tuple) else (axis,)
     state_specs, conn_specs, spec_h, _ = _shard_specs(axes)
 
     fn = shard_map(
         functools.partial(_local_tick, p=p, rc=rc, axis=axes,
-                          eager=eager, backend=backend),
+                          eager=eager, backend=backend, worklist=worklist),
         mesh=mesh,
         in_specs=(state_specs, conn_specs, spec_h),
         out_specs=(state_specs, spec_h),
@@ -220,14 +223,18 @@ def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
 
 def make_dist_run(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
                   axis="hcu", eager: bool = False,
-                  backend: str | None = None, donate: bool = True):
+                  backend: str | None = None, donate: bool = True,
+                  worklist: bool | None = None):
     """Scan-compiled multi-tick sharded driver (network_run's sharded twin).
 
     Returns fn(state, conn, ext) -> (state', fired (T, H)) where ext is the
     pre-staged (T, H, A_ext) tensor sharded on the HCU axis. The whole
     T-tick loop — including the per-tick all_to_all spike exchange — runs
     inside ONE compiled computation: zero host round-trips, exactly the
-    per-tick trajectory of `make_dist_tick` applied T times.
+    per-tick trajectory of `make_dist_tick` applied T times. At worklist
+    scales (`hcu.use_worklist`, or forced via `worklist=`) each device's
+    plane updates run through the in-place flat-plane worklist loops, so
+    per-device traffic per tick is O(touched rows) instead of O(planes).
     """
     axes = axis if isinstance(axis, tuple) else (axis,)
     state_specs, conn_specs, spec_h, _ = _shard_specs(axes)
@@ -237,7 +244,8 @@ def make_dist_run(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
     def _local_run(state, conn, ext):
         def body(s, e):
             return _local_tick(s, conn, e, p=p, rc=rc, axis=axes,
-                               eager=eager, backend=backend)
+                               eager=eager, backend=backend,
+                               worklist=worklist)
         return jax.lax.scan(body, state, ext)
 
     fn = shard_map(

@@ -25,11 +25,43 @@ from repro.core.params import BCPNNParams
 from repro.core.traces import ZEP, bias, decay_zep, make_coeffs
 from repro.kernels import ops
 
+# jax 0.4.x has no vmap batching rule for optimization_barrier (identity per
+# operand, so the rule is trivial); the sealed compute islands below are
+# used under vmap, so register it when missing.
+try:  # pragma: no cover - exercised only on jax versions lacking the rule
+    from jax._src.lax.lax import optimization_barrier_p as _opt_barrier_p
+    from jax.interpreters import batching as _batching
+
+    if _opt_barrier_p not in _batching.primitive_batchers:
+        def _opt_barrier_batcher(args, dims, **params):
+            return _opt_barrier_p.bind(*args), dims
+        _batching.primitive_batchers[_opt_barrier_p] = _opt_barrier_batcher
+except (ImportError, AttributeError):
+    pass
+
 # Below this many cells the scatter-free write paths (fused where / one-hot
 # reduce) win on XLA CPU's fixed per-scatter cost; above it they would touch
 # O(cells) per tick and break the lazy-traffic property (paper EQ2), so the
 # O(touched) scatter forms are kept for rodent/human scales.
 DENSE_CELLS_MAX = 1 << 16
+
+
+def use_worklist(p: "BCPNNParams", override: bool | None = None) -> bool:
+    """Size guard for the network-global worklist tick runtime.
+
+    Above DENSE_CELLS_MAX cells per HCU the per-HCU vmapped
+    gather->update->scatter forms make XLA copy the full scan-carried
+    (H, R, C) planes per scatter, so rodent/human scales switch to the flat
+    (H*R, C) worklist path (`repro.core.worklist`): in-place dynamic-slice
+    loops (CPU) or the scalar-prefetch Pallas kernel (TPU) that touch only
+    O(worklist) rows per tick. Below the threshold the toy sizes keep their
+    current fused dense forms (same guard philosophy as DENSE_CELLS_MAX).
+    ``override`` (the `worklist=` runtime argument) forces either path —
+    tests use it to A/B the two on small sizes; both are bitwise-identical.
+    """
+    if override is not None:
+        return bool(override)
+    return p.rows * p.cols > DENSE_CELLS_MAX
 
 
 class HCUState(NamedTuple):
@@ -114,6 +146,23 @@ def _decay_jvec(st: HCUState, p: BCPNNParams) -> HCUState:
     return st._replace(zj=zep.z, ej=zep.e, pj=zep.p)
 
 
+def ivec_decay(zi_g, ei_g, pi_g, ti_g, now, p: BCPNNParams) -> ZEP:
+    """Lazy decay of gathered i-vector traces to `now`, as a sealed fusion
+    island (optimization barriers on inputs and outputs).
+
+    Shared by the per-HCU vmap paths (`row_updates`,
+    `network.column_updates_batched`, merged) and the worklist paths: the
+    seal keeps XLA from contracting the decay's mul+add chains into FMAs
+    differently depending on the fused producer/consumer (plane gather vs
+    staged buffer), which would diverge the two paths at the 1-ulp level.
+    """
+    zi_g, ei_g, pi_g, ti_g = jax.lax.optimization_barrier(
+        (zi_g, ei_g, pi_g, ti_g))
+    d_i = (now - ti_g).astype(zi_g.dtype)
+    zep = decay_zep(ZEP(zi_g, ei_g, pi_g), d_i, coeffs_i(p))
+    return ZEP(*jax.lax.optimization_barrier(tuple(zep)))
+
+
 def row_updates(st: HCUState, rows: jnp.ndarray, now, p: BCPNNParams,
                 backend: str | None = None):
     """Apply lazy row updates for incoming spikes.
@@ -128,9 +177,8 @@ def row_updates(st: HCUState, rows: jnp.ndarray, now, p: BCPNNParams,
     safe = jnp.minimum(rows_u, R - 1)
 
     # --- i-vector lazy decay + spike increment for the touched rows --------
-    zi_g, ei_g, pi_g, ti_g = (st.zi[safe], st.ei[safe], st.pi[safe], st.ti[safe])
-    d_i = (now - ti_g).astype(zi_g.dtype)
-    zep_i = decay_zep(ZEP(zi_g, ei_g, pi_g), d_i, coeffs_i(p))
+    zep_i = ivec_decay(st.zi[safe], st.ei[safe], st.pi[safe], st.ti[safe],
+                       now, p)
     zi_new = zep_i.z + counts
     # --- ij-matrix row update (the fused kernel) ---------------------------
     g = lambda plane: plane[safe]            # (A, C) gathered rows

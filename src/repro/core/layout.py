@@ -1,10 +1,16 @@
-"""Row-Merge synaptic data organization (paper §V.E, Fig 9-10), TPU-adapted.
+"""Synaptic data organization: Row-Merge tiling and the flat worklist layout.
 
-The paper's problem: the (R=10000, C=100) synaptic matrix is accessed as
-rows (per input spike) AND columns (per output spike). Direct row-major
-mapping makes a column access cost one DRAM row-miss per cell. Row-Merge
-block-interleaves X x X blocks so a column access hits X cells per DRAM row,
-minimizing total misses at X = 10:
+Two layout concerns live here, both instances of the paper's central theme
+(§V.E, §VI.D): the memory layout must make the *touched* synaptic state —
+not the whole matrix — the unit of traffic.
+
+1. Row-Merge tiling (paper Fig 9-10), TPU-adapted
+-------------------------------------------------
+The (R=10000, C=100) synaptic matrix is accessed as rows (per input spike)
+AND columns (per output spike). Direct row-major mapping makes a column
+access cost one DRAM row-miss per cell. Row-Merge block-interleaves X x X
+blocks so a column access hits X cells per DRAM row, minimizing total misses
+at X = 10:
 
     rowmiss(X) = (row_rate * X + col_rate * C/X * C_groups) ...
     paper form: 10000 * (X + 100/X) * 2 per second, min at X = 10.
@@ -27,6 +33,29 @@ BOTH patterns, with the optimum set by the access-rate ratio (100:1).
 `benchmarks/fig10_rowmerge.py` sweeps X for the paper's DRAM cost model
 (reproducing Fig 10: min at X=10, 5x better than direct) and the TPU tile
 model side by side.
+
+2. Flat (H*R, C) worklist layout (paper §VI.D: traffic scales with spikes)
+--------------------------------------------------------------------------
+The worklist tick runtime (`repro.core.worklist`) views the batched per-HCU
+synaptic planes `(H, R, C)` as ONE network-global flat plane `(H*R, C)` in
+which every touched synaptic row is addressable by a single global index
+
+    g = h * R + r          (`global_row` below).
+
+Because the per-HCU batch is stored row-major, the flat view is a zero-copy
+reinterpretation of the same buffer (`flatten_plane` / `unflatten_plane` are
+reshapes, i.e. bitcasts) — the re-layout costs nothing, and checkpoints keep
+the `(H, R, C)` shape on disk. What the flat addressing buys is the update
+*pattern*: one deduplicated network-wide worklist of global row indices per
+tick, consumed by `lax.dynamic_slice`/`dynamic_update_slice` loops (CPU) or
+a scalar-prefetch Pallas grid (TPU, `kernels.bcpnn_update.
+worklist_update_kernel_call`), both of which rewrite only the touched
+`(1, C)` row tiles in place. The per-HCU vmapped gather->update->scatter
+forms they replace made XLA materialize a full `(H, R, C)` copy per scatter
+on the scan-carried planes — O(planes) traffic per tick, the exact failure
+mode the paper's lazy update exists to avoid. A fired column in the flat
+view is the `(R, 1)` block at offset `(h*R, j)`, so column updates stay
+expressible as single dynamic slices too (`col_offset`).
 """
 from __future__ import annotations
 
@@ -121,3 +150,38 @@ class RowMergeLayout:
 
     def col_tiles(self, c: int):
         return np.arange(self.padded_rows // self.xr), c // self.xc
+
+
+# ----------------------------- flat worklist layout --------------------------
+
+def flatten_plane(plane: jnp.ndarray) -> jnp.ndarray:
+    """(H, R, C) -> (H*R, C) flat view (zero-copy: row-major bitcast)."""
+    H, R, C = plane.shape
+    return plane.reshape(H * R, C)
+
+
+def unflatten_plane(flat: jnp.ndarray, n_hcu: int) -> jnp.ndarray:
+    """(H*R, C) -> (H, R, C) batched view (zero-copy inverse)."""
+    HR, C = flat.shape
+    return flat.reshape(n_hcu, HR // n_hcu, C)
+
+
+def flatten_vec(vec: jnp.ndarray) -> jnp.ndarray:
+    """(H, R) i-vector plane -> (H*R,) flat view."""
+    H, R = vec.shape
+    return vec.reshape(H * R)
+
+
+def unflatten_vec(flat: jnp.ndarray, n_hcu: int) -> jnp.ndarray:
+    return flat.reshape(n_hcu, flat.shape[0] // n_hcu)
+
+
+def global_row(h, r, rows: int):
+    """(hcu, row) -> global flat row index; broadcastable."""
+    return h * rows + r
+
+
+def col_offset(h, j, rows: int):
+    """Flat-plane offset of HCU ``h``'s column ``j``: the (R, 1) block at
+    (h*R, j) — a fired column is one dynamic slice in the flat view."""
+    return h * rows, j

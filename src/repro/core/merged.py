@@ -54,34 +54,24 @@ def push_ring(ring, j, t):
     return ring.at[safe_j].set(row)
 
 
-def row_updates_merged(st: H.HCUState, ring, rows, now, p: BCPNNParams,
-                       touch_only: bool = False):
-    """Row updates with deferred (merged) column contributions.
+def merged_row_math(z, e, pp, t0, ring, zi_g, ti_g, counts, zj, pi_dec, pj,
+                    now, p: BCPNNParams):
+    """Merged (A, C)-block row update: piecewise ring integration + spike
+    increment + Bayesian weight. Returns (z1, e1, p1, w1).
 
-    Identical signature/semantics to hcu.row_updates, but each cell's lazy
-    decay is integrated piecewise across the output-spike times recorded in
-    `ring`, injecting Zi(t_j) bumps where a column update would have.
-    touch_only=True decays/reconstructs without injecting input spikes
-    (used by flush_merged). Returns (state', w_rows, counts, rows_u).
+    The single compute graph shared by the per-HCU vmap path
+    (`row_updates_merged`) and the flat-plane worklist path
+    (`network._merged_worklist_update`): both vmap THIS function over the
+    HCU batch, so XLA sees identical shapes/broadcasts and the two paths
+    stay bitwise-identical. The optimization barriers seal the graph into
+    its own fusion island: without them XLA contracts mul+add chains into
+    FMAs differently depending on what producer/consumer ops get fused in
+    (gather vs staged buffer), which perturbs results at the 1-ulp level.
     """
-    R = p.rows
-    kij, ki = H.coeffs_ij(p), H.coeffs_i(p)
-    rows_u, counts = H.dedup_rows(rows, R)
-    if touch_only:
-        counts = jnp.zeros_like(counts)
-    safe = jnp.minimum(rows_u, R - 1)
-
-    # --- i-vector lazy decay + spike increment ------------------------------
-    zi_g, ei_g, pi_g, ti_g = (st.zi[safe], st.ei[safe], st.pi[safe],
-                              st.ti[safe])
-    d_i = (now - ti_g).astype(zi_g.dtype)
-    zep_i = decay_zep(ZEP(zi_g, ei_g, pi_g), d_i, ki)
-    zi_new = zep_i.z + counts
-
-    # --- ij cells: piecewise decay across ring spike times ------------------
-    g = lambda plane: plane[safe]                       # (A, C)
-    z, e, pp = g(st.zij), g(st.eij), g(st.pij)
-    t0 = g(st.tij)                                      # (A, C) int32
+    (z, e, pp, t0, ring, zi_g, ti_g, counts, zj, pi_dec, pj) = \
+        jax.lax.optimization_barrier(
+            (z, e, pp, t0, ring, zi_g, ti_g, counts, zj, pi_dec, pj))
+    kij = H.coeffs_ij(p)
     t0f = t0.astype(jnp.float32)
     nowf = jnp.asarray(now, jnp.float32)
     b_prev = t0f
@@ -99,12 +89,80 @@ def row_updates_merged(st: H.HCUState, ring, rows, now, p: BCPNNParams,
     zep = decay_zep(zep, nowf - b_prev, kij)            # tail segment
 
     # --- own (row) spike increment + Bayesian weight ------------------------
-    z1 = zep.z + counts[:, None] * st.zj[None, :]
-    w1 = bayesian_weight(zep.p, zep_i.p[:, None], st.pj[None, :], p.eps)
+    z1 = zep.z + counts[:, None] * zj[None, :]
+    w1 = bayesian_weight(zep.p, pi_dec[:, None], pj[None, :], p.eps)
+    return jax.lax.optimization_barrier((z1, zep.e, zep.p, w1))
 
-    st = H.write_rows(st, rows_u, now, p, z1, zep.e, zep.p, w1,
+
+def row_updates_merged(st: H.HCUState, ring, rows, now, p: BCPNNParams,
+                       touch_only: bool = False):
+    """Row updates with deferred (merged) column contributions.
+
+    Identical signature/semantics to hcu.row_updates, but each cell's lazy
+    decay is integrated piecewise across the output-spike times recorded in
+    `ring`, injecting Zi(t_j) bumps where a column update would have
+    (`merged_row_math`). touch_only=True decays/reconstructs without
+    injecting input spikes (used by flush_merged).
+    Returns (state', w_rows, counts, rows_u).
+    """
+    R = p.rows
+    ki = H.coeffs_i(p)
+    rows_u, counts = H.dedup_rows(rows, R)
+    if touch_only:
+        counts = jnp.zeros_like(counts)
+    safe = jnp.minimum(rows_u, R - 1)
+
+    # --- i-vector lazy decay + spike increment ------------------------------
+    zi_g, ti_g = st.zi[safe], st.ti[safe]
+    zep_i = H.ivec_decay(zi_g, st.ei[safe], st.pi[safe], ti_g, now, p)
+    zi_new = zep_i.z + counts
+
+    # --- ij cells: piecewise decay across ring spike times ------------------
+    g = lambda plane: plane[safe]                       # (A, C)
+    z1, e1, p1, w1 = merged_row_math(
+        g(st.zij), g(st.eij), g(st.pij), g(st.tij), ring, zi_g, ti_g,
+        counts, st.zj, zep_i.p, st.pj, now, p)
+
+    st = H.write_rows(st, rows_u, now, p, z1, e1, p1, w1,
                       zi_new, zep_i.e, zep_i.p)
     return st, w1, counts, rows_u
+
+
+def merged_col_math(z, e, pp, t0, ring_row, zi, ei, pi, ti, pj_j, apply_fire,
+                    now, p: BCPNNParams):
+    """Merged (R,)-column flush: piecewise ring integration + optional fire
+    at `now` + Bayesian weight. Returns (z1, e1, p1, w1).
+
+    Shared compute graph between the per-HCU vmap path
+    (`column_flush_merged`) and the worklist overflow pass, sealed into its
+    own fusion island for the same bitwise-identity reason as
+    `merged_row_math`. ring_row (M,) is the fired column's ring;
+    zi/ei/pi/ti the HCU's full i-vector.
+    """
+    (z, e, pp, t0, ring_row, zi, ei, pi, ti, pj_j, apply_fire) = \
+        jax.lax.optimization_barrier(
+            (z, e, pp, t0, ring_row, zi, ei, pi, ti, pj_j, apply_fire))
+    kij, ki = H.coeffs_ij(p), H.coeffs_i(p)
+    t0f = t0.astype(jnp.float32)
+    tif = ti.astype(jnp.float32)
+    nowf = jnp.asarray(now, jnp.float32)
+    zep = ZEP(z, e, pp)
+    b_prev = t0f
+    for m in range(RING_DEPTH):
+        tm = ring_row[m].astype(jnp.float32)
+        b = jnp.clip(tm, t0f, nowf)
+        zep = decay_zep(zep, b - b_prev, kij)
+        bump = (tm > t0f) & (tm <= nowf)
+        zi_at = zi * jnp.exp(-(tm - tif) * (1.0 / p.tau_zi))
+        zep = ZEP(zep.z + jnp.where(bump, zi_at, 0.0), zep.e, zep.p)
+        b_prev = b
+    zep = decay_zep(zep, nowf - b_prev, kij)
+    # the fire at `now` itself (Zi(now) from the lazily-decayed i-vector)
+    zi_now = zi * jnp.exp(-(nowf - tif) * (1.0 / p.tau_zi))
+    z1 = zep.z + jnp.where(apply_fire, zi_now, 0.0)
+    pi_now = decay_zep(ZEP(zi, ei, pi), (nowf - tif), ki).p
+    w1 = bayesian_weight(zep.p, pi_now, pj_j, p.eps)
+    return jax.lax.optimization_barrier((z1, zep.e, zep.p, w1))
 
 
 def column_flush_merged(st: H.HCUState, ring, j, now, apply_fire,
@@ -114,30 +172,11 @@ def column_flush_merged(st: H.HCUState, ring, j, now, apply_fire,
     and stamp the column. Used when the ring would overflow — so the
     classic column write happens once per RING_DEPTH fires, not per fire
     (the eBrainIII amortization), and the mode stays EXACT."""
-    kij, ki = H.coeffs_ij(p), H.coeffs_i(p)
     # last-axis gather/scatter: no (R, C) transpose materialization
     gcol = lambda plane: jax.lax.dynamic_index_in_dim(plane, j, 1, False)
-    z, e, pp = gcol(st.zij), gcol(st.eij), gcol(st.pij)     # (R,)
-    t0f = gcol(st.tij).astype(jnp.float32)
-    tif = st.ti.astype(jnp.float32)
-    nowf = jnp.asarray(now, jnp.float32)
-    zep = ZEP(z, e, pp)
-    b_prev = t0f
-    for m in range(RING_DEPTH):
-        tm = ring[j, m].astype(jnp.float32)
-        b = jnp.clip(tm, t0f, nowf)
-        zep = decay_zep(zep, b - b_prev, kij)
-        bump = (tm > t0f) & (tm <= nowf)
-        zi_at = st.zi * jnp.exp(-(tm - tif) * (1.0 / p.tau_zi))
-        zep = ZEP(zep.z + jnp.where(bump, zi_at, 0.0), zep.e, zep.p)
-        b_prev = b
-    zep = decay_zep(zep, nowf - b_prev, kij)
-    # the fire at `now` itself (Zi(now) from the lazily-decayed i-vector)
-    zi_now = st.zi * jnp.exp(-(nowf - tif) * (1.0 / p.tau_zi))
-    z1 = zep.z + jnp.where(apply_fire, zi_now, 0.0)
-    pi_now = decay_zep(ZEP(st.zi, st.ei, st.pi),
-                       (nowf - tif), ki).p
-    w1 = bayesian_weight(zep.p, pi_now, st.pj[j], p.eps)
+    z1, e1, p1, w1 = merged_col_math(
+        gcol(st.zij), gcol(st.eij), gcol(st.pij), gcol(st.tij), ring[j],
+        st.zi, st.ei, st.pi, st.ti, st.pj[j], apply_fire, now, p)
 
     def put(plane, val):
         old = jax.lax.dynamic_index_in_dim(plane, j, 1, False)
@@ -145,10 +184,10 @@ def column_flush_merged(st: H.HCUState, ring, j, now, apply_fire,
         return plane.at[:, j].set(new)
 
     return st._replace(
-        zij=put(st.zij, z1), eij=put(st.eij, zep.e), pij=put(st.pij, zep.p),
+        zij=put(st.zij, z1), eij=put(st.eij, e1), pij=put(st.pij, p1),
         wij=put(st.wij, w1),
         tij=put(st.tij.astype(jnp.float32),
-                jnp.full_like(t0f, now)).astype(jnp.int32))
+                jnp.full_like(z1, now)).astype(jnp.int32))
 
 
 def hcu_tick_merged(st: H.HCUState, ring, rows, now, key, p: BCPNNParams):

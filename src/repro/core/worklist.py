@@ -1,0 +1,237 @@
+"""Worklist-driven in-place plane updates: the O(touched rows) tick core.
+
+The paper's lazy model guarantees that per-tick synaptic traffic scales with
+*spikes*, not synapses (§VI.D) — 36 row updates + 1 column update per HCU per
+ms, never the whole (R, C) matrix. The scan-compiled runtime of PR 1 broke
+that guarantee on the implementation side: every per-HCU vmapped
+gather->update->scatter made XLA materialize a copy of the full scan-carried
+`(H, R, C)` plane per scatter (XLA:CPU cannot alias a scatter whose operand
+has other uses), so per-tick memory traffic was O(planes).
+
+This module restores the paper's property with a network-global *worklist*
+over the flat `(H*R, C)` plane view (`repro.core.layout`):
+
+  * one deduplicated `(cap_total,)` worklist of global row indices is built
+    per tick (`build_worklist`), compacted valid-first exactly the way
+    `cap_fire` compacts fired columns;
+  * plane reads/writes happen ONLY through `lax.dynamic_slice` /
+    `lax.dynamic_update_slice` inside `while_loop` bodies, the one access
+    pattern XLA buffer assignment keeps in place on a scan carry (measured:
+    a fancy gather next to a loop forces full-plane copies; ds/dus loops do
+    not), and the loops early-exit at the valid-entry count — traffic and
+    trip count are O(touched rows);
+  * the trace math itself is NOT reimplemented here: the read loop stages
+    touched rows into dense h-major buffers and `repro.core.network` runs
+    the *identical* vmapped compute graph the per-HCU path runs (same
+    shapes, same broadcasts), which is what makes the two paths
+    bitwise-identical — XLA's elementwise fusion is shape-sensitive at the
+    1-ulp level, so "same formula, different batch shape" is not enough.
+
+On TPU the same worklist drives the scalar-prefetch Pallas kernel
+(`repro.kernels.bcpnn_update.worklist_update_kernel_call`), whose grid
+iterates worklist entries and DMAs only the touched `(1, C)` row blocks,
+aliased in place. `repro.core.network` orchestrates both (size-guarded like
+`hcu.DENSE_CELLS_MAX`, see `hcu.use_worklist`); this module holds the
+backend-independent loop primitives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import col_offset, global_row
+
+
+def build_worklist(rows_u: jnp.ndarray, n_rows: int):
+    """Build the network-global worklist from per-HCU deduped row slots.
+
+    rows_u: (H, A) per-HCU deduplicated row indices (padding == n_rows).
+    Returns (g_row, order, nv):
+      g_row (H*A,) int32 — global flat row index h*R + r per slot, h-major
+                           slot order; padding slots == H*R (sentinel);
+      order (H*A,) int32 — stable compaction permutation, valid slots first
+                           (same idiom as network._select_fired);
+      nv    ()     int32 — number of valid entries (= loop trip count).
+
+    Rows are already unique network-wide: `dedup_rows` dedups within each
+    HCU and rows of different HCUs map to disjoint global indices.
+    """
+    n_hcu, A = rows_u.shape
+    valid = rows_u < n_rows
+    g = jnp.where(valid,
+                  global_row(jnp.arange(n_hcu, dtype=jnp.int32)[:, None],
+                             rows_u, n_rows),
+                  n_hcu * n_rows)
+    order, nv = compact_mask(valid.reshape(-1))
+    return g.reshape(-1).astype(jnp.int32), order, nv
+
+
+def compact_mask(mask: jnp.ndarray):
+    """Stable valid-first compaction of a boolean mask WITHOUT a sort.
+
+    Returns (order, count): order (N,) int32 with order[e] = index of the
+    (e+1)-th True entry for e < count (padding positions hold 0, never read
+    by the early-exiting loops). True entry i lands at position
+    cumsum(mask)[i] - 1 — a scatter, not an argsort: XLA:CPU's sort has
+    shown compilation-context-sensitive miscompilation next to the in-place
+    while-loop machinery, and a prefix sum is cheaper anyway.
+    """
+    N = mask.shape[0]
+    pos = jnp.cumsum(mask) - 1
+    order = jnp.zeros((N,), jnp.int32).at[
+        jnp.where(mask, pos, N)].set(jnp.arange(N, dtype=jnp.int32),
+                                     mode="drop")
+    return order, jnp.sum(mask).astype(jnp.int32)
+
+
+# ----------------------------- row worklist ---------------------------------
+
+def read_rows(flats, g_row, order, nv):
+    """Stage worklist rows into dense h-major (H*A, C) buffers.
+
+    flats: tuple of (H*R, C) flat planes (read-only here). For each valid
+    worklist entry (slot = order[e], e < nv), buffer position `slot`
+    receives plane row `g_row[slot]`; padding slots stay zero (their values
+    feed only computations whose results are dropped or zero-masked). One
+    dynamic_slice per plane per entry — no fancy gather, so the planes stay
+    in-place-aliasable for the write loop.
+    """
+    C = flats[0].shape[1]
+    cap_total = g_row.shape[0]
+    bufs = tuple(jnp.zeros((cap_total, C), f.dtype) for f in flats)
+
+    def body(s):
+        e, bufs = s
+        slot = order[e]
+        r = g_row[slot]
+        bufs = tuple(
+            jax.lax.dynamic_update_slice(
+                b, jax.lax.dynamic_slice(f, (r, 0), (1, C)), (slot, 0))
+            for b, f in zip(bufs, flats))
+        return e + 1, bufs
+
+    return jax.lax.while_loop(lambda s: s[0] < nv, body,
+                              (jnp.asarray(0, jnp.int32), bufs))[1]
+
+
+def write_rows(flats, ivecs, g_row, order, nv, vals, iv_vals, now):
+    """Write the row worklist back in place.
+
+    flats:  (zij, eij, pij, wij, tij) flat (H*R, C) planes;
+    ivecs:  (zi, ei, pi, ti) flat (H*R,) i-vectors;
+    vals:   (z1, e1, p1, w1) h-major (H*A, C) value buffers;
+    iv_vals:(zi', ei', pi') h-major (H*A,) i-vector values.
+    Entry e < nv rewrites plane row g_row[order[e]] from value slot order[e]
+    and its i-vector cell; Tij/ti are stamped to `now`. Every write is a
+    dynamic_update_slice on a while_loop carry — the in-place pattern — and
+    only touched rows are visited (the per-HCU path's `mode="drop"` scatters
+    wrote exactly this set).
+    """
+    C = flats[0].shape[1]
+
+    def body(s):
+        e, flats, ivecs = s
+        slot = order[e]
+        r = g_row[slot]
+        row = lambda v: jax.lax.dynamic_slice(v, (slot, 0), (1, C))
+        zf, ef, pf, wf, tf = flats
+        vz, ve, vp, vw = vals
+        zf = jax.lax.dynamic_update_slice(zf, row(vz), (r, 0))
+        ef = jax.lax.dynamic_update_slice(ef, row(ve), (r, 0))
+        pf = jax.lax.dynamic_update_slice(pf, row(vp), (r, 0))
+        wf = jax.lax.dynamic_update_slice(wf, row(vw), (r, 0))
+        tf = jax.lax.dynamic_update_slice(
+            tf, jnp.full((1, C), now, tf.dtype), (r, 0))
+        one = lambda v: jax.lax.dynamic_slice(v, (slot,), (1,))
+        zv, ev, pv, tv = ivecs
+        zv = jax.lax.dynamic_update_slice(zv, one(iv_vals[0]), (r,))
+        ev = jax.lax.dynamic_update_slice(ev, one(iv_vals[1]), (r,))
+        pv = jax.lax.dynamic_update_slice(pv, one(iv_vals[2]), (r,))
+        tv = jax.lax.dynamic_update_slice(
+            tv, jnp.full((1,), now, tv.dtype), (r,))
+        return e + 1, (zf, ef, pf, wf, tf), (zv, ev, pv, tv)
+
+    out = jax.lax.while_loop(lambda s: s[0] < nv, body,
+                             (jnp.asarray(0, jnp.int32), flats, ivecs))
+    return out[1], out[2]
+
+
+# ----------------------------- column worklist -------------------------------
+
+def read_cols(flats, h_idx, j_idx, n_fired, n_rows: int):
+    """Stage fired columns into compact (K, R) buffers.
+
+    h_idx/j_idx: (K,) compacted fired batch (valid prefix of length n_fired,
+    as produced by network._select_fired). In the flat plane, HCU h's column
+    j is the (R, 1) block at (h*R, j) — one dynamic_slice each.
+    """
+    K = h_idx.shape[0]
+    bufs = tuple(jnp.zeros((K, n_rows), f.dtype) for f in flats)
+
+    def body(s):
+        e, bufs = s
+        off, j = col_offset(h_idx[e], j_idx[e], n_rows)
+        bufs = tuple(
+            jax.lax.dynamic_update_slice(
+                b, jax.lax.dynamic_slice(f, (off, j),
+                                         (n_rows, 1)).reshape(1, n_rows),
+                (e, 0))
+            for b, f in zip(bufs, flats))
+        return e + 1, bufs
+
+    return jax.lax.while_loop(lambda s: s[0] < n_fired, body,
+                              (jnp.asarray(0, jnp.int32), bufs))[1]
+
+
+def write_cols(flats, h_idx, j_idx, n_fired, vals, now, n_rows: int):
+    """Write updated columns back in place ((R, 1) blocks; Tij stamped)."""
+    def body(s):
+        e, flats = s
+        off, j = col_offset(h_idx[e], j_idx[e], n_rows)
+        col = lambda v: jax.lax.dynamic_slice(
+            v, (e, 0), (1, n_rows)).reshape(n_rows, 1)
+        zf, ef, pf, wf, tf = flats
+        zf = jax.lax.dynamic_update_slice(zf, col(vals[0]), (off, j))
+        ef = jax.lax.dynamic_update_slice(ef, col(vals[1]), (off, j))
+        pf = jax.lax.dynamic_update_slice(pf, col(vals[2]), (off, j))
+        wf = jax.lax.dynamic_update_slice(wf, col(vals[3]), (off, j))
+        tf = jax.lax.dynamic_update_slice(
+            tf, jnp.full((n_rows, 1), now, tf.dtype), (off, j))
+        return e + 1, (zf, ef, pf, wf, tf)
+
+    return jax.lax.while_loop(lambda s: s[0] < n_fired, body,
+                              (jnp.asarray(0, jnp.int32), flats))[1]
+
+
+def patch_cells(zf, pa_idx, n_patch, rows_u, ziv, fired, n_rows: int):
+    """Merged-mode same-tick patch: add Zi(now) to cell (row, fired_j) for
+    every row touched THIS tick in every fired (non-overflow) HCU, in place.
+
+    pa_idx: (H,) compacted HCU indices (valid prefix n_patch); rows_u (H, A)
+    this tick's deduped rows; ziv (H, A) post-increment Zi values. Mirrors
+    `merged.hcu_tick_merged`'s `zij.at[rows_u, safe_j].add(...)` — unique
+    rows, so add order is immaterial; padding rows are skipped exactly where
+    `mode="drop"` dropped them.
+    """
+    A = rows_u.shape[1]
+
+    def body(s):
+        e, zf = s
+        h = pa_idx[e]
+        j = jnp.maximum(fired[h], 0)
+
+        def inner(a, zf):
+            r = rows_u[h, a]
+
+            def add(zf):
+                g = global_row(h, r, n_rows)
+                cell = jax.lax.dynamic_slice(zf, (g, j), (1, 1))
+                return jax.lax.dynamic_update_slice(
+                    zf, cell + ziv[h, a], (g, j))
+
+            return jax.lax.cond(r < n_rows, add, lambda z: z, zf)
+
+        return e + 1, jax.lax.fori_loop(0, A, inner, zf)
+
+    return jax.lax.while_loop(lambda s: s[0] < n_patch, body,
+                              (jnp.asarray(0, jnp.int32), zf))[1]

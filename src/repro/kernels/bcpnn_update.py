@@ -12,17 +12,34 @@ its ping-pong buffering (EQ3, k=2):
   * blocks are (BS, 128)-shaped: the 128-lane dimension is the hardware
     analogue of the paper's "cell-level parallelism" (#FPU_sets).
 
-Two entry points:
-  row_update_kernel_call : (S, C) row blocks, rank-1 increment counts x zj
-  col_update_kernel_call : a column viewed as (R/128, 128) lanes, full-rank dz
+Three entry points:
+  row_update_kernel_call      : (S, C) row blocks, rank-1 counts x zj
+  col_update_kernel_call      : a column viewed as (R/128, 128) lanes
+  worklist_update_kernel_call : scalar-prefetch grid over a network-global
+                                worklist of flat (H*R, C) plane rows
 
-Both alias the five state-plane inputs onto their outputs
+All alias the five state-plane inputs onto their outputs
 (``input_output_aliases``), so the Zij/Eij/Pij/Wij/Tij planes are rewritten
 in place — the paper's in-situ 192-bit cell rewrite — instead of allocating
 five fresh planes per call.
 
-Validated against `bcpnn_ref` in interpret mode (tests/test_kernels.py); on a
-real TPU the same code path compiles to Mosaic.
+The worklist kernel is the TPU half of the O(touched rows) tick runtime
+(`repro.core.worklist`): the deduplicated worklist row indices arrive as a
+scalar-prefetch operand, every BlockSpec index_map is driven by them, and
+each grid step DMAs exactly one touched (1, C) row block per plane, updates
+it with the fused cell math, and writes it back in place. Per tick the
+planes therefore cost O(worklist) row-block DMAs instead of O(H*R*C)
+gather/scatter traffic — the memory-access shape of the paper's lazy model
+(§VI.D: bandwidth scales with spikes, not synapses). Grid steps past the
+valid-entry count (and steps whose entry was deduplicated away) write their
+block back unchanged. Because grid steps write data-dependent, potentially
+repeated rows in place, the worklist grid is declared with
+``("arbitrary",)`` dimension semantics — never "parallel", which is
+reserved for the dense row/col kernels whose blocks are disjoint.
+
+Validated against `bcpnn_ref` in interpret mode (tests/test_kernels.py,
+tests/test_worklist.py); on a real TPU the same code path compiles to
+Mosaic.
 """
 from __future__ import annotations
 
@@ -94,14 +111,23 @@ def _col_kernel(now_ref, z_ref, e_ref, p_ref, w_ref, t_ref, zi_ref, pi_ref,
     wo_ref[...] = w1
 
 
-def _compiler_params():
+def _compiler_params(semantics=("parallel", "parallel")):
+    """Best-effort TPU compiler params with explicit dimension semantics.
+
+    The dense row/col kernels write disjoint (bs, bl) blocks, so their 2-D
+    grids are genuinely ("parallel", "parallel"). The worklist kernel's grid
+    is data-dependent — prefetched row indices may repeat (padding entries
+    all alias one row) and every block is rewritten in place — so it MUST be
+    ("arbitrary",): declaring it parallel would license Mosaic to reorder or
+    overlap grid steps whose writes alias.
+    """
     if pltpu is None:
         return None
     for name in ("CompilerParams", "TPUCompilerParams"):
         cls = getattr(pltpu, name, None)
         if cls is not None:
             try:
-                return cls(dimension_semantics=("parallel", "parallel"))
+                return cls(dimension_semantics=tuple(semantics))
             except Exception:  # pragma: no cover
                 return None
     return None
@@ -149,6 +175,88 @@ def row_update_kernel_call(zij, eij, pij, wij, tij, now, counts, zj, p_i, p_j,
     return fn(now_arr, zij, eij, pij, wij, tij,
               counts.reshape(S, 1), zj.reshape(1, C),
               p_i.reshape(S, 1), p_j.reshape(1, C))
+
+
+def _worklist_kernel(rows_ref, nv_ref, now_ref, z_ref, e_ref, p_ref, w_ref,
+                     t_ref, counts_ref, zj_ref, pi_ref, pj_ref,
+                     zo_ref, eo_ref, po_ref, wo_ref, to_ref,
+                     *, k: DecayCoeffs, eps: float):
+    """One worklist entry per grid step: the (1, C) row block the BlockSpec
+    index_maps DMA'd in (rows_ref[i] selected it) is updated with the fused
+    cell math and written back in place. Entries at or past nv pass their
+    block through unchanged; the caller (ops.worklist_row_update) reroutes
+    them onto a junk row past the logical plane, so a padding step can
+    never even revisit a touched row — the `valid` gate here is defense in
+    depth on top of that, under the ("arbitrary",) sequential grid
+    semantics."""
+    i = pl.program_id(0)
+    valid = i < nv_ref[0]
+    now = now_ref[0, 0]
+    dt = (now - t_ref[...]).astype(jnp.float32)
+    dz = counts_ref[...] * zj_ref[...]           # (1,1) * (1,BL) rank-1
+    z1, e1, p1, w1 = _cell_math(z_ref[...], e_ref[...], p_ref[...], dt, dz,
+                                pi_ref[...], pj_ref[...], k, eps)
+    zo_ref[...] = jnp.where(valid, z1, z_ref[...])
+    eo_ref[...] = jnp.where(valid, e1, e_ref[...])
+    po_ref[...] = jnp.where(valid, p1, p_ref[...])
+    wo_ref[...] = jnp.where(valid, w1, w_ref[...])
+    to_ref[...] = jnp.where(valid, jnp.full_like(t_ref[...], now), t_ref[...])
+
+
+# With PrefetchScalarGridSpec the alias indices count the scalar-prefetch
+# operands first: 0=rows, 1=nv, then 2=now, 3=zij ... 7=tij.
+_WORKLIST_ALIASES = {3: 0, 4: 1, 5: 2, 6: 3, 7: 4}
+
+
+@functools.partial(jax.jit, static_argnames=("k", "eps", "interpret"))
+def worklist_update_kernel_call(zij, eij, pij, wij, tij, rows, nv, now,
+                                counts, zj, p_i, pj, k: DecayCoeffs,
+                                eps: float, interpret: bool = False):
+    """Scalar-prefetch Pallas worklist update over flat (HR, C) planes.
+
+    rows (W,) int32 — flat plane row index per worklist entry, compacted
+    valid-first and clipped into range (entries >= nv are ignored);
+    nv (1,) int32 — valid-entry count; counts/p_i (W,) and zj/pj (W, C) —
+    per-entry operands. HR % 8 == 0 and C % 128 == 0 required (ops.py pads).
+    The five plane inputs alias the outputs: each grid step rewrites only
+    its touched (1, C) row block in place — O(worklist) DMA per call.
+    """
+    HR, C = zij.shape
+    W = rows.shape[0]
+    if pltpu is None:  # pragma: no cover - pltpu import failed
+        raise NotImplementedError(
+            "worklist_update_kernel_call needs jax.experimental.pallas.tpu "
+            "(PrefetchScalarGridSpec); use the 'ref' worklist path instead")
+    now_arr = jnp.asarray(now, jnp.int32).reshape(1, 1)
+    row_spec = pl.BlockSpec((1, C), lambda i, rows_ref, nv_ref:
+                            (rows_ref[i], 0))
+    ent_spec = pl.BlockSpec((1, C), lambda i, rows_ref, nv_ref: (i, 0))
+    ent1_spec = pl.BlockSpec((1, 1), lambda i, rows_ref, nv_ref: (i, 0))
+    one = pl.BlockSpec((1, 1), lambda i, rows_ref, nv_ref: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(W,),
+        in_specs=[one, row_spec, row_spec, row_spec, row_spec, row_spec,
+                  ent1_spec, ent_spec, ent1_spec, ent_spec],
+        out_specs=[row_spec] * 5,
+    )
+    out_shape = [jax.ShapeDtypeStruct((HR, C), jnp.float32)] * 4 \
+        + [jax.ShapeDtypeStruct((HR, C), jnp.int32)]
+    kwargs = {}
+    cp = _compiler_params(("arbitrary",))
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    fn = pl.pallas_call(
+        functools.partial(_worklist_kernel, k=k, eps=eps),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=_WORKLIST_ALIASES,
+        interpret=interpret,
+        **kwargs,
+    )
+    return fn(rows.astype(jnp.int32), jnp.asarray(nv, jnp.int32).reshape(1),
+              now_arr, zij, eij, pij, wij, tij,
+              counts.reshape(W, 1), zj, p_i.reshape(W, 1), pj)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "eps", "bs", "bl", "interpret"))

@@ -74,6 +74,40 @@ def row_update(zij, eij, pij, tij, now, counts, zj, p_i, p_j,
     return tuple(o[:S, :C] for o in out)
 
 
+def worklist_row_update(zij, eij, pij, wij, tij, rows, nv, now, counts, zj,
+                        p_i, pj, coeffs: DecayCoeffs, eps: float,
+                        backend: str | None = None):
+    """Worklist row update over flat (H*R, C) planes (Pallas backends only;
+    the "ref" worklist path lives in `repro.core.worklist` as in-place
+    dynamic-slice loops — this wrapper is the TPU/interpret dispatch).
+
+    rows (W,): compacted-valid-first flat row indices (entries >= nv are
+    ignored whatever they hold); counts/p_i (W,); zj/pj (W, C) per-entry
+    operands. Planes are padded to HR+>=1 junk rows (8-multiple) and a lane
+    multiple of C; every entry at or past nv is rerouted onto the junk
+    region so a padding grid step can never revisit (and, in interpret
+    mode, clobber) a row a valid entry updated. The padding is a per-call
+    copy, so production deployments should store the planes pre-aligned
+    (see core.layout); the aligned+junk-row fast path is then zero-copy
+    thanks to input_output_aliases.
+    """
+    backend = backend or default_backend()
+    HR, C = zij.shape
+    W = rows.shape[0]
+    HRp = _round_up(HR + 1, 8)       # always >= 1 junk row for padding
+    Cp = _round_up(C, bcpnn_update.DEFAULT_BLOCK_L)
+    interp = backend == "pallas_interpret"
+    rows_eff = jnp.where(jnp.arange(W) < jnp.asarray(nv, jnp.int32),
+                         jnp.clip(rows, 0, HRp - 1), HRp - 1)
+    out = bcpnn_update.worklist_update_kernel_call(
+        _pad2(zij, HRp, Cp), _pad2(eij, HRp, Cp), _pad2(pij, HRp, Cp),
+        _pad2(wij, HRp, Cp), _pad2(tij, HRp, Cp, fill=0),
+        rows_eff, nv, now, counts,
+        _pad2(zj, W, Cp), p_i, _pad2(pj, W, Cp),
+        k=coeffs, eps=eps, interpret=interp)
+    return tuple(o[:HR, :C] for o in out)
+
+
 def col_update(z_col, e_col, p_col, t_col, now, zi_t, p_i, p_j_scalar,
                coeffs: DecayCoeffs, eps: float, backend: str | None = None,
                w_col=None):

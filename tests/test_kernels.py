@@ -100,3 +100,75 @@ def test_padding_cells_do_not_leak():
     for x, y in zip(out_a, out_b):
         assert x.shape == y.shape == (9, 37)
         np.testing.assert_allclose(x, y, rtol=3e-6, atol=3e-6)
+
+
+def _worklist_args(rng, HR, C, W, rows_list, nv, tmax=100):
+    rows = jnp.asarray(list(rows_list) + [HR] * (W - len(rows_list)),
+                       jnp.int32)
+    return dict(
+        zij=jnp.asarray(rng.uniform(0, 2, (HR, C)), jnp.float32),
+        eij=jnp.asarray(rng.uniform(0, 2, (HR, C)), jnp.float32),
+        pij=jnp.asarray(rng.uniform(1e-3, 1, (HR, C)), jnp.float32),
+        wij=jnp.asarray(rng.uniform(-1, 1, (HR, C)), jnp.float32),
+        tij=jnp.asarray(rng.integers(0, tmax, (HR, C)), jnp.int32),
+        rows=rows, nv=nv, now=tmax,
+        counts=jnp.asarray(rng.integers(0, 4, (W,)), jnp.float32),
+        zj=jnp.asarray(rng.uniform(0, 2, (W, C)), jnp.float32),
+        p_i=jnp.asarray(rng.uniform(1e-3, 1, (W,)), jnp.float32),
+        pj=jnp.asarray(rng.uniform(1e-3, 1, (W, C)), jnp.float32),
+    )
+
+
+def _worklist_expected(a, HR, C, nv):
+    """Per-entry bcpnn_ref oracle applied to the touched rows only."""
+    from repro.kernels import bcpnn_ref
+    exp = [np.array(a[k]) for k in ("zij", "eij", "pij", "wij", "tij")]
+    for e in range(nv):
+        r = int(a["rows"][e])
+        z1, e1, p1, w1, t1 = bcpnn_ref.row_update_ref(
+            a["zij"][r:r + 1], a["eij"][r:r + 1], a["pij"][r:r + 1],
+            a["tij"][r:r + 1], a["now"], a["counts"][e:e + 1], a["zj"][e],
+            a["p_i"][e:e + 1], a["pj"][e], K, EPS)
+        for plane, val in zip(exp, (z1, e1, p1, w1, t1)):
+            plane[r] = np.asarray(val)[0]
+    return exp
+
+
+@pytest.mark.parametrize("HR,C,W,rows,nv", [
+    (32, 128, 8, (3, 7, 11, 30), 4),       # aligned, no padding
+    (256, 16, 24, (1, 4, 66, 89, 128, 199, 255), 7),   # lane padding
+    (40, 100, 8, (0, 39), 2),              # both-dim padding
+    (32, 128, 8, (), 0),                   # empty worklist
+])
+def test_worklist_kernel_matches_ref(HR, C, W, rows, nv):
+    """Scalar-prefetch worklist kernel (interpret mode) vs per-row oracle:
+    touched rows update, untouched rows (and rows aliased by padding
+    entries) stay bit-identical."""
+    rng = np.random.default_rng(HR * 1000 + C)
+    a = _worklist_args(rng, HR, C, W, rows, nv)
+    out = ops.worklist_row_update(**a, coeffs=K, eps=EPS,
+                                  backend="pallas_interpret")
+    exp = _worklist_expected(a, HR, C, nv)
+    untouched = np.setdiff1d(np.arange(HR), np.asarray(rows[:nv], int))
+    for o, ex, name in zip(out, exp, "zepwt"):
+        o = np.asarray(o)
+        np.testing.assert_allclose(o, ex, rtol=3e-6, atol=3e-6,
+                                   err_msg=f"plane {name}")
+        # untouched rows must be EXACTLY preserved (in-place contract)
+        np.testing.assert_array_equal(o[untouched], ex[untouched],
+                                      err_msg=f"untouched rows, plane {name}")
+
+
+def test_worklist_kernel_padding_entries_are_noops():
+    """Entries at/past nv (incl. the H*R sentinel) must not perturb any row
+    even when clipped onto real row indices."""
+    rng = np.random.default_rng(0)
+    a = _worklist_args(rng, 32, 128, 8, (1, 4), 2)
+    # poison the padding entries with in-range rows that are also touched
+    a["rows"] = jnp.asarray([1, 4, 1, 4, 0, 31, 32, 32], jnp.int32)
+    out = ops.worklist_row_update(**a, coeffs=K, eps=EPS,
+                                  backend="pallas_interpret")
+    exp = _worklist_expected(a, 32, 128, 2)
+    for o, ex, name in zip(out, exp, "zepwt"):
+        np.testing.assert_allclose(np.asarray(o), ex, rtol=3e-6, atol=3e-6,
+                                   err_msg=f"plane {name}")

@@ -1,0 +1,224 @@
+"""Worklist tick runtime vs the per-HCU vmap path — bitwise identity.
+
+The flat-plane worklist runtime (core/worklist.py + the worklist branches in
+core/network.py) is a memory-traffic refactor, not a semantics change: with
+`worklist=True` forced on small sizes, every trajectory — fired history,
+all state planes, queues, rings — must be bit-for-bit identical to the
+per-HCU vmapped path, in lazy, merged and sharded modes, across random
+spike patterns, duplicate rows, queue-overflow ticks and empty ticks.
+
+The worklist path achieves this by construction: it stages touched rows
+into buffers with in-place dynamic-slice loops and then runs the *same
+vmapped compute graph* (same shapes, same broadcasts, same code objects)
+as the per-HCU path — XLA:CPU's fused codegen is context-sensitive at the
+1-ulp level, so these tests are the guard that the shared-graph discipline
+holds.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import (init_network, make_connectivity, network_run,
+                        test_scale as tiny_scale)
+from repro.core import hcu as H
+from repro.core import worklist as WL
+from repro.core.params import BCPNNParams
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+# two fixed dimensionings so jit caches are reused across cases/examples
+LAZY_P = tiny_scale(n_hcu=4, rows=64, cols=16)
+HOT_P = BCPNNParams(n_hcu=6, rows=48, cols=12, fanout=12, active_queue=6,
+                    max_delay=6, out_rate=0.5)      # queue-overflow regime
+MERGED_P = BCPNNParams(n_hcu=4, rows=24, cols=16, fanout=4, active_queue=8,
+                       max_delay=8, out_rate=0.6)   # ring-overflow regime
+
+
+def _ext_tensor(p, seed, n_ticks, width=8, lam=3.0, duplicates=False):
+    """Random staged input; lam=0 gives all-empty ticks; duplicates=True
+    forces repeated row indices within a tick's slot array."""
+    rng = np.random.default_rng(seed)
+    out = np.full((n_ticks, p.n_hcu, width), p.rows, np.int32)
+    for t in range(n_ticks):
+        for h in range(p.n_hcu):
+            n = min(width, rng.poisson(lam))
+            rows = rng.integers(0, p.rows, n)
+            if duplicates and n >= 2:
+                rows[1] = rows[0]
+            out[t, h, :n] = rows
+    return jnp.asarray(out)
+
+
+def _run_both(p, ext, merged=False, chunk=16, key_seed=0):
+    key = jax.random.PRNGKey(key_seed)
+    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    kw = dict(merged=merged, chunk=chunk,
+              cap_fire=p.n_hcu if merged else None)
+    sa, fa = network_run(init_network(p, key, merged=merged), conn, ext, p,
+                         worklist=False, **kw)
+    sb, fb = network_run(init_network(p, key, merged=merged), conn, ext, p,
+                         worklist=True, **kw)
+    return sa, fa, sb, fb
+
+
+def _assert_bitwise(sa, fa, sb, fb, merged=False):
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+    for name in sa.hcus._fields:
+        a, b = np.asarray(getattr(sa.hcus, name)), \
+            np.asarray(getattr(sb.hcus, name))
+        np.testing.assert_array_equal(a, b, err_msg=f"plane {name}")
+    np.testing.assert_array_equal(np.asarray(sa.delay_rows),
+                                  np.asarray(sb.delay_rows))
+    np.testing.assert_array_equal(np.asarray(sa.delay_count),
+                                  np.asarray(sb.delay_count))
+    assert int(sa.drops_in) == int(sb.drops_in)
+    assert int(sa.drops_fire) == int(sb.drops_fire)
+    if merged:
+        np.testing.assert_array_equal(np.asarray(sa.jring),
+                                      np.asarray(sb.jring))
+
+
+@pytest.mark.parametrize("case", ["random", "duplicates", "empty"])
+def test_lazy_worklist_bitwise(case):
+    lam = {"random": 3.0, "duplicates": 4.0, "empty": 0.0}[case]
+    ext = _ext_tensor(LAZY_P, seed=11, n_ticks=40, lam=lam,
+                      duplicates=(case == "duplicates"))
+    sa, fa, sb, fb = _run_both(LAZY_P, ext)
+    if case != "empty":
+        assert (np.asarray(fa) >= 0).sum() > 0, "must exercise output spikes"
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+def test_lazy_worklist_bitwise_under_queue_overflow():
+    """High rate + tight queues: delay-queue and fired-batch drops occur and
+    must be counted identically (the worklist never drops row updates —
+    cap_total covers every slot)."""
+    ext = _ext_tensor(HOT_P, seed=5, n_ticks=60, lam=6.0)
+    sa, fa, sb, fb = _run_both(HOT_P, ext, chunk=60)
+    assert int(sa.drops_in) > 0 and int(sa.drops_fire) > 0, \
+        "case must exercise queue overflow"
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+@pytest.mark.parametrize("case", ["random", "empty"])
+def test_merged_worklist_bitwise(case):
+    """Merged mode: ring pushes, overflow flushes and same-tick patches all
+    ride the worklist; jring must match bit-for-bit too."""
+    lam = {"random": 6.0, "empty": 0.0}[case]
+    ext = _ext_tensor(MERGED_P, seed=7, n_ticks=80, lam=lam)
+    sa, fa, sb, fb = _run_both(MERGED_P, ext, merged=True, chunk=11)
+    if case == "random":
+        assert (np.asarray(fa) >= 0).sum() > MERGED_P.n_hcu * 8, \
+            "case must exercise ring overflow (fires > H * RING_DEPTH)"
+    _assert_bitwise(sa, fa, sb, fb, merged=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), lam=st.sampled_from([0.0, 2.0, 6.0]),
+       merged=st.booleans())
+def test_worklist_bitwise_property(seed, lam, merged):
+    """Property form: any spike pattern, any regime, both modes."""
+    p = MERGED_P if merged else LAZY_P
+    ext = _ext_tensor(p, seed=seed, n_ticks=24, lam=lam,
+                      duplicates=bool(seed % 2))
+    sa, fa, sb, fb = _run_both(p, ext, merged=merged, chunk=24,
+                               key_seed=seed % 7)
+    _assert_bitwise(sa, fa, sb, fb, merged=merged)
+
+
+def test_sharded_worklist_bitwise():
+    """make_dist_run(worklist=True) == make_dist_run(worklist=False), planes
+    and fired history, over 4 host devices (subprocess: device count must be
+    set before jax initializes)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import *
+        from repro.core import distributed as DD
+
+        p = test_scale(n_hcu=8, rows=64, cols=16)
+        key = jax.random.PRNGKey(0)
+        conn = make_connectivity(p, jax.random.fold_in(key, 1))
+        mesh = jax.make_mesh((4,), ("hcu",))
+        rc = DD.default_route_config(p, 2)
+        rng = np.random.default_rng(7)
+        ext = np.full((25, p.n_hcu, 8), p.rows, np.int32)
+        for t in range(25):
+            for h in range(p.n_hcu):
+                n = min(8, rng.poisson(3))
+                ext[t, h, :n] = rng.integers(0, p.rows, n)
+        ext = jnp.asarray(ext)
+        outs = {}
+        for wl in (False, True):
+            s0, c0 = DD.shard_network(mesh, init_network(p, key), conn)
+            fn = DD.make_dist_run(mesh, p, rc, axis="hcu", worklist=wl)
+            s1, f1 = fn(s0, c0, ext)
+            outs[wl] = (s1, np.asarray(f1))
+        np.testing.assert_array_equal(outs[False][1], outs[True][1])
+        assert (outs[False][1] >= 0).sum() > 0
+        for name in outs[False][0].hcus._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(outs[False][0].hcus, name)),
+                np.asarray(getattr(outs[True][0].hcus, name)), err_msg=name)
+        print("SHARDED-WORKLIST-OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env={**__import__("os").environ,
+                                       "PYTHONPATH": SRC})
+    assert "SHARDED-WORKLIST-OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_pallas_interpret_worklist_matches_vmap_path():
+    """The scalar-prefetch Pallas worklist kernel (interpret mode) must
+    reproduce the vmapped pallas-interpret path exactly: both run the same
+    kernel cell math, so even the weight planes match bitwise."""
+    ext = _ext_tensor(LAZY_P, seed=3, n_ticks=12, lam=3.0)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(LAZY_P, jax.random.fold_in(key, 1))
+    sa, fa = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
+                         chunk=12, worklist=False, backend="pallas_interpret")
+    sb, fb = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
+                         chunk=12, worklist=True, backend="pallas_interpret")
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+# ----------------------------- unit tests ------------------------------------
+
+def test_build_worklist_compaction_and_dedup_sentinels():
+    rows_u = jnp.asarray([[1, 4, 64, 64],      # 2 valid
+                          [64, 64, 64, 64],    # empty HCU
+                          [0, 63, 64, 64]],    # 2 valid
+                         jnp.int32)
+    g_row, order, nv = WL.build_worklist(rows_u, 64)
+    assert int(nv) == 4
+    got = np.asarray(g_row)[np.asarray(order)[:4]]
+    np.testing.assert_array_equal(got, [1, 4, 128, 191])
+    # padding slots carry the H*R sentinel
+    assert np.asarray(g_row)[2] == 3 * 64
+
+
+def test_compact_mask_matches_stable_argsort():
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        mask = jnp.asarray(rng.random(23) < 0.4)
+        order, count = WL.compact_mask(mask)
+        ref = np.argsort(~np.asarray(mask), kind="stable")
+        k = int(count)
+        assert k == int(np.asarray(mask).sum())
+        np.testing.assert_array_equal(np.asarray(order)[:k], ref[:k])
+
+
+def test_use_worklist_guard():
+    assert not H.use_worklist(LAZY_P)                      # 64*16 cells
+    assert H.use_worklist(BCPNNParams(n_hcu=2, rows=1200, cols=70))
+    assert H.use_worklist(LAZY_P, override=True)
+    assert not H.use_worklist(BCPNNParams(n_hcu=2, rows=1200, cols=70),
+                              override=False)
