@@ -1,7 +1,7 @@
 # Tier-1 verification (mirrors .github/workflows/ci.yml)
 PY ?= python
 
-.PHONY: verify test bench bench-json
+.PHONY: verify test bench bench-json profile
 
 verify: test bench
 
@@ -15,3 +15,8 @@ bench:
 # --legacy-cpu pins the XLA CPU runtime the committed numbers use
 bench-json:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast --json --legacy-cpu
+
+# tick-loop numbers (default + rodent16) plus the per-phase breakdown
+# (row-update / column-update / WTA / queue) that guides the next perf PR
+profile: bench-json
+	PYTHONPATH=src $(PY) -m benchmarks.profile_phases --legacy-cpu

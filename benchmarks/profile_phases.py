@@ -1,0 +1,174 @@
+"""Per-phase tick timing breakdown: row-update / column-update / WTA / queue.
+
+  PYTHONPATH=src python -m benchmarks.profile_phases [--legacy-cpu] [--json]
+
+`make profile` runs this after the tick-loop benchmark to show WHERE the
+tick budget goes at each size, so the next perf PR aims at the right phase
+(the paper's EQ2 budget analysis, applied to our own runtime). Each phase is
+timed as its own jitted computation on realistic inputs:
+
+  * queue       — consume_bucket + enqueue_spikes for a full fanout batch
+  * row-update  — the engine's row phase (worklist or dense per-HCU form,
+                  whichever `select_backend` would pick at that size)
+  * wta         — support integration + soft winner-take-all
+  * column      — the fired-batch column update (worklist or dense form)
+
+Isolated-phase timings exclude cross-phase fusion, so their sum brackets —
+rather than equals — the fused full-tick time (also printed); the ratio
+between phases is the actionable signal.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--legacy-cpu", action="store_true",
+                    help="pin the legacy XLA CPU runtime (matches the "
+                         "committed BENCH_tick_loop.json configuration)")
+    ap.add_argument("--json", action="store_true",
+                    help="print a JSON blob instead of CSV rows")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--inner", type=int, default=20,
+                    help="calls per timed repeat")
+    args = ap.parse_args()
+    if args.legacy_cpu:
+        from benchmarks.run import pin_legacy_cpu_runtime
+        pin_legacy_cpu_runtime()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.tick_loop import DEFAULT, RODENT
+    from repro.core import engine as E
+    from repro.core import hcu as H
+    from repro.core import layout as L
+    from repro.core import network as N
+
+    def timed(fn, *operands, repeats=args.repeats, inner=args.inner):
+        out = fn(*operands)                       # compile
+        jax.block_until_ready(out)
+        meas = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                out = fn(*operands)
+            jax.block_until_ready(out)
+            meas.append((time.perf_counter() - t0) / inner)
+        return statistics.median(meas) * 1e6      # us per call
+
+    def profile_size(name, p):
+        key = jax.random.PRNGKey(0)
+        state = N.init_network(p, key)
+        n = p.n_hcu
+        t = jnp.asarray(1, jnp.int32)
+        rng = np.random.default_rng(0)
+        A = p.active_queue + 8
+        rows = np.full((n, A), p.rows, np.int32)
+        for h in range(n):
+            k = min(A, rng.poisson(6.0))
+            rows[h, :k] = rng.integers(0, p.rows, k)
+        rows = jnp.asarray(rows)
+        keys = jax.vmap(lambda h: jax.random.fold_in(key, h))(jnp.arange(n))
+        cap = max(2, int(0.35 * n) + 1)
+        # a half-full fired batch (worst realistic column load)
+        h_idx = jnp.asarray([i if i % 2 == 0 else n for i in range(cap)],
+                            jnp.int32)
+        j_idx = jnp.asarray(rng.integers(0, p.cols, cap), jnp.int32)
+        worklist = H.use_worklist(p)
+        be = E.select_backend(p)
+
+        # --- queue: consume + full-fanout enqueue ---------------------------
+        dest_h = jnp.asarray(rng.integers(0, n, cap * p.fanout), jnp.int32)
+        dest_r = jnp.asarray(rng.integers(0, p.rows, cap * p.fanout),
+                             jnp.int32)
+        dly = jnp.asarray(rng.integers(1, p.max_delay, cap * p.fanout),
+                          jnp.int32)
+        valid = jnp.asarray(rng.random(cap * p.fanout) < 0.5)
+
+        @jax.jit
+        def queue_phase(st):
+            st, bucket = N.consume_bucket(st, t, p, n)
+            st = N.enqueue_spikes(st, dest_h, dest_r, dly, valid, p, n)
+            return st.delay_rows, bucket
+
+        # --- row update -----------------------------------------------------
+        if worklist:
+            @jax.jit
+            def row_phase(hcus):
+                hcus, w_rows, c = E.worklist_lazy_rows(hcus, rows, t, p)
+                return hcus.zij, w_rows, c["counts"]
+        else:
+            @jax.jit
+            def row_phase(hcus):
+                hb = L.batched_state(hcus, n)
+                hb, w_rows, counts, _ = jax.vmap(
+                    lambda s, r: H.row_updates(H._decay_jvec(s, p), r, t, p)
+                )(hb, rows)
+                return hb.zij, w_rows, counts
+
+        _, w_rows, counts = row_phase(state.hcus)
+
+        # --- WTA ------------------------------------------------------------
+        @jax.jit
+        def wta_phase(hcus, w, cnt):
+            hcus, fired = E._wta(hcus, w, cnt, t, keys, p)
+            return hcus.h, fired
+
+        # --- column update --------------------------------------------------
+        if worklist:
+            @jax.jit
+            def col_phase(hcus):
+                return E._column_worklist(hcus, h_idx, j_idx, t, p).zij
+        else:
+            @jax.jit
+            def col_phase(hcus):
+                hb = L.batched_state(hcus, n)
+                return E.column_updates_batched(hb, h_idx, j_idx, t, p).zij
+
+        # --- whole fused tick for reference ---------------------------------
+        conn = N.make_connectivity(p, jax.random.fold_in(key, 1))
+        ext = jnp.asarray(rows[:, :8])
+
+        @jax.jit
+        def full_tick(st):
+            st, fired = E.tick(be.carry_in(st, p), conn, ext, p, be)
+            return be.carry_out(st, p).hcus.zij, fired
+
+        phases = {
+            "queue": timed(queue_phase, state),
+            "row_update": timed(row_phase, state.hcus),
+            "wta": timed(wta_phase, state.hcus, w_rows, counts),
+            "column_update": timed(col_phase, state.hcus),
+            "full_tick": timed(full_tick, state),
+        }
+        phases["backend"] = type(be).__name__
+        return phases
+
+    results = {}
+    for name, p in (DEFAULT, RODENT):
+        results[name] = profile_size(name, p)
+
+    if args.json:
+        json.dump(results, sys.stdout, indent=2)
+        print()
+        return
+    print("size,phase,us_per_call,share_of_sum")
+    for name, phases in results.items():
+        total = sum(v for k, v in phases.items()
+                    if k not in ("full_tick", "backend"))
+        for phase in ("queue", "row_update", "wta", "column_update"):
+            us = phases[phase]
+            print(f"{name},{phase},{us:.1f},{us / total:.2f}")
+        print(f"{name},full_tick,{phases['full_tick']:.1f},-  "
+              f"# {phases['backend']}, isolated-phase sum {total:.1f}")
+
+
+if __name__ == "__main__":
+    main()

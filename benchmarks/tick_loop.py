@@ -11,9 +11,14 @@ Two sizes are measured (CPU `ref` backend):
     stays on the per-HCU fused dense forms (below `hcu.use_worklist`).
   * rodent16 — rodent-ish R/C dimensioning (R=1200, C=70, 16 HCUs). This
     regime used to be bounded by XLA's copy-per-scatter on the scan-carried
-    planes; the flat-plane worklist runtime (core/worklist.py) replaces
-    those scatters with in-place dynamic-slice loops, so the tick is
-    O(touched rows) and this entry tracks that property across PRs.
+    planes; the worklist engine backend (core/engine.py + core/worklist.py)
+    replaces those scatters with in-place dynamic-slice loops over the
+    canonical flat (H*R, C) planes — the scan carry IS the stored layout —
+    so the tick is O(touched rows) and this entry tracks that property
+    across PRs. Gated in CI alongside `default` since PR 3.
+
+Both sizes are driven through the `Simulator` facade (scan runtime
+`sim.run` vs host loop `sim.run_host`).
 
 `python -m benchmarks.run --json` writes the results to BENCH_tick_loop.json.
 The committed numbers are measured with `--legacy-cpu` (benchmarks.run's
@@ -30,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import init_network, make_connectivity, network_run, run
+from repro.core import Simulator
 from repro.core.params import BCPNNParams
 
 # dispatch-bound default: the acceptance gate (scan >= 5x host ticks/sec)
@@ -56,28 +61,26 @@ def _ext_tensor(p, T, width=8, lam=4.0, seed=0):
 
 def _measure(p, backend="ref"):
     """Returns (host_us_per_tick, scan_us_per_tick), medians over REPEATS."""
-    key = jax.random.PRNGKey(0)
-    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    sim = Simulator(p, key=0, kernel=backend, chunk=N_SCAN)
     ext = _ext_tensor(p, N_SCAN)
-    kw = dict(backend=backend)
 
     # warm both compilation caches
-    st, _ = run(init_network(p, key), conn, lambda t: ext[(t - 1) % N_SCAN],
-                2, p, **kw)
-    st, _ = network_run(init_network(p, key), conn, ext, p, chunk=N_SCAN, **kw)
-    jax.block_until_ready(st.hcus.zij)
+    sim.run_host(lambda t: ext[(t - 1) % N_SCAN], 2)
+    sim.reset()
+    sim.run(ext)
+    jax.block_until_ready(sim.state.hcus.zij)
 
     host_t, scan_t = [], []
     for _ in range(REPEATS):
-        st = init_network(p, key)
+        sim.reset()
         t0 = time.perf_counter()
-        st, f = run(st, conn, lambda t: ext[(t - 1) % N_SCAN], N_HOST, p, **kw)
+        f = sim.run_host(lambda t: ext[(t - 1) % N_SCAN], N_HOST)
         jax.block_until_ready(f)
         host_t.append((time.perf_counter() - t0) / N_HOST)
 
-        st = init_network(p, key)
+        sim.reset()
         t0 = time.perf_counter()
-        st, f = network_run(st, conn, ext, p, chunk=N_SCAN, **kw)
+        f = sim.run(ext)
         jax.block_until_ready(f)
         scan_t.append((time.perf_counter() - t0) / N_SCAN)
     return statistics.median(host_t) * 1e6, statistics.median(scan_t) * 1e6

@@ -4,7 +4,7 @@
 
 BCPNN's purpose (paper §I-II) is biologically plausible cortical
 associative memory. This example demonstrates exactly that function on the
-lazily-evaluated implementation:
+lazily-evaluated implementation, driven through the `Simulator` facade:
 
   1. TRAIN: present P random patterns (one active input row per HCU,
      repeated with the WTA firing so Hebbian-Bayesian weights bind each
@@ -17,14 +17,11 @@ lazily-evaluated implementation:
 Chance level is 1/C (C = MCUs per HCU). A working associative memory scores
 far above it.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (BCPNNParams, init_network, make_connectivity,
-                        network_tick)
+from repro.core import BCPNNParams, Simulator
 from repro.data import make_patterns
 
 P_ = BCPNNParams(n_hcu=12, rows=64, cols=8, fanout=12, active_queue=16,
@@ -35,8 +32,7 @@ TRAIN_REPS = 30
 PRESENT_MS = 6
 CUE_FRACTION = 0.6
 
-key = jax.random.PRNGKey(0)
-conn = make_connectivity(P_, jax.random.fold_in(key, 1))
+sim = Simulator(P_, key=0, cap_fire=P_.n_hcu)
 patterns = make_patterns(P_, N_PATTERNS, seed=3)
 
 
@@ -48,43 +44,40 @@ def drive(pattern_rows, active_mask):
     return jnp.asarray(ext)
 
 
-def run_ticks(state, ext, n, collect=False):
+def run_ticks(ext, n):
     winners = np.full((P_.n_hcu,), -1, np.int64)
     for _ in range(n):
-        state, fired = network_tick(state, conn, ext, P_,
-                                    cap_fire=P_.n_hcu)
-        f = np.asarray(fired)
+        f = np.asarray(sim.tick(ext))
         upd = f >= 0
         winners[upd] = f[upd]
-    return state, winners
+    return winners
 
 
 # ---------------------------------- train -----------------------------------
-state = init_network(P_, key)
 all_on = np.ones(P_.n_hcu, bool)
 attractor = np.zeros((N_PATTERNS, P_.n_hcu), np.int64)
 for rep in range(TRAIN_REPS):
     for pid in range(N_PATTERNS):
-        ext = drive(patterns[pid], all_on)
-        state, winners = run_ticks(state, ext, PRESENT_MS)
+        winners = run_ticks(drive(patterns[pid], all_on), PRESENT_MS)
         if rep == TRAIN_REPS - 1:
             attractor[pid] = winners
     # short silence between presentations lets Z traces decay
-    state, _ = run_ticks(state, drive(patterns[0], np.zeros(P_.n_hcu, bool)),
-                         2)
+    run_ticks(drive(patterns[0], np.zeros(P_.n_hcu, bool)), 2)
 
 print("trained", N_PATTERNS, "patterns,", TRAIN_REPS, "reps each")
 
 # ---------------------------------- recall ----------------------------------
 rng = np.random.default_rng(0)
 correct = total = 0
+trained_state = sim.state
 for pid in range(N_PATTERNS):
     cue_mask = rng.random(P_.n_hcu) < CUE_FRACTION
     ext = drive(patterns[pid], cue_mask)
-    # recall from a snapshot of the trained state: network_tick donates its
-    # input buffers (in-place lazy updates), so each recall needs a copy
-    st = jax.tree.map(jnp.copy, state)
-    st, winners = run_ticks(st, ext, 12)
+    # each recall runs on a fresh copy of the trained state (the tick
+    # drivers donate their input buffers, so the original must be kept
+    # aside; after the loop the sim holds the last recall trajectory)
+    sim.state = jax.tree.map(jnp.copy, trained_state)
+    winners = run_ticks(ext, 12)
     probe = ~cue_mask & (winners >= 0) & (attractor[pid] >= 0)
     correct += int((winners[probe] == attractor[pid][probe]).sum())
     total += int(probe.sum())

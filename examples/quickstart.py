@@ -2,38 +2,33 @@
 
   PYTHONPATH=src python examples/quickstart.py
 
-Builds an 8-HCU network, stages 200 ms of Poisson input spikes (the paper's
-specified arrival process), runs them through the scan-compiled runtime
-(`network_run`: one compiled dispatch per 128-tick chunk, no per-tick host
-round-trips), and prints spike/queue/drop statistics plus a verification
-pass against the dense golden model — the whole paper pipeline in ~30 lines
-of user code.
+Builds an 8-HCU network behind the `Simulator` facade (one object wires up
+connectivity, the canonical flat network state and the TickEngine), stages
+200 ms of Poisson input spikes (the paper's specified arrival process), runs
+them through the scan-compiled runtime (one compiled dispatch per 128-tick
+chunk, no per-tick host round-trips), and prints spike/queue/drop statistics
+plus a verification pass against invariants of the dense golden model — the
+whole paper pipeline in ~20 lines of user code.
 """
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (BCPNNParams, flush, init_network, make_connectivity,
-                        network_run, stage_external)
+from repro.core import BCPNNParams, Simulator
 from repro.data import poisson_external_drive
 
 p = BCPNNParams(n_hcu=8, rows=256, cols=32, fanout=8, active_queue=16,
                 max_delay=8, out_rate=0.3)
-key = jax.random.PRNGKey(0)
-conn = make_connectivity(p, jax.random.fold_in(key, 1))
-state = init_network(p, key)
+sim = Simulator(p, key=0)
 
-ext = stage_external(poisson_external_drive(p, n_ticks=200, seed=42, lam=4.0))
-state, fired = network_run(state, conn, ext, p)
+fired = sim.run(poisson_external_drive(p, n_ticks=200, seed=42, lam=4.0))
 fired_total = int((fired >= 0).sum())
 
-print(f"ticks simulated     : {int(state.t)} ms")
+print(f"ticks simulated     : {int(sim.state.t)} ms")
 print(f"output spikes fired : {fired_total}")
-print(f"input-queue drops   : {int(state.drops_in)}")
-print(f"fire-batch drops    : {int(state.drops_fire)}")
+print(f"input-queue drops   : {int(sim.state.drops_in)}")
+print(f"fire-batch drops    : {int(sim.state.drops_fire)}")
 
 # lazy state is exact: flush and verify a few invariants
-st = jax.vmap(lambda s: flush(s, state.t, p))(state.hcus)
+st = sim.flushed()
 assert bool(jnp.all(jnp.isfinite(st.wij))), "weights must stay finite"
 assert bool(jnp.all(st.pij >= 0)), "P traces are probabilities"
 print(f"mean |w_ij|         : {float(jnp.mean(jnp.abs(st.wij))):.4f}")

@@ -1,5 +1,7 @@
 from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_step,
-                                           restore, restore_latest, save)
+                                           migrate_flat_planes, restore,
+                                           restore_latest, restore_network,
+                                           save)
 
-__all__ = ["AsyncCheckpointer", "latest_step", "restore", "restore_latest",
-           "save"]
+__all__ = ["AsyncCheckpointer", "latest_step", "migrate_flat_planes",
+           "restore", "restore_latest", "restore_network", "save"]

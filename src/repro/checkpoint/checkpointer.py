@@ -98,18 +98,54 @@ def latest_step(ckpt_dir: str) -> int | None:
         return int(f.read().strip())
 
 
-def restore(ckpt_dir: str, step: int, template):
-    """Restore into the structure of `template` (values are placeholders)."""
+def restore(ckpt_dir: str, step: int, template, migrate=None):
+    """Restore into the structure of `template` (values are placeholders).
+
+    ``migrate`` (optional) is applied as migrate(loaded_leaf, template_leaf)
+    -> leaf before the shape check — the hook layout-migration shims (e.g.
+    `migrate_flat_planes`) plug into.
+    """
     d = os.path.join(ckpt_dir, f"step_{step}")
     leaves, treedef = _flatten(template)
     out = [np.load(os.path.join(d, f"leaf_{i}.npy"))
            for i in range(len(leaves))]
+    if migrate is not None:
+        out = [migrate(a, t) for a, t in zip(out, leaves)]
     for i, (a, t) in enumerate(zip(out, leaves)):
         want = getattr(t, "shape", None)
         if want is not None and tuple(a.shape) != tuple(want):
             raise ValueError(f"leaf {i}: checkpoint shape {a.shape} != "
                              f"template {want}")
     return jax.tree.unflatten(treedef, out)
+
+
+def migrate_flat_planes(leaf, template_leaf):
+    """Layout shim: batched (H, R, ...) leaves -> canonical flat (H*R, ...).
+
+    Pre-engine BCPNN checkpoints stored `NetworkState.hcus` in the batched
+    layout — ij planes (H, R, C), i-vectors (H, R). The canonical layout
+    merges the two leading axes (a pure row-major reshape, bitwise the same
+    values). A leaf is migrated iff it has exactly one more leading axis
+    than the template wants and folding its first two axes yields the
+    template shape; everything else (and every already-flat leaf) passes
+    through untouched, so the shim is safe to apply unconditionally.
+    """
+    want = getattr(template_leaf, "shape", None)
+    if want is None:
+        return leaf
+    want = tuple(want)
+    have = tuple(leaf.shape)
+    if have != want and len(have) == len(want) + 1 and len(have) >= 2 \
+            and (have[0] * have[1],) + have[2:] == want:
+        return leaf.reshape(want)
+    return leaf
+
+
+def restore_network(ckpt_dir: str, step: int, template):
+    """One-call NetworkState restore with the legacy-layout migration shim:
+    loads both canonical-flat and pre-engine (H, R, C)-layout checkpoints
+    into a canonical-flat template (see `migrate_flat_planes`)."""
+    return restore(ckpt_dir, step, template, migrate=migrate_flat_planes)
 
 
 def restore_latest(ckpt_dir: str, template):

@@ -1,34 +1,65 @@
 """BCPNN core — the paper's primary contribution in JAX.
 
+Architecture (PR 3, the unified TickEngine):
+
+    Simulator  (engine.py — init / run / run_sharded / save / load facade)
+        |
+    drivers    network_tick / network_run (network.py, local)
+               make_dist_tick / make_dist_run (distributed.py, shard_map +
+               all_to_all spike exchange — spike pack/route only)
+        |
+    engine.tick   — THE single tick body: consume delay bucket -> plane
+        |           update -> spike fanout; identical RNG stream everywhere
+    TickBackend   — pluggable plane update, selected by `select_backend`:
+        |-- DenseBackend     per-HCU vmap on the batched (H, R, C) view
+        |                    (modes: lazy / eager golden / merged)
+        `-- WorklistBackend  network-global worklist over the CANONICAL FLAT
+                             (H*R, C) planes, in-place ds/dus loops (CPU) or
+                             the scalar-prefetch Pallas kernel (TPU)
+
+State is STORED flat (`layout.flat_state` layout): ij planes (H*R, C),
+i-vectors (H*R,), j-vectors (H, C). `hcu_view(state)` gives the batched
+view for per-HCU vmapped consumers (e.g. `flush`). All backend/mode/driver
+combinations produce bitwise-identical trajectories — the eBrainII property
+that every BCU runs the *same* update fabric, only the layout/parallelism
+changes.
+
 Public API:
   BCPNNParams / human_scale / rodent_scale / test_scale  — model dimensioning
+  Simulator                                   — end-to-end facade (engine.py)
+  TickBackend, DenseBackend, WorklistBackend, select_backend — the engine
   HCUState, init_hcu_state, hcu_tick_pre, column_update, flush — HCU semantics
-  NetworkState, init_network, make_connectivity, network_tick — networks
+  NetworkState, init_network, make_connectivity, network_tick, hcu_view
   network_run / stage_external — scan-compiled tick runtime (run = host loop)
   traces — closed-form lazy ZEP trace algebra
   RowMergeLayout — BCPNN-specific synaptic data organization
   worklist — flat-plane in-place worklist update primitives (O(touched rows)
              per tick at rodent/human scales; `worklist=` on the tick
-             drivers forces the path on/off, `hcu.use_worklist` is the
-             size guard)
+             drivers forces the backend, `hcu.use_worklist` is the guard)
 """
 from repro.core.params import BCPNNParams, human_scale, rodent_scale, test_scale
-from repro.core.hcu import (HCUState, init_hcu_state, hcu_tick_pre,
-                            column_update, row_updates, periodic_update,
-                            flush, dedup_rows)
+from repro.core.hcu import (HCUState, init_hcu_state, init_hcu_batch,
+                            hcu_tick_pre, column_update, row_updates,
+                            periodic_update, flush, dedup_rows)
 from repro.core.network import (NetworkState, Connectivity, init_network,
                                 make_connectivity, network_tick, network_run,
                                 stage_external, run, enqueue_spikes,
-                                column_updates_batched)
-from repro.core.layout import RowMergeLayout
+                                hcu_view, select_fired)
+from repro.core.layout import RowMergeLayout, batched_state, flat_state
+from repro.core.engine import (Simulator, TickBackend, DenseBackend,
+                               WorklistBackend, select_backend,
+                               column_updates_batched)
 from repro.core import traces, queues, worklist
 
 __all__ = [
     "BCPNNParams", "human_scale", "rodent_scale", "test_scale",
-    "HCUState", "init_hcu_state", "hcu_tick_pre", "column_update",
-    "row_updates", "periodic_update", "flush", "dedup_rows",
+    "Simulator", "TickBackend", "DenseBackend", "WorklistBackend",
+    "select_backend",
+    "HCUState", "init_hcu_state", "init_hcu_batch", "hcu_tick_pre",
+    "column_update", "row_updates", "periodic_update", "flush", "dedup_rows",
     "NetworkState", "Connectivity", "init_network", "make_connectivity",
     "network_tick", "network_run", "stage_external", "run",
-    "enqueue_spikes", "column_updates_batched",
-    "RowMergeLayout", "traces", "queues", "worklist",
+    "enqueue_spikes", "hcu_view", "select_fired", "column_updates_batched",
+    "RowMergeLayout", "batched_state", "flat_state", "traces", "queues",
+    "worklist",
 ]

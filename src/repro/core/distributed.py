@@ -15,7 +15,25 @@ problem", §II.B), HCU shards are freely relocatable: elastic re-sharding and
 failure recovery move whole HCUs between devices without any consistency
 protocol (see repro.runtime.elastic).
 
-Two drivers, same per-device tick body (`_local_tick`):
+Engine routing (PR 3)
+---------------------
+The per-device tick is `repro.core.engine.tick` — the SAME body every local
+driver runs — with two shard-specific parameters:
+
+  * ``gid_base = device_index * h_local`` so the per-HCU RNG stream folds
+    GLOBAL HCU ids (trajectories invariant to device count, the elasticity
+    contract);
+  * ``route`` = the pack + all_to_all spike exchange defined here, replacing
+    the local direct enqueue.
+
+This module therefore contains ONLY spike pack/exchange and shard plumbing —
+no tick math. The sharded worklist path (rodent/human scales) comes for free
+from `engine.WorklistBackend`: each device's scan carry is its local slice
+of the canonical flat (H*R, C) planes, updated in place, O(touched rows) per
+device per tick. The canonical flat layout shards exactly like the batched
+one did (leading axis = h_local * R rows per device).
+
+Two drivers, same per-device tick body:
   * make_dist_tick — one compiled sharded tick per call (host loop);
   * make_dist_run  — the scan-compiled twin of `network.network_run`: the
     whole pre-staged (T, H, A_ext) input runs in ONE compiled computation,
@@ -48,6 +66,7 @@ def shard_map(f, mesh, in_specs, out_specs):
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **{_CHECK_KW: False})
 
+from repro.core import engine as E
 from repro.core import hcu as H
 from repro.core import network as N
 from repro.core.params import BCPNNParams
@@ -109,85 +128,77 @@ def unpack_spikes(w, p: BCPNNParams, h_local: int):
     return dest_loc, dest_row, delay, valid
 
 
+def _exchange_route(p: BCPNNParams, rc: RouteConfig, axis, ndev, h_local):
+    """Build the sharded spike-routing hook for `engine.tick`: bucketize the
+    fired batch's fanout per destination device, exchange the fixed-capacity
+    buckets with one all_to_all, unpack and enqueue locally. This — spike
+    pack/exchange — is the ONLY tick work the sharded path adds."""
+
+    def route(state, dest_h, dest_r, dly, valid, p_, n_):
+        dest_dev = dest_h // h_local
+        dest_loc = dest_h % h_local
+        key = jnp.where(valid, dest_dev, ndev)
+        rank = N._rank_within_key(key)
+        ok = valid & (rank < rc.cap_route)
+        route_drops = jnp.sum(valid) - jnp.sum(ok)
+        flat = jnp.where(ok, dest_dev * rc.cap_route + rank,
+                         ndev * rc.cap_route)
+
+        def bucketize(vals, fill):
+            buf = jnp.full((ndev * rc.cap_route,), fill, jnp.int32)
+            return buf.at[flat].set(vals, mode="drop").reshape(ndev,
+                                                               rc.cap_route)
+
+        if rc.pack:
+            # one int32 per spike (paper Fig 3 spike word): 4x less ICI
+            # traffic
+            words = pack_spikes(dest_loc, dest_r, dly, ok, p, h_local)
+            send = bucketize(jnp.where(ok, words, 0), 0)  # (ndev, cap_route)
+            recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                                      tiled=False).reshape(ndev * rc.cap_route)
+            d_loc, d_row, d_dly, d_ok = unpack_spikes(recv, p, h_local)
+            state = N.enqueue_spikes(state, d_loc, d_row, d_dly, d_ok, p,
+                                     h_local)
+        else:
+            send = jnp.stack([
+                bucketize(dest_loc, 0),
+                bucketize(dest_r, p.rows),    # p.rows == invalid row marker
+                bucketize(dly, 1),
+                bucketize(jnp.where(ok, 1, 0).astype(jnp.int32), 0),
+            ], axis=-1)                        # (ndev, cap_route, 4)
+            recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                                      tiled=False).reshape(
+                                          ndev * rc.cap_route, 4)
+            state = N.enqueue_spikes(
+                state, recv[:, 0], recv[:, 1], recv[:, 2],
+                recv[:, 3] == 1, p, h_local)
+        return state._replace(drops_fire=state.drops_fire + route_drops)
+
+    return route
+
+
 def _local_tick(state: N.NetworkState, conn: N.Connectivity,
                 ext_rows: jnp.ndarray, p: BCPNNParams, rc: RouteConfig,
-                axis, eager: bool, backend, worklist: bool | None = None):
-    """Per-device body executed under shard_map."""
+                axis, be: "E.TickBackend"):
+    """Per-device body executed under shard_map: `engine.tick` with the
+    all_to_all spike route and a global-HCU-id RNG base. Columns run
+    unconditionally (no lax.cond), matching the historical sharded tick."""
     h_local = state.delay_rows.shape[0]
     ndev = jax.lax.psum(1, axis)
     dev = jax.lax.axis_index(axis)
-    t = state.t + 1
-
-    # ---- consume bucket, row updates, WTA (identical to single-device) ----
-    state, bucket = N.consume_bucket(state, t, p, h_local)
-    rows = jnp.concatenate([bucket, ext_rows], axis=1)
-
-    k_t = jax.random.fold_in(state.base_key, t)
-    # RNG folded by GLOBAL hcu id => invariant to device count (elasticity)
-    gids = dev * h_local + jnp.arange(h_local)
-    keys = jax.vmap(lambda g: jax.random.fold_in(k_t, g))(gids)
-    if eager:
-        hcus, fired = jax.vmap(
-            lambda s, r, k: N.reference.eager_tick(s, r, t, k, p)
-        )(state.hcus, rows, keys)
-        h_idx, j_idx, n_drop = N._select_fired(fired, rc.cap_fire)
-    else:
-        # vmap path or flat-plane worklist path by size guard — the same
-        # shared body as the single-device tick, so sharded trajectories
-        # stay bitwise-identical across the two forms. Columns here are
-        # unconditional (no lax.cond), matching the historical sharded tick.
-        hcus, fired, h_idx, j_idx, n_drop = N.lazy_batch_update(
-            state.hcus, rows, t, keys, p, rc.cap_fire, backend=backend,
-            worklist=worklist, cond_columns=False)
-    state = state._replace(hcus=hcus, t=t,
-                           drops_fire=state.drops_fire + n_drop)
-
-    # ---- fan out: build per-destination-device buckets -------------------
-    safe_h = jnp.minimum(h_idx, h_local - 1)
-    dest_h = conn.dest_hcu[safe_h, j_idx].reshape(-1)       # global ids (K*F,)
-    dest_r = conn.dest_row[safe_h, j_idx].reshape(-1)
-    dly = conn.delay[safe_h, j_idx].reshape(-1)
-    valid = jnp.repeat(h_idx < h_local, p.fanout)
-
-    dest_dev = dest_h // h_local
-    dest_loc = dest_h % h_local
-    key = jnp.where(valid, dest_dev, ndev)
-    rank = N._rank_within_key(key)
-    ok = valid & (rank < rc.cap_route)
-    route_drops = jnp.sum(valid) - jnp.sum(ok)
-    flat = jnp.where(ok, dest_dev * rc.cap_route + rank, ndev * rc.cap_route)
-
-    def bucketize(vals, fill):
-        buf = jnp.full((ndev * rc.cap_route,), fill, jnp.int32)
-        return buf.at[flat].set(vals, mode="drop").reshape(ndev, rc.cap_route)
-
-    if rc.pack:
-        # one int32 per spike (paper Fig 3 spike word): 4x less ICI traffic
-        words = pack_spikes(dest_loc, dest_r, dly, ok, p, h_local)
-        send = bucketize(jnp.where(ok, words, 0), 0)   # (ndev, cap_route)
-        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
-                                  tiled=False).reshape(ndev * rc.cap_route)
-        d_loc, d_row, d_dly, d_ok = unpack_spikes(recv, p, h_local)
-        state = N.enqueue_spikes(state, d_loc, d_row, d_dly, d_ok, p,
-                                 h_local)
-    else:
-        send = jnp.stack([
-            bucketize(dest_loc, 0),
-            bucketize(dest_r, p.rows),        # p.rows == invalid row marker
-            bucketize(dly, 1),
-            bucketize(jnp.where(ok, 1, 0).astype(jnp.int32), 0),
-        ], axis=-1)                            # (ndev, cap_route, 4)
-        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
-                                  tiled=False).reshape(ndev * rc.cap_route, 4)
-        state = N.enqueue_spikes(
-            state, recv[:, 0], recv[:, 1], recv[:, 2],
-            recv[:, 3] == 1, p, h_local)
-    return state._replace(drops_fire=state.drops_fire + route_drops), fired
+    return E.tick(state, conn, ext_rows, p, be, rc.cap_fire,
+                  gid_base=dev * h_local,
+                  route=_exchange_route(p, rc, axis, ndev, h_local),
+                  cond_columns=False)
 
 
 def _shard_specs(axes):
-    """(state, conn, per-HCU, replicated) PartitionSpecs for an HCU shard."""
-    spec_h = P(axes)      # shard leading (HCU) dim over the flattened axes
+    """(state, conn, per-HCU, replicated) PartitionSpecs for an HCU shard.
+
+    The canonical flat hcus leaves shard on their leading axis exactly like
+    the batched ones did: device d owns flat rows [d*h_local*R,
+    (d+1)*h_local*R) — whole HCUs, never split rows."""
+    spec_h = P(axes)      # shard leading (HCU / H*R) dim over the axes
     rep = P()
     state_specs = N.NetworkState(
         hcus=H.HCUState(*([spec_h] * len(H.HCUState._fields))),
@@ -203,14 +214,19 @@ def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
                    worklist: bool | None = None):
     """Build the sharded tick: state/conn/ext sharded over `axis`, which may
     be a single mesh axis name or a tuple of axis names (flattened).
-    `worklist` forces the flat-plane worklist update path on/off (default:
-    auto by size, `hcu.use_worklist`)."""
+    `worklist` forces the worklist engine backend on/off (default: auto by
+    size, `hcu.use_worklist`)."""
     axes = axis if isinstance(axis, tuple) else (axis,)
     state_specs, conn_specs, spec_h, _ = _shard_specs(axes)
+    be = E.select_backend(p, eager=eager, worklist=worklist, kernel=backend)
+
+    def local(state, conn, ext):
+        state, fired = _local_tick(be.carry_in(state, p), conn, ext,
+                                   p=p, rc=rc, axis=axes, be=be)
+        return be.carry_out(state, p), fired
 
     fn = shard_map(
-        functools.partial(_local_tick, p=p, rc=rc, axis=axes,
-                          eager=eager, backend=backend, worklist=worklist),
+        local,
         mesh=mesh,
         in_specs=(state_specs, conn_specs, spec_h),
         out_specs=(state_specs, spec_h),
@@ -232,21 +248,21 @@ def make_dist_run(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
     T-tick loop — including the per-tick all_to_all spike exchange — runs
     inside ONE compiled computation: zero host round-trips, exactly the
     per-tick trajectory of `make_dist_tick` applied T times. At worklist
-    scales (`hcu.use_worklist`, or forced via `worklist=`) each device's
-    plane updates run through the in-place flat-plane worklist loops, so
+    scales (`hcu.use_worklist`, or forced via `worklist=`) each device scans
+    over its local slice of the canonical flat planes in place, so
     per-device traffic per tick is O(touched rows) instead of O(planes).
     """
     axes = axis if isinstance(axis, tuple) else (axis,)
     state_specs, conn_specs, spec_h, _ = _shard_specs(axes)
     ext_spec = P(None, axes)            # (T, H_local, A): time replicated
     fired_spec = P(None, axes)
+    be = E.select_backend(p, eager=eager, worklist=worklist, kernel=backend)
 
     def _local_run(state, conn, ext):
         def body(s, e):
-            return _local_tick(s, conn, e, p=p, rc=rc, axis=axes,
-                               eager=eager, backend=backend,
-                               worklist=worklist)
-        return jax.lax.scan(body, state, ext)
+            return _local_tick(s, conn, e, p=p, rc=rc, axis=axes, be=be)
+        state, fired = jax.lax.scan(body, be.carry_in(state, p), ext)
+        return be.carry_out(state, p), fired
 
     fn = shard_map(
         _local_run,

@@ -113,6 +113,27 @@ def init_hcu_state(p: BCPNNParams, dtype=jnp.float32) -> HCUState:
     )
 
 
+def init_hcu_batch(p: BCPNNParams, n_hcu: int, dtype=jnp.float32) -> HCUState:
+    """Network HCU batch in the CANONICAL FLAT layout (`repro.core.layout`):
+    ij planes (H*R, C), i-vectors (H*R,), j-vectors/support (H, C).
+
+    This is the layout `NetworkState.hcus` stores and the worklist tick
+    engine consumes natively; per-HCU vmapped code gets the (H, R, C) view
+    via `layout.batched_state`. The initial values are identical to tiling
+    `init_hcu_state` n_hcu times (the init has no per-HCU variation).
+    """
+    s = init_hcu_state(p, dtype)
+    tile2 = lambda x: jnp.tile(x, (n_hcu, 1))          # (R, C) -> (H*R, C)
+    tile1 = lambda x: jnp.tile(x, n_hcu)               # (R,)   -> (H*R,)
+    rep = lambda x: jnp.broadcast_to(x, (n_hcu,) + x.shape).copy()
+    return HCUState(
+        zij=tile2(s.zij), eij=tile2(s.eij), pij=tile2(s.pij),
+        wij=tile2(s.wij), tij=tile2(s.tij),
+        zi=tile1(s.zi), ei=tile1(s.ei), pi=tile1(s.pi), ti=tile1(s.ti),
+        zj=rep(s.zj), ej=rep(s.ej), pj=rep(s.pj), h=rep(s.h),
+    )
+
+
 def dedup_rows(rows: jnp.ndarray, n_rows: int):
     """Aggregate duplicate row indices in a fixed-size spike slot array.
 
@@ -151,7 +172,7 @@ def ivec_decay(zi_g, ei_g, pi_g, ti_g, now, p: BCPNNParams) -> ZEP:
     island (optimization barriers on inputs and outputs).
 
     Shared by the per-HCU vmap paths (`row_updates`,
-    `network.column_updates_batched`, merged) and the worklist paths: the
+    `engine.column_updates_batched`, merged) and the worklist paths: the
     seal keeps XLA from contracting the decay's mul+add chains into FMAs
     differently depending on the fused producer/consumer (plane gather vs
     staged buffer), which would diverge the two paths at the 1-ulp level.
@@ -234,21 +255,34 @@ def write_rows(st: HCUState, rows_u, now, p: BCPNNParams,
     )
 
 
+def periodic_math(h_vec, pj, w_rows, counts, now, key, p: BCPNNParams):
+    """Support integration + soft WTA on the raw (C,) leaves.
+
+    The leaf-level form of `periodic_update`: the engine vmaps THIS over
+    (h, pj) network planes so the flat canonical state never has to be
+    regrouped into per-HCU NamedTuples just to run the WTA. Same ops, same
+    RNG stream as the per-HCU wrapper.
+    Returns (h', fired_j).
+    """
+    decay_m = jnp.exp(-p.dt_ms / p.tau_m)
+    drive = jnp.sum(counts[:, None] * w_rows, axis=0)          # (C,)
+    h = h_vec * decay_m + drive
+    s = h + bias(pj, p.eps)
+    # soft WTA: fire with prob out_rate*dt; winner ~ softmax(s / T)
+    k_gate, k_win = jax.random.split(key)
+    fire = jax.random.uniform(k_gate) < p.out_rate * p.dt_ms
+    winner = jax.random.categorical(k_win, s / p.wta_temp)
+    fired_j = jnp.where(fire, winner, -1).astype(jnp.int32)
+    return h, fired_j
+
+
 def periodic_update(st: HCUState, w_rows, counts, now, key, p: BCPNNParams):
     """Support integration + soft WTA (paper's 'periodic update', every ms).
 
     w_rows (A, C): freshly recomputed weight rows of this tick's spikes.
     Returns (state', fired_j) with fired_j == -1 when the HCU stays silent.
     """
-    decay_m = jnp.exp(-p.dt_ms / p.tau_m)
-    drive = jnp.sum(counts[:, None] * w_rows, axis=0)          # (C,)
-    h = st.h * decay_m + drive
-    s = h + bias(st.pj, p.eps)
-    # soft WTA: fire with prob out_rate*dt; winner ~ softmax(s / T)
-    k_gate, k_win = jax.random.split(key)
-    fire = jax.random.uniform(k_gate) < p.out_rate * p.dt_ms
-    winner = jax.random.categorical(k_win, s / p.wta_temp)
-    fired_j = jnp.where(fire, winner, -1).astype(jnp.int32)
+    h, fired_j = periodic_math(st.h, st.pj, w_rows, counts, now, key, p)
     return st._replace(h=h), fired_j
 
 
@@ -292,7 +326,7 @@ def hcu_tick_pre(st: HCUState, rows, now, key, p: BCPNNParams,
     """j-vector decay + row updates + periodic/WTA (vmap-able part of a tick).
 
     The column update is batched across HCUs at network level (only fired
-    HCUs pay for it) — see network.column_updates_batched.
+    HCUs pay for it) — see engine.column_updates_batched.
     """
     st = _decay_jvec(st, p)
     st, w_rows, counts, _ = row_updates(st, rows, now, p, backend=backend)

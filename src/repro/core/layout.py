@@ -34,18 +34,23 @@ BOTH patterns, with the optimum set by the access-rate ratio (100:1).
 (reproducing Fig 10: min at X=10, 5x better than direct) and the TPU tile
 model side by side.
 
-2. Flat (H*R, C) worklist layout (paper §VI.D: traffic scales with spikes)
+2. Flat (H*R, C) canonical layout (paper §VI.D: traffic scales with spikes)
 --------------------------------------------------------------------------
-The worklist tick runtime (`repro.core.worklist`) views the batched per-HCU
-synaptic planes `(H, R, C)` as ONE network-global flat plane `(H*R, C)` in
-which every touched synaptic row is addressable by a single global index
+The flat layout is the CANONICAL stored form of `NetworkState.hcus`
+(`flat_state` below; since the TickEngine refactor): ij planes `(H*R, C)`,
+i-vectors `(H*R,)`, j-vectors `(H, C)`. Every touched synaptic row is
+addressable by a single global index
 
     g = h * R + r          (`global_row` below).
 
-Because the per-HCU batch is stored row-major, the flat view is a zero-copy
-reinterpretation of the same buffer (`flatten_plane` / `unflatten_plane` are
-reshapes, i.e. bitcasts) — the re-layout costs nothing, and checkpoints keep
-the `(H, R, C)` shape on disk. What the flat addressing buys is the update
+Because the layouts are row-major reinterpretations of the same buffer
+(`flat_state` / `batched_state` and the per-plane `flatten_plane` /
+`unflatten_plane` are reshapes, i.e. bitcasts), per-HCU vmapped code gets
+the batched `(H, R, C)` view for free (`network.hcu_view`), checkpoints
+persist the flat form (old batched-layout checkpoints migrate through
+`checkpoint.restore_network`), and HCU shards stay whole under the
+distributed runtime (device d owns flat rows [d*h_local*R, (d+1)*h_local*R)).
+What the flat addressing buys is the update
 *pattern*: one deduplicated network-wide worklist of global row indices per
 tick, consumed by `lax.dynamic_slice`/`dynamic_update_slice` loops (CPU) or
 a scalar-prefetch Pallas grid (TPU, `kernels.bcpnn_update.
@@ -153,6 +158,36 @@ class RowMergeLayout:
 
 
 # ----------------------------- flat worklist layout --------------------------
+
+# HCUState fields stored flat (leading axis H*R) in the canonical layout; the
+# j-vector/support fields (zj, ej, pj, h) keep their (H, C) shape — they are
+# per-HCU dense and always current, so there is nothing to flatten.
+_FLAT_PLANE_FIELDS = ("zij", "eij", "pij", "wij", "tij")
+_FLAT_VEC_FIELDS = ("zi", "ei", "pi", "ti")
+
+
+def flat_state(hcus):
+    """Batched (H, R, C)/(H, R) HCUState -> the CANONICAL flat layout.
+
+    ij planes become (H*R, C), i-vectors (H*R,); j-vectors stay (H, C).
+    Pure reshapes (row-major bitcasts) — values are untouched, so the two
+    layouts are bitwise-interchangeable views of the same network.
+    """
+    upd = {f: flatten_plane(getattr(hcus, f)) for f in _FLAT_PLANE_FIELDS}
+    upd.update({f: flatten_vec(getattr(hcus, f)) for f in _FLAT_VEC_FIELDS})
+    return hcus._replace(**upd)
+
+
+def batched_state(hcus, n_hcu: int):
+    """Canonical flat HCUState -> the per-HCU batched (H, R, C)/(H, R) view
+    that `jax.vmap`-over-HCUs code consumes (zero-copy inverse of
+    `flat_state`)."""
+    upd = {f: unflatten_plane(getattr(hcus, f), n_hcu)
+           for f in _FLAT_PLANE_FIELDS}
+    upd.update({f: unflatten_vec(getattr(hcus, f), n_hcu)
+                for f in _FLAT_VEC_FIELDS})
+    return hcus._replace(**upd)
+
 
 def flatten_plane(plane: jnp.ndarray) -> jnp.ndarray:
     """(H, R, C) -> (H*R, C) flat view (zero-copy: row-major bitcast)."""

@@ -61,7 +61,7 @@ def merged_row_math(z, e, pp, t0, ring, zi_g, ti_g, counts, zj, pi_dec, pj,
 
     The single compute graph shared by the per-HCU vmap path
     (`row_updates_merged`) and the flat-plane worklist path
-    (`network._merged_worklist_update`): both vmap THIS function over the
+    (`engine._merged_worklist_update`): both vmap THIS function over the
     HCU batch, so XLA sees identical shapes/broadcasts and the two paths
     stay bitwise-identical. The optimization barriers seal the graph into
     its own fusion island: without them XLA contracts mul+add chains into

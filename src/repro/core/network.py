@@ -1,4 +1,4 @@
-"""Multi-HCU BCPNN network: spike queues, routing, and the tick loop.
+"""Multi-HCU BCPNN network: state, spike queues, routing, and tick drivers.
 
 Maps the paper's infrastructure (§II.A.3, §IV, §VI.D-E) onto JAX:
 
@@ -17,15 +17,25 @@ Maps the paper's infrastructure (§II.A.3, §IV, §VI.D-E) onto JAX:
                    fired HCUs are compacted into a fixed-capacity batch
                    (cap_fire) the same way spikes are queued.
 
-Everything is a pure function of NetworkState; `eager=True` swaps the lazy
-HCU pipeline for the dense golden reference with identical queue semantics
-and RNG stream, so the two trajectories are directly comparable.
+Canonical state layout (PR 3)
+-----------------------------
+`NetworkState.hcus` stores the FLAT layout (`repro.core.layout`): ij planes
+(H*R, C), i-vectors (H*R,), j-vectors (H, C). This is the layout the
+worklist tick engine consumes natively and the layout checkpoints persist;
+`hcu_view(state)` exposes the batched (H, R, C) view for per-HCU vmapped
+code (`flush`, inspection, the dense engine backend). Old (H, R, C)-layout
+checkpoints load through `repro.checkpoint.restore_network`'s migration
+shim.
 
-Tick-loop runtimes
-------------------
-Two drivers share the exact same single-tick body (`_tick_core`), so their
-trajectories are bitwise identical under a fixed PRNG key:
+Tick pipeline
+-------------
+The tick body itself lives in `repro.core.engine`: one `tick` skeleton
+(consume bucket -> plane update -> fan out) parameterized by a `TickBackend`
+(DenseBackend per-HCU vmap vs WorklistBackend flat-plane worklist,
+`engine.select_backend`). This module keeps the network *infrastructure* —
+queues, spike routing, compaction — and the execution drivers:
 
+  * `network_tick` — one jitted tick (host-loop building block).
   * `run`          — per-tick host loop (one jit dispatch + host sync per
                      ms). Kept as the baseline and for callers that need a
                      host-side decision between ticks.
@@ -33,29 +43,14 @@ trajectories are bitwise identical under a fixed PRNG key:
                      dense (T, H, A_ext) tensor (`stage_external`), and the
                      loop is compiled with `jax.lax.scan` in chunks of
                      `chunk` ticks (default 128). Per chunk there is exactly
-                     ONE dispatch; the NetworkState carry is donated, so
-                     state planes are threaded through the scan with zero
-                     host round-trips and no per-tick reallocation — the
-                     runtime analogue of the paper's ping-pong buffering
-                     (compute never waits on the host the way the ASIC never
-                     waits on DRAM, §VI.C).
+                     ONE dispatch; the NetworkState carry is donated and, at
+                     worklist scales, IS the stored flat layout — no
+                     per-tick reshapes, plane traffic O(touched rows).
 
-Inside the tick body, plane updates come in two size-guarded forms (the
-`worklist=` argument forces either; `hcu.use_worklist` picks by default):
-
-  * per-HCU vmap   — toy sizes: each HCU gathers/updates/scatters its own
-                     (R, C) planes, with the fused dense write forms of PR 1.
-  * worklist       — rodent/human scales: one deduplicated network-global
-                     worklist of (hcu, row) entries per tick over the flat
-                     (H*R, C) plane view (`core.worklist`, `core.layout`).
-                     All plane traffic goes through in-place dynamic-slice
-                     loops (CPU) or the scalar-prefetch Pallas kernel (TPU),
-                     touching O(worklist) rows instead of forcing XLA's
-                     copy-per-scatter on the O(H*R*C) scan carry — the
-                     runtime finally matches the paper's §VI.D guarantee
-                     that traffic scales with spikes, not synapses.
-                     Trajectories are bitwise-identical between both forms,
-                     in lazy, merged and sharded modes.
+All drivers share the exact same single-tick body, so their trajectories
+are bitwise identical under a fixed PRNG key — in lazy, eager and merged
+modes, on both the dense and worklist backends (tests/test_network_run.py,
+tests/test_worklist.py, tests/test_engine_fixtures.py).
 
 Scan-chunking contract:
   * ext staging      — ext[k] is consumed by tick t0+k+1 where t0 is
@@ -79,10 +74,7 @@ import jax.numpy as jnp
 
 from repro.core import hcu as H
 from repro.core import layout as L
-from repro.core import reference
-from repro.core import worklist as WL
 from repro.core.params import BCPNNParams
-from repro.kernels import ops
 
 
 class Connectivity(NamedTuple):
@@ -92,7 +84,7 @@ class Connectivity(NamedTuple):
 
 
 class NetworkState(NamedTuple):
-    hcus: H.HCUState        # leading axis H on every leaf
+    hcus: H.HCUState        # CANONICAL FLAT layout (see module docstring)
     delay_rows: jnp.ndarray  # (H, D, A) int32; empty slots == R
     delay_count: jnp.ndarray  # (H, D) int32
     t: jnp.ndarray          # () int32 current time (ms)
@@ -100,6 +92,13 @@ class NetworkState(NamedTuple):
     drops_fire: jnp.ndarray  # () int32 — fired-batch overflow drops
     base_key: jnp.ndarray   # PRNG key
     jring: jnp.ndarray | None = None   # (H, C, M) merged-mode spike rings
+
+
+def hcu_view(state: NetworkState) -> H.HCUState:
+    """Batched (H, R, C)/(H, R) view of the canonical flat `state.hcus`
+    (zero-copy) — the shape `jax.vmap`-over-HCUs consumers want, e.g.
+    `jax.vmap(lambda s: flush(s, state.t, p))(hcu_view(state))`."""
+    return L.batched_state(state.hcus, state.delay_rows.shape[0])
 
 
 def make_connectivity(p: BCPNNParams, key, n_hcu: int | None = None) -> Connectivity:
@@ -119,7 +118,7 @@ def make_connectivity(p: BCPNNParams, key, n_hcu: int | None = None) -> Connecti
 def init_network(p: BCPNNParams, key, n_hcu: int | None = None,
                  merged: bool = False) -> NetworkState:
     n = n_hcu or p.n_hcu
-    hcus = jax.vmap(lambda _: H.init_hcu_state(p))(jnp.arange(n))
+    hcus = H.init_hcu_batch(p, n)            # canonical flat layout
     D, A = p.max_delay, p.active_queue
     jring = None
     if merged:
@@ -224,7 +223,7 @@ def enqueue_spikes(state: NetworkState, dest_h, dest_row, delay, valid,
                           drops_in=state.drops_in + dropped)
 
 
-def _select_fired(fired: jnp.ndarray, cap: int):
+def select_fired(fired: jnp.ndarray, cap: int):
     """Compact fired HCU indices (fired[h] >= 0) into `cap` slots."""
     n = fired.shape[0]
     is_fired = fired >= 0
@@ -237,365 +236,9 @@ def _select_fired(fired: jnp.ndarray, cap: int):
     return h_idx.astype(jnp.int32), j_idx.astype(jnp.int32), n_dropped
 
 
-def _fired_mask(h_idx, j_idx, n: int, cols: int):
-    """(H, C) mask of this tick's fired (hcu, column) cells; padding
-    h_idx == n never matches arange(n)."""
-    return jnp.any(
-        (h_idx[:, None, None] == jnp.arange(n)[None, :, None])
-        & (j_idx[:, None, None] == jnp.arange(cols)[None, None, :]),
-        axis=0)
-
-
-def _bump_zj(zj, h_idx, j_idx, n: int, p: BCPNNParams):
-    """Postsynaptic Z increment for the compacted fired batch — the same
-    two bitwise-identical branches (fused where below DENSE_CELLS_MAX,
-    scatter-add above) shared by `column_updates_batched` and
-    `_column_worklist`, so the worklist/vmap equivalence contract cannot
-    silently diverge through an edit to one copy."""
-    if n * p.rows * p.cols <= H.DENSE_CELLS_MAX:
-        return jnp.where(_fired_mask(h_idx, j_idx, n, zj.shape[1]),
-                         zj + 1.0, zj)
-    return zj.at[h_idx, j_idx].add(1.0, mode="drop")
-
-
-def column_updates_batched(hcus: H.HCUState, h_idx, j_idx, now,
-                           p: BCPNNParams, backend=None) -> H.HCUState:
-    """Lazy column updates for the compacted fired batch (network level).
-
-    h_idx: (K,) HCU indices (== H for padding -> scatter-dropped);
-    j_idx: (K,) fired MCU column per slot.
-
-    Gathers exactly the K (R,)-columns that fired (plus the K i-vectors) —
-    never whole HCU states — so the cost is K*R cells, matching the paper's
-    column-update traffic budget.
-    """
-    n = hcus.zij.shape[0]
-    K = h_idx.shape[0]
-    R = p.rows
-    safe_h = jnp.minimum(h_idx, n - 1)
-    h_ix = h_idx[:, None]                     # (K,1): padding == n -> dropped
-    sh_ix = safe_h[:, None]
-    r_ix = jnp.arange(R)[None, :]
-    j_ix = j_idx[:, None]
-
-    gcol = lambda plane: plane[sh_ix, r_ix, j_ix]             # (K, R)
-    # i-vector traces brought to `now` (values only, no writeback)
-    zep_i = H.ivec_decay(hcus.zi[safe_h], hcus.ei[safe_h],
-                         hcus.pi[safe_h], hcus.ti[safe_h], now, p)
-    pj_sc = hcus.pj[safe_h, j_idx]                            # (K,)
-
-    z1, e1, p1, w1, t1 = jax.vmap(
-        lambda z, e, pp, t, w, zi, pi, pj: H.ops.col_update(
-            z, e, pp, t, now, zi, pi, pj, H.coeffs_ij(p), p.eps,
-            backend=backend, w_col=w)
-    )(gcol(hcus.zij), gcol(hcus.eij), gcol(hcus.pij), gcol(hcus.tij),
-      gcol(hcus.wij), zep_i.z, zep_i.p, pj_sc)
-
-    put = lambda plane, val: plane.at[h_ix, r_ix, j_ix].set(val, mode="drop")
-    hcus = hcus._replace(
-        zij=put(hcus.zij, z1), eij=put(hcus.eij, e1), pij=put(hcus.pij, p1),
-        wij=put(hcus.wij, w1))
-    if n * R * p.cols <= H.DENSE_CELLS_MAX:
-        # fused where beats scatter for the constant-valued Tij write and
-        # the +1.0 Zj bump (XLA CPU scatter has a high fixed per-op cost);
-        # bitwise-identical to the scatter branch.
-        fired_hc = _fired_mask(h_idx, j_idx, n, hcus.zj.shape[1])
-        return hcus._replace(
-            tij=jnp.where(fired_hc[:, None, :], now, hcus.tij),
-            zj=_bump_zj(hcus.zj, h_idx, j_idx, n, p))
-    return hcus._replace(
-        tij=put(hcus.tij, t1),
-        zj=_bump_zj(hcus.zj, h_idx, j_idx, n, p))
-
-
-def _row_worklist_common(hcus: H.HCUState, rows, t, p: BCPNNParams):
-    """Shared lazy/merged worklist prologue: j-vector decay, per-HCU dedup,
-    i-vector decay (identical math to `hcu.row_updates`) and worklist build.
-    Returns a dict of intermediates; the i-vector write values are h-major
-    flat (H*A,) arrays indexed by worklist slot."""
-    n, A = rows.shape
-    R = p.rows
-    hcus = jax.vmap(lambda s: H._decay_jvec(s, p))(hcus)
-    rows_u, counts = jax.vmap(lambda r: H.dedup_rows(r, R))(rows)
-    safe = jnp.minimum(rows_u, R - 1)
-    take = lambda v: jnp.take_along_axis(v, safe, axis=1)
-    zi_g, ti_g = take(hcus.zi), take(hcus.ti)
-    zep_i = H.ivec_decay(zi_g, take(hcus.ei), take(hcus.pi), ti_g, t, p)
-    zi_new = zep_i.z + counts
-    g_row, order, nv = WL.build_worklist(rows_u, R)
-    return dict(
-        hcus=hcus, n=n, A=A, rows_u=rows_u, counts=counts,
-        zep_i=zep_i, zi_new=zi_new, zi_g=zi_g, ti_g=ti_g,
-        g_row=g_row, order=order, nv=nv,
-        iv_vals=(zi_new.reshape(-1), zep_i.e.reshape(-1),
-                 zep_i.p.reshape(-1)))
-
-
-def _flat_planes(hcus: H.HCUState):
-    return tuple(L.flatten_plane(x)
-                 for x in (hcus.zij, hcus.eij, hcus.pij, hcus.wij, hcus.tij))
-
-
-def _unflatten_into(hcus: H.HCUState, flats, n: int) -> H.HCUState:
-    z, e, pp, w, tt = (L.unflatten_plane(f, n) for f in flats)
-    return hcus._replace(zij=z, eij=e, pij=pp, wij=w, tij=tt)
-
-
-def _column_worklist(hcus: H.HCUState, h_idx, j_idx, now, p: BCPNNParams,
-                     backend=None):
-    """Worklist twin of `column_updates_batched`: same compacted fired batch,
-    same vmapped per-cell compute graph (bitwise-identical values), but the
-    (R, 1) column blocks are read and rewritten in place through dynamic
-    slices on the flat planes instead of batched gather/scatter."""
-    n = hcus.zij.shape[0]
-    R = p.rows
-    n_fired = jnp.sum(h_idx < n)
-    safe_h = jnp.minimum(h_idx, n - 1)
-    zep_i = H.ivec_decay(hcus.zi[safe_h], hcus.ei[safe_h],
-                         hcus.pi[safe_h], hcus.ti[safe_h], now, p)
-    pj_sc = hcus.pj[safe_h, j_idx]                            # (K,)
-    flats = _flat_planes(hcus)
-    zb, eb, pb, tb = WL.read_cols((flats[0], flats[1], flats[2], flats[4]),
-                                  h_idx, j_idx, n_fired, R)
-    # same vmap-of-col_update graph as column_updates_batched, fed from the
-    # staged buffers (padding slots read zeros instead of clipped gathers;
-    # their results are never written back)
-    z1, e1, p1, w1, _ = jax.vmap(
-        lambda z, e, pp, t, zi, pi, pj: H.ops.col_update(
-            z, e, pp, t, now, zi, pi, pj, H.coeffs_ij(p), p.eps,
-            backend=backend)
-    )(zb, eb, pb, tb, zep_i.z, zep_i.p, pj_sc)
-    flats = WL.write_cols(flats, h_idx, j_idx, n_fired, (z1, e1, p1, w1),
-                          now, R)
-    hcus = _unflatten_into(hcus, flats, n)
-    # tij is already stamped by write_cols; only the Zj bump remains
-    return hcus._replace(zj=_bump_zj(hcus.zj, h_idx, j_idx, n, p))
-
-
-def lazy_batch_update(hcus: H.HCUState, rows, t, keys, p: BCPNNParams,
-                      cap: int, backend: str | None = None,
-                      worklist: bool | None = None,
-                      cond_columns: bool = True):
-    """Lazy-mode row+column updates and WTA for the local HCU batch.
-
-    The single entry point shared by `_tick_core` and
-    `distributed._local_tick`. Dispatches between the per-HCU vmap path and
-    the flat-plane worklist path by `hcu.use_worklist(p, worklist)`; the two
-    produce bitwise-identical trajectories (tests/test_worklist.py).
-    Returns (hcus', fired, h_idx, j_idx, n_drop).
-    """
-    n = rows.shape[0]
-    if not H.use_worklist(p, worklist):
-        hcus, fired = jax.vmap(
-            lambda s, r, k: H.hcu_tick_pre(s, r, t, k, p, backend=backend)
-        )(hcus, rows, keys)
-        h_idx, j_idx, n_drop = _select_fired(fired, cap)
-        col = lambda hc: column_updates_batched(hc, h_idx, j_idx, t, p,
-                                                backend=backend)
-        if cond_columns:
-            hcus = jax.lax.cond(jnp.any(h_idx < n), col, lambda hc: hc, hcus)
-        else:
-            hcus = col(hcus)
-        return hcus, fired, h_idx, j_idx, n_drop
-
-    c = _row_worklist_common(hcus, rows, t, p)
-    hcus = c["hcus"]
-    A = c["A"]
-    kb = backend or ops.default_backend()
-    if kb in ("pallas", "pallas_interpret"):
-        # scalar-prefetch Pallas kernel: grid over worklist entries, planes
-        # aliased in place (interpret mode on CPU)
-        order = c["order"]
-        h_of = order // A
-        # padding entries get the H*R sentinel explicitly (order pads with
-        # 0, which aliases a real row); ops routes sentinels onto the
-        # kernel's junk row so they can never clobber a touched row
-        W = order.shape[0]
-        rows_k = jnp.where(jnp.arange(W) < c["nv"], c["g_row"][order],
-                           n * p.rows)
-        flats = ops.worklist_row_update(
-            *_flat_planes(hcus), rows=rows_k, nv=c["nv"], now=t,
-            counts=c["counts"].reshape(-1)[order],
-            zj=hcus.zj[h_of], p_i=c["zep_i"].p.reshape(-1)[order],
-            pj=hcus.pj[h_of], coeffs=H.coeffs_ij(p), eps=p.eps, backend=kb)
-        hcus = _unflatten_into(hcus, flats, n)
-        # i-vector writeback: the O(touched) scatter forms (native off-CPU)
-        h_ix = jnp.arange(n)[:, None]
-        put = lambda v, val: v.at[h_ix, c["rows_u"]].set(val, mode="drop")
-        hcus = hcus._replace(
-            zi=put(hcus.zi, c["zi_new"]), ei=put(hcus.ei, c["zep_i"].e),
-            pi=put(hcus.pi, c["zep_i"].p),
-            ti=put(hcus.ti, jnp.full(c["rows_u"].shape, t, hcus.ti.dtype)))
-        w_g = flats[3][jnp.minimum(c["g_row"], n * p.rows - 1)]   # (W, C)
-        w_rows = jnp.where((c["g_row"] < n * p.rows)[:, None], w_g, 0.0) \
-            .reshape(n, A, p.cols)
-    else:
-        flats = _flat_planes(hcus)
-        ivecs = tuple(L.flatten_vec(x)
-                      for x in (hcus.zi, hcus.ei, hcus.pi, hcus.ti))
-        bufs = WL.read_rows((flats[0], flats[1], flats[2], flats[4]),
-                            c["g_row"], c["order"], c["nv"])
-        # the per-HCU path's exact vmapped compute graph, fed from the
-        # staged buffers (bitwise-identical values; padding slots read
-        # zeros, their outputs are dropped / zero-count drive terms)
-        sh = lambda b: b.reshape(n, A, p.cols)
-        z1, e1, p1, w1, _ = jax.vmap(
-            lambda z, e, pp, tt, cnt, zj, pi, pj: H.ops.row_update(
-                z, e, pp, tt, t, cnt, zj, pi, pj, H.coeffs_ij(p), p.eps,
-                backend=backend)
-        )(sh(bufs[0]), sh(bufs[1]), sh(bufs[2]), sh(bufs[3]),
-          c["counts"], hcus.zj, c["zep_i"].p, hcus.pj)
-        w_rows = w1
-        vals = tuple(v.reshape(n * A, p.cols) for v in (z1, e1, p1, w1))
-        flats, ivecs = WL.write_rows(flats, ivecs, c["g_row"], c["order"],
-                                     c["nv"], vals, c["iv_vals"], t)
-        hcus = _unflatten_into(hcus, flats, n)
-        zi, ei, pi, ti = (L.unflatten_vec(v, n) for v in ivecs)
-        hcus = hcus._replace(zi=zi, ei=ei, pi=pi, ti=ti)
-
-    hcus, fired = jax.vmap(
-        lambda s, w, cnt, k: H.periodic_update(s, w, cnt, t, k, p)
-    )(hcus, w_rows, c["counts"], keys)
-    h_idx, j_idx, n_drop = _select_fired(fired, cap)
-    if kb == "ref":
-        col = lambda hc: _column_worklist(hc, h_idx, j_idx, t, p,
-                                          backend=backend)
-    else:
-        col = lambda hc: column_updates_batched(hc, h_idx, j_idx, t, p,
-                                                backend=backend)
-    if cond_columns:
-        hcus = jax.lax.cond(jnp.any(h_idx < n), col, lambda hc: hc, hcus)
-    else:
-        hcus = col(hcus)
-    return hcus, fired, h_idx, j_idx, n_drop
-
-
-def _merged_worklist_update(hcus: H.HCUState, jring, rows, t, keys,
-                            p: BCPNNParams):
-    """Worklist twin of `jax.vmap(merged.hcu_tick_merged)`: merged row
-    updates (piecewise ring integration), WTA, overflow column flush,
-    same-tick cell patch, ring push and Zj bump — all plane traffic through
-    the in-place flat-plane loops. Bitwise-identical trajectories to the
-    vmapped path (tests/test_worklist.py). Returns (hcus', jring', fired)."""
-    from repro.core import merged as M
-    n, A = rows.shape
-    R = p.rows
-    c = _row_worklist_common(hcus, rows, t, p)
-    hcus = c["hcus"]
-
-    flats = _flat_planes(hcus)
-    ivecs = tuple(L.flatten_vec(x)
-                  for x in (hcus.zi, hcus.ei, hcus.pi, hcus.ti))
-    bufs = WL.read_rows((flats[0], flats[1], flats[2], flats[4]),
-                        c["g_row"], c["order"], c["nv"])
-    # vmapped merged_row_math: the exact compute graph of the per-HCU path
-    sh = lambda b: b.reshape(n, A, p.cols)
-    z1, e1, p1, w1 = jax.vmap(
-        lambda z, e, pp, tt, g, zi, ti, cnt, zj, pi, pj: M.merged_row_math(
-            z, e, pp, tt, g, zi, ti, cnt, zj, pi, pj, t, p)
-    )(sh(bufs[0]), sh(bufs[1]), sh(bufs[2]), sh(bufs[3]), jring,
-      c["zi_g"], c["ti_g"], c["counts"], hcus.zj, c["zep_i"].p, hcus.pj)
-    w_rows = w1
-    vals = tuple(v.reshape(n * A, p.cols) for v in (z1, e1, p1, w1))
-    flats, ivecs = WL.write_rows(flats, ivecs, c["g_row"], c["order"],
-                                 c["nv"], vals, c["iv_vals"], t)
-    hcus = _unflatten_into(hcus, flats, n)
-    zi, ei, pi, ti = (L.unflatten_vec(v, n) for v in ivecs)
-    hcus = hcus._replace(zi=zi, ei=ei, pi=pi, ti=ti)
-
-    hcus, fired = jax.vmap(
-        lambda s, w, cnt, k: H.periodic_update(s, w, cnt, t, k, p)
-    )(hcus, w_rows, c["counts"], keys)
-
-    active = fired >= 0
-    safe_j = jnp.maximum(fired, 0)
-    overflow = active & (jring[jnp.arange(n), safe_j, 0] != M.RING_EMPTY)
-
-    # overflow path: amortized classic column flush (fire applied, no push).
-    # Kept on the per-HCU vmapped code verbatim rather than a worklist twin:
-    # XLA:CPU's libm-vs-vectorized transcendental codegen is sensitive to
-    # the surrounding program, so only the *same code at the same spot*
-    # guarantees bitwise identity with the vmap path. This keeps the flush's
-    # O(H*R) column gathers/puts on every merged tick (not just overflow
-    # ticks) — a deliberate trade: cond-gating or worklist-rewriting it
-    # would change its fusion context and break the 1-ulp identity, and the
-    # lazy path (the perf-gated one) has no flush at all.
-    hcus = jax.vmap(lambda s, g, j, ov: M.column_flush_merged(
-        s, g, j, t, ov, p))(hcus, jring, safe_j, overflow)
-    jring = jax.vmap(
-        lambda g, sj, ov: g.at[sj].set(
-            jnp.where(ov, jnp.full((M.RING_DEPTH,), M.RING_EMPTY, jnp.int32),
-                      g[sj]))
-    )(jring, safe_j, overflow)
-
-    # normal path: defer via ring; patch only this tick's touched rows
-    pa_idx, n_patch = WL.compact_mask(active & ~overflow)
-    flats = _flat_planes(hcus)
-    flats = (WL.patch_cells(flats[0], pa_idx, n_patch, c["rows_u"],
-                            c["zi_new"], fired, R),) + flats[1:]
-    hcus = _unflatten_into(hcus, flats, n)
-    jring = jax.vmap(lambda g, j: M.push_ring(g, j, t))(
-        jring, jnp.where(overflow, -1, fired))
-    zj = jax.vmap(
-        lambda z, sj, a: z.at[sj].add(jnp.where(a, 1.0, 0.0))
-    )(hcus.zj, safe_j, active)
-    return hcus._replace(zj=zj), jring, fired
-
-
-def _tick_core(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
-               p: BCPNNParams, eager: bool, merged: bool,
-               backend: str | None, cap_fire: int | None,
-               worklist: bool | None = None):
-    """Single-tick body shared by `network_tick` (per-tick jit) and
-    `network_run` (lax.scan) — one implementation, bitwise-identical
-    trajectories (and, at worklist scales, bitwise-identical between the
-    per-HCU vmap forms and the flat-plane worklist forms)."""
-    n = state.delay_rows.shape[0]
-    t = state.t + 1
-    cap = cap_fire or max(2, int(0.35 * n) + 1)
-
-    # 1. consume this tick's delay bucket and merge with external input
-    state, bucket = consume_bucket(state, t, p, n)
-    rows = jnp.concatenate([bucket, ext_rows], axis=1)
-
-    # 2. per-HCU tick (row updates + periodic/WTA), identical RNG all paths.
-    #    The lazy path also pays its column updates here (compacted fired
-    #    batch under lax.cond — the "power gating" of the lazy model; merged
-    #    mode has no column pass at all, eBrainIII).
-    k_t = jax.random.fold_in(state.base_key, t)
-    keys = jax.vmap(lambda h: jax.random.fold_in(k_t, h))(jnp.arange(n))
-    if eager:
-        hcus, fired = jax.vmap(
-            lambda s, r, k: reference.eager_tick(s, r, t, k, p)
-        )(state.hcus, rows, keys)
-        h_idx, j_idx, n_drop = _select_fired(fired, cap)
-    elif merged:
-        from repro.core import merged as M
-        if H.use_worklist(p, worklist):
-            hcus, jring, fired = _merged_worklist_update(
-                state.hcus, state.jring, rows, t, keys, p)
-        else:
-            hcus, jring, fired = jax.vmap(
-                lambda s, g, r, k: M.hcu_tick_merged(s, g, r, t, k, p)
-            )(state.hcus, state.jring, rows, keys)
-        state = state._replace(jring=jring)
-        h_idx, j_idx, n_drop = _select_fired(fired, cap)
-    else:
-        hcus, fired, h_idx, j_idx, n_drop = lazy_batch_update(
-            state.hcus, rows, t, keys, p, cap, backend=backend,
-            worklist=worklist, cond_columns=True)
-    state = state._replace(hcus=hcus, drops_fire=state.drops_fire + n_drop,
-                           t=t)
-
-    # 4. fan out spikes from the fired batch into delay queues
-    safe_h = jnp.minimum(h_idx, n - 1)
-    dest_h = conn.dest_hcu[safe_h, j_idx].reshape(-1)          # (K*F,)
-    dest_r = conn.dest_row[safe_h, j_idx].reshape(-1)
-    dly = conn.delay[safe_h, j_idx].reshape(-1)
-    valid = jnp.repeat(h_idx < n, p.fanout)
-    state = enqueue_spikes(state, dest_h, dest_r, dly, valid, p, n)
-    return state, fired
-
+# ---------------------------------------------------------------------------
+# execution drivers (thin wrappers over engine.tick)
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("p", "eager", "backend",
                                              "cap_fire", "merged",
@@ -611,12 +254,15 @@ def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
     Returns (state', fired (H,)) with fired[h] = MCU index or -1.
     merged=True runs the eBrainIII merged-column-update mode (core/merged.py;
     state must be built with init_network(..., merged=True)).
-    worklist=True/False forces the flat-plane worklist runtime on/off
-    (default: auto by size, `hcu.use_worklist`); trajectories are identical
-    either way.
+    worklist=True/False forces the worklist engine backend on/off (default:
+    auto by size, `hcu.use_worklist`); trajectories are identical either way.
     """
-    return _tick_core(state, conn, ext_rows, p, eager, merged, backend,
-                      cap_fire, worklist)
+    from repro.core import engine as E
+    be = E.select_backend(p, eager=eager, merged=merged, worklist=worklist,
+                          kernel=backend)
+    state, fired = E.tick(be.carry_in(state, p), conn, ext_rows, p, be,
+                          cap_fire)
+    return be.carry_out(state, p), fired
 
 
 @functools.partial(jax.jit, static_argnames=("p", "eager", "backend",
@@ -628,11 +274,19 @@ def _run_chunk(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
                backend: str | None, cap_fire: int | None,
                worklist: bool | None):
     """One compiled scan over ext (T_chunk, H, A_ext): a single dispatch
-    advances the network T_chunk ticks, threading the donated state."""
+    advances the network T_chunk ticks, threading the donated state. The
+    backend picks the carry layout ONCE per chunk (`carry_in`/`carry_out` at
+    the scan boundary): the worklist backend's carry is the stored flat
+    layout itself, so the tick body has zero per-tick reshapes."""
+    from repro.core import engine as E
+    be = E.select_backend(p, eager=eager, merged=merged, worklist=worklist,
+                          kernel=backend)
+
     def body(s, e):
-        return _tick_core(s, conn, e, p, eager, merged, backend, cap_fire,
-                          worklist)
-    return jax.lax.scan(body, state, ext)
+        return E.tick(s, conn, e, p, be, cap_fire)
+
+    state, fired = jax.lax.scan(body, be.carry_in(state, p), ext)
+    return be.carry_out(state, p), fired
 
 
 def network_run(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,

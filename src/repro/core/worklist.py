@@ -9,7 +9,10 @@ gather->update->scatter made XLA materialize a copy of the full scan-carried
 has other uses), so per-tick memory traffic was O(planes).
 
 This module restores the paper's property with a network-global *worklist*
-over the flat `(H*R, C)` plane view (`repro.core.layout`):
+over the flat `(H*R, C)` planes (`repro.core.layout`) — which, since the
+TickEngine refactor, are the CANONICAL STORED layout of `NetworkState.hcus`
+(no per-tick flatten/unflatten: the scan carry is the flat layout itself,
+consumed by `engine.WorklistBackend`):
 
   * one deduplicated `(cap_total,)` worklist of global row indices is built
     per tick (`build_worklist`), compacted valid-first exactly the way
@@ -21,7 +24,7 @@ over the flat `(H*R, C)` plane view (`repro.core.layout`):
     not), and the loops early-exit at the valid-entry count — traffic and
     trip count are O(touched rows);
   * the trace math itself is NOT reimplemented here: the read loop stages
-    touched rows into dense h-major buffers and `repro.core.network` runs
+    touched rows into dense h-major buffers and `repro.core.engine` runs
     the *identical* vmapped compute graph the per-HCU path runs (same
     shapes, same broadcasts), which is what makes the two paths
     bitwise-identical — XLA's elementwise fusion is shape-sensitive at the
@@ -30,7 +33,7 @@ over the flat `(H*R, C)` plane view (`repro.core.layout`):
 On TPU the same worklist drives the scalar-prefetch Pallas kernel
 (`repro.kernels.bcpnn_update.worklist_update_kernel_call`), whose grid
 iterates worklist entries and DMAs only the touched `(1, C)` row blocks,
-aliased in place. `repro.core.network` orchestrates both (size-guarded like
+aliased in place. `repro.core.engine` orchestrates both (size-guarded like
 `hcu.DENSE_CELLS_MAX`, see `hcu.use_worklist`); this module holds the
 backend-independent loop primitives.
 """
@@ -50,7 +53,7 @@ def build_worklist(rows_u: jnp.ndarray, n_rows: int):
       g_row (H*A,) int32 — global flat row index h*R + r per slot, h-major
                            slot order; padding slots == H*R (sentinel);
       order (H*A,) int32 — stable compaction permutation, valid slots first
-                           (same idiom as network._select_fired);
+                           (same idiom as network.select_fired);
       nv    ()     int32 — number of valid entries (= loop trip count).
 
     Rows are already unique network-wide: `dedup_rows` dedups within each
@@ -162,7 +165,7 @@ def read_cols(flats, h_idx, j_idx, n_fired, n_rows: int):
     """Stage fired columns into compact (K, R) buffers.
 
     h_idx/j_idx: (K,) compacted fired batch (valid prefix of length n_fired,
-    as produced by network._select_fired). In the flat plane, HCU h's column
+    as produced by network.select_fired). In the flat plane, HCU h's column
     j is the (R, 1) block at (h*R, j) — one dynamic_slice each.
     """
     K = h_idx.shape[0]

@@ -24,8 +24,11 @@ in place — the paper's in-situ 192-bit cell rewrite — instead of allocating
 five fresh planes per call.
 
 The worklist kernel is the TPU half of the O(touched rows) tick runtime
-(`repro.core.worklist`): the deduplicated worklist row indices arrive as a
-scalar-prefetch operand, every BlockSpec index_map is driven by them, and
+(`repro.core.worklist` + `repro.core.engine.WorklistBackend`; the flat
+(H*R, C) planes it consumes are the canonical STORED layout of
+`NetworkState.hcus` since the TickEngine refactor): the deduplicated
+worklist row indices arrive as a scalar-prefetch operand, every BlockSpec
+index_map is driven by them, and
 each grid step DMAs exactly one touched (1, C) row block per plane, updates
 it with the fused cell math, and writes it back in place. Per tick the
 planes therefore cost O(worklist) row-block DMAs instead of O(H*R*C)

@@ -77,19 +77,22 @@ def row_update(zij, eij, pij, tij, now, counts, zj, p_i, p_j,
 def worklist_row_update(zij, eij, pij, wij, tij, rows, nv, now, counts, zj,
                         p_i, pj, coeffs: DecayCoeffs, eps: float,
                         backend: str | None = None):
-    """Worklist row update over flat (H*R, C) planes (Pallas backends only;
-    the "ref" worklist path lives in `repro.core.worklist` as in-place
-    dynamic-slice loops — this wrapper is the TPU/interpret dispatch).
+    """Worklist row update over the canonical flat (H*R, C) planes (Pallas
+    backends only; the "ref" worklist path lives in `repro.core.worklist` as
+    in-place dynamic-slice loops — this wrapper is the TPU/interpret
+    dispatch). Since PR 3 the flat planes are `NetworkState.hcus`'s STORED
+    layout (`core.layout.flat_state`), so the engine passes them here
+    directly — no flatten/unflatten around the call.
 
     rows (W,): compacted-valid-first flat row indices (entries >= nv are
     ignored whatever they hold); counts/p_i (W,); zj/pj (W, C) per-entry
     operands. Planes are padded to HR+>=1 junk rows (8-multiple) and a lane
     multiple of C; every entry at or past nv is rerouted onto the junk
     region so a padding grid step can never revisit (and, in interpret
-    mode, clobber) a row a valid entry updated. The padding is a per-call
-    copy, so production deployments should store the planes pre-aligned
-    (see core.layout); the aligned+junk-row fast path is then zero-copy
-    thanks to input_output_aliases.
+    mode, clobber) a row a valid entry updated. The alignment padding is the
+    one remaining per-call copy: storing the planes pre-aligned (+ junk row)
+    would make this zero-copy thanks to input_output_aliases — the next
+    layout step if TPU profiles show the pad dominating.
     """
     backend = backend or default_backend()
     HR, C = zij.shape

@@ -59,8 +59,8 @@ SCRIPT = textwrap.dedent("""
             np.asarray(getattr(s_d.hcus, name)), err_msg=name)
 
     now = s_d.t
-    a = jax.vmap(lambda s: flush(s, now, p))(s_d.hcus)
-    b = jax.vmap(lambda s: flush(s, now, p))(s_s.hcus)
+    a = jax.vmap(lambda s: flush(s, now, p))(hcu_view(s_d))
+    b = jax.vmap(lambda s: flush(s, now, p))(hcu_view(s_s))
     for name in ["zij", "eij", "pij", "wij", "zi", "pi", "zj", "pj", "h"]:
         np.testing.assert_allclose(getattr(a, name), getattr(b, name),
                                    rtol=3e-4, atol=3e-4, err_msg=name)
@@ -75,3 +75,64 @@ def test_distributed_matches_single_device():
                                        "HOME": "/root"})
     assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
     assert "DIST_OK" in r.stdout
+
+
+# The permanent guard against `_local_tick` divergence: the sharded tick is
+# `engine.tick` with a spike-exchange route, so on an equivalent single-host
+# layout (1-device mesh: same local batch, gid_base 0, all_to_all identity,
+# exchange preserving relative message order) its per-tick trajectory must
+# equal `network_tick` BITWISE — for the dense AND the worklist backend.
+# (The historical `_local_tick` duplicated the tick body and was only
+# allclose-checked on the lazy path.)
+ONE_DEV_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import *
+    from repro.core import distributed as DD
+
+    p = test_scale(n_hcu=4, rows=64, cols=16)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    mesh = jax.make_mesh((1,), ("hcu",))
+    rc = DD.default_route_config(p, p.n_hcu)
+
+    rng = np.random.default_rng(3)
+    exts = []
+    for _ in range(15):
+        e = np.full((p.n_hcu, 8), p.rows, np.int32)
+        for h in range(p.n_hcu):
+            n = min(8, rng.poisson(3))
+            e[h, :n] = rng.integers(0, p.rows, n)
+        exts.append(jnp.asarray(e))
+
+    for wl in (False, True):
+        tick = DD.make_dist_tick(mesh, p, rc, axis="hcu", worklist=wl)
+        s_d, c_d = DD.shard_network(mesh, init_network(p, key), conn)
+        s_s = init_network(p, key)
+        for k, e in enumerate(exts):
+            s_d, f_d = tick(s_d, c_d, e)
+            s_s, f_s = network_tick(s_s, conn, e, p, cap_fire=rc.cap_fire,
+                                    worklist=wl)
+            np.testing.assert_array_equal(np.asarray(f_d), np.asarray(f_s),
+                                          err_msg=f"wl={wl} tick {k}")
+        for name in s_d.hcus._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(s_d.hcus, name)),
+                np.asarray(getattr(s_s.hcus, name)),
+                err_msg=f"wl={wl} plane {name}")
+        np.testing.assert_array_equal(np.asarray(s_d.delay_rows),
+                                      np.asarray(s_s.delay_rows))
+        np.testing.assert_array_equal(np.asarray(s_d.delay_count),
+                                      np.asarray(s_s.delay_count))
+        assert int(s_d.drops_in) == int(s_s.drops_in)
+        print(f"worklist={wl} bitwise OK")
+    print("ONEDEV_OK")
+""")
+
+
+def test_sharded_tick_equals_network_tick_both_backends():
+    r = subprocess.run([sys.executable, "-c", ONE_DEV_SCRIPT],
+                       capture_output=True, text=True,
+                       env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    assert "ONEDEV_OK" in r.stdout

@@ -10,8 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (flush, init_network, make_connectivity, network_tick,
-                        test_scale as tiny_scale)
+from repro.core import (flush, hcu_view, init_network, make_connectivity,
+                        network_tick, test_scale as tiny_scale)
 
 
 def _ext_stream(p, seed, n_ticks, width=8, lam=3.0):
@@ -50,8 +50,8 @@ def test_lazy_matches_eager(seed, n_ticks):
 
     # identical trace state after a flush
     now = s_lazy.t
-    a = jax.vmap(lambda s: flush(s, now, p))(s_lazy.hcus)
-    b = jax.vmap(lambda s: flush(s, now, p))(s_eager.hcus)
+    a = jax.vmap(lambda s: flush(s, now, p))(hcu_view(s_lazy))
+    b = jax.vmap(lambda s: flush(s, now, p))(hcu_view(s_eager))
     for name in ["zij", "eij", "pij", "wij", "zi", "ei", "pi", "zj", "ej",
                  "pj", "h"]:
         np.testing.assert_allclose(
@@ -75,8 +75,8 @@ def test_lazy_matches_eager_pallas_backend():
                                 cap_fire=p.n_hcu)
         np.testing.assert_array_equal(np.asarray(fp), np.asarray(fe))
     now = st_p.t
-    a = jax.vmap(lambda s: flush(s, now, p))(st_p.hcus)
-    b = jax.vmap(lambda s: flush(s, now, p))(st_e.hcus)
+    a = jax.vmap(lambda s: flush(s, now, p))(hcu_view(st_p))
+    b = jax.vmap(lambda s: flush(s, now, p))(hcu_view(st_e))
     np.testing.assert_allclose(a.pij, b.pij, rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(a.wij, b.wij, rtol=2e-3, atol=2e-3)
 

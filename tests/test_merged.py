@@ -10,8 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (flush, init_network, make_connectivity, network_tick,
-                        test_scale as tiny_scale)
+from repro.core import (flush, hcu_view, init_network, make_connectivity,
+                        network_tick, test_scale as tiny_scale)
 from repro.core import merged as M
 from repro.core import hcu as H
 from repro.core.params import BCPNNParams
@@ -53,9 +53,9 @@ def test_merged_matches_eager(seed, n_ticks, out_rate):
     assert (np.stack(fired_m) >= 0).sum() > 0, "must exercise output spikes"
 
     now = s_m.t
-    a = jax.vmap(lambda s, g: M.flush_merged(s, g, now, p))(s_m.hcus,
+    a = jax.vmap(lambda s, g: M.flush_merged(s, g, now, p))(hcu_view(s_m),
                                                             s_m.jring)
-    b = jax.vmap(lambda s: flush(s, now, p))(s_e.hcus)
+    b = jax.vmap(lambda s: flush(s, now, p))(hcu_view(s_e))
     for name in ["zij", "eij", "pij", "wij", "zi", "pi", "zj", "pj", "h"]:
         np.testing.assert_allclose(
             getattr(a, name), getattr(b, name), rtol=4e-4, atol=4e-4,
@@ -79,9 +79,9 @@ def test_merged_exact_under_ring_overflow():
                                cap_fire=p.n_hcu)
         np.testing.assert_array_equal(np.asarray(fm), np.asarray(fe))
     now = s_m.t
-    a = jax.vmap(lambda s, g: M.flush_merged(s, g, now, p))(s_m.hcus,
+    a = jax.vmap(lambda s, g: M.flush_merged(s, g, now, p))(hcu_view(s_m),
                                                             s_m.jring)
-    b = jax.vmap(lambda s: flush(s, now, p))(s_e.hcus)
+    b = jax.vmap(lambda s: flush(s, now, p))(hcu_view(s_e))
     np.testing.assert_allclose(a.pij, b.pij, rtol=5e-4, atol=5e-4)
     np.testing.assert_allclose(a.eij, b.eij, rtol=5e-4, atol=5e-4)
     np.testing.assert_allclose(a.zij, b.zij, rtol=5e-4, atol=5e-4)

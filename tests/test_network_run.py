@@ -11,8 +11,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (flush, init_network, make_connectivity, network_run,
-                        run, stage_external, test_scale as tiny_scale)
+from repro.core import (flush, hcu_view, init_network, make_connectivity,
+                        network_run, run, stage_external,
+                        test_scale as tiny_scale)
 from repro.core import merged as M
 
 
@@ -110,9 +111,9 @@ def test_merged_scan_state_matches_eager_flush():
                            chunk=9, eager=True, cap_fire=p.n_hcu)
     np.testing.assert_array_equal(np.asarray(f_m), np.asarray(f_e))
     now = s_m.t
-    a = jax.vmap(lambda s, g: M.flush_merged(s, g, now, p))(s_m.hcus,
+    a = jax.vmap(lambda s, g: M.flush_merged(s, g, now, p))(hcu_view(s_m),
                                                             s_m.jring)
-    b = jax.vmap(lambda s: flush(s, now, p))(s_e.hcus)
+    b = jax.vmap(lambda s: flush(s, now, p))(hcu_view(s_e))
     for name in ["zij", "eij", "pij", "wij", "zi", "pi", "zj", "pj", "h"]:
         np.testing.assert_allclose(
             np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),

@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (BCPNNParams, flush, init_network, make_connectivity,
-                        network_tick)
+from repro.core import (BCPNNParams, flush, hcu_view, init_network,
+                        make_connectivity, network_tick)
 from repro.data import make_patterns, poisson_external_drive
 
 
@@ -32,7 +32,7 @@ def test_network_long_run_stays_bounded():
     exts = list(poisson_external_drive(p, 300, seed=1, lam=4.0))
     st, fired = _run(p, st, conn, exts)
     assert int(st.t) == 300
-    hc = jax.vmap(lambda s: flush(s, st.t, p))(st.hcus)
+    hc = jax.vmap(lambda s: flush(s, st.t, p))(hcu_view(st))
     assert bool(jnp.all(jnp.isfinite(hc.wij)))
     assert bool(jnp.all(hc.pij >= 0)) and bool(jnp.all(hc.pij <= 2.0))
     assert (fired >= -1).all() and (fired < p.cols).all()
@@ -109,8 +109,8 @@ def test_checkpoint_resume_spiking_network(tmp_path):
     st_b = restore(str(tmp_path), 20, init_network(p, key))
     st_b, fired_b = _run(p, st_b, conn, exts[20:])
     np.testing.assert_array_equal(fired_a, fired_b)
-    a = jax.vmap(lambda s: flush(s, st_a.t, p))(st_a.hcus)
-    b = jax.vmap(lambda s: flush(s, st_b.t, p))(st_b.hcus)
+    a = jax.vmap(lambda s: flush(s, st_a.t, p))(hcu_view(st_a))
+    b = jax.vmap(lambda s: flush(s, st_b.t, p))(hcu_view(st_b))
     np.testing.assert_allclose(np.asarray(a.pij), np.asarray(b.pij),
                                rtol=1e-6)
 
