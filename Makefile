@@ -12,11 +12,14 @@ bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast
 
 # full wall-clock benchmarks + BENCH_tick_loop.json (perf trajectory);
-# --legacy-cpu pins the XLA CPU runtime the committed numbers use
+# --legacy-cpu pins the XLA CPU runtime the committed numbers use; the
+# README bench table is regenerated from the fresh JSON (same bytes)
 bench-json:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast --json --legacy-cpu
+	PYTHONPATH=src $(PY) -m benchmarks.render_bench_table
 
-# tick-loop numbers (default + rodent16) plus the per-phase breakdown
-# (row-update / column-update / WTA / queue) that guides the next perf PR
+# tick-loop numbers (default + rodent16 + human_col) plus the per-phase
+# breakdown (row-update / column-update / WTA / queue) that guides the next
+# perf PR — read docs/BENCHMARKING.md before trusting the isolated numbers
 profile: bench-json
 	PYTHONPATH=src $(PY) -m benchmarks.profile_phases --legacy-cpu

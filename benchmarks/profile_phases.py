@@ -13,9 +13,13 @@ timed as its own jitted computation on realistic inputs:
   * wta         — support integration + soft winner-take-all
   * column      — the fired-batch column update (worklist or dense form)
 
-Isolated-phase timings exclude cross-phase fusion, so their sum brackets —
-rather than equals — the fused full-tick time (also printed); the ratio
-between phases is the actionable signal.
+Isolated-phase timings exclude cross-phase fusion AND — because each phase
+is its own non-donated jit — pay a one-time copy of every written plane at
+call entry that the scan runtime (donated carry, in-place loops) never
+pays. Their sum therefore brackets the fused full-tick loosely and
+OVERSTATES plane-writing phases at large sizes; treat the ratios as a hint
+and confirm with a scan-path ablation before optimizing (see
+docs/BENCHMARKING.md).
 """
 from __future__ import annotations
 
@@ -45,7 +49,7 @@ def main() -> None:
     import jax.numpy as jnp
     import numpy as np
 
-    from benchmarks.tick_loop import DEFAULT, RODENT
+    from benchmarks.tick_loop import DEFAULT, HUMAN_COL, RODENT
     from repro.core import engine as E
     from repro.core import hcu as H
     from repro.core import layout as L
@@ -152,7 +156,7 @@ def main() -> None:
         return phases
 
     results = {}
-    for name, p in (DEFAULT, RODENT):
+    for name, p in (DEFAULT, RODENT, HUMAN_COL):
         results[name] = profile_size(name, p)
 
     if args.json:

@@ -1,0 +1,48 @@
+"""Regenerate README.md's benchmark table from BENCH_tick_loop.json.
+
+  python -m benchmarks.render_bench_table
+
+Rewrites the block between the BENCH_TABLE_START/END markers in README.md
+from the committed JSON, so the README numbers can never drift from the
+measured trajectory (they are the same bytes). `make bench-json` runs this
+after refreshing the JSON.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+START = "<!-- BENCH_TABLE_START (generated from BENCH_tick_loop.json) -->"
+END = "<!-- BENCH_TABLE_END -->"
+
+
+def render_table(results: dict) -> str:
+    lines = [
+        "| size | H | R | C | host µs/tick | scan µs/tick | scan speedup |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for name, r in results.items():
+        lines.append(
+            f"| {name} | {r['n_hcu']} | {r['rows']} | {r['cols']} "
+            f"| {r['host_us_per_tick']:.1f} | {r['scan_us_per_tick']:.1f} "
+            f"| {r['speedup']:.1f}x |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    results = json.loads((ROOT / "BENCH_tick_loop.json").read_text())
+    readme = ROOT / "README.md"
+    text = readme.read_text()
+    block = f"{START}\n{render_table(results)}\n{END}"
+    new, n = re.subn(re.escape(START) + r".*?" + re.escape(END), block, text,
+                     flags=re.S)
+    if n != 1:
+        raise SystemExit("README.md bench-table markers missing or duplicated")
+    readme.write_text(new)
+    print(f"README.md bench table regenerated ({len(results)} sizes)")
+
+
+if __name__ == "__main__":
+    main()

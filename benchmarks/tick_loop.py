@@ -5,26 +5,32 @@ per-tick host loop pays one jit dispatch + one device sync per simulated ms,
 which dominates wall-clock long before the fused cell math does; `network_run`
 compiles the whole loop with lax.scan and pays one dispatch per chunk.
 
-Two sizes are measured (CPU `ref` backend):
+Three sizes are measured (CPU `ref` backend):
   * default — small planes, the dispatch-bound regime the scan runtime is
     built to eliminate (this is the size the ≥5x acceptance gate runs at);
     stays on the per-HCU fused dense forms (below `hcu.use_worklist`).
-  * rodent16 — rodent-ish R/C dimensioning (R=1200, C=70, 16 HCUs). This
-    regime used to be bounded by XLA's copy-per-scatter on the scan-carried
-    planes; the worklist engine backend (core/engine.py + core/worklist.py)
-    replaces those scatters with in-place dynamic-slice loops over the
-    canonical flat (H*R, C) planes — the scan carry IS the stored layout —
-    so the tick is O(touched rows) and this entry tracks that property
-    across PRs. Gated in CI alongside `default` since PR 3.
+  * rodent16 — rodent-ish R/C dimensioning (R=1200, C=70, 16 HCUs) on the
+    worklist engine backend: since PR 4 the row phase runs as the fused
+    single pass (`engine.worklist_lazy_rows` fused branch), so the tick is
+    O(touched rows) with ONE loop walk and compute on valid entries only.
+    Gated in CI alongside `default` since PR 3.
+  * human_col — one human-scale hypercolumn slab: 4 HCUs at the paper's
+    §II.A per-HCU dimensioning (R=10000, C=100, from
+    `repro.configs.bcpnn_human`). This is the size whose per-row cost the
+    paper's EQ2 budget is written about; it tracks that the worklist tick
+    stays O(touched rows) when the planes are 25 MB/HCU. Gated in CI since
+    PR 4.
 
-Both sizes are driven through the `Simulator` facade (scan runtime
+All sizes are driven through the `Simulator` facade (scan runtime
 `sim.run` vs host loop `sim.run_host`).
 
 `python -m benchmarks.run --json` writes the results to BENCH_tick_loop.json.
 The committed numbers are measured with `--legacy-cpu` (benchmarks.run's
 opt-in pin of `--xla_cpu_use_thunk_runtime=false`): the legacy XLA CPU
 runtime executes the identical HLO with ~3-4x lower per-op overhead, for
-the host loop and the scan runtime alike.
+the host loop and the scan runtime alike. docs/BENCHMARKING.md has the
+full workflow (regenerating the JSON, the CI regression gate, `make
+profile`).
 """
 from __future__ import annotations
 
@@ -35,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.bcpnn_human import CONFIG as HUMAN_CFG
 from repro.core import Simulator
 from repro.core.params import BCPNNParams
 
@@ -43,6 +50,11 @@ DEFAULT = ("default", BCPNNParams(n_hcu=8, rows=128, cols=16, fanout=8,
                                   active_queue=16, max_delay=16))
 RODENT = ("rodent16", BCPNNParams(n_hcu=16, rows=1200, cols=70, fanout=16,
                                   active_queue=16, max_delay=16))
+# one human-scale hypercolumn slab: paper per-HCU dimensioning (R=10000,
+# C=100), bench-sized HCU count/queues like rodent16
+HUMAN_COL = ("human_col", BCPNNParams(n_hcu=4, rows=HUMAN_CFG.rows,
+                                      cols=HUMAN_CFG.cols, fanout=4,
+                                      active_queue=16, max_delay=16))
 
 N_SCAN = 128         # ticks per measured scan call (one compiled chunk)
 N_HOST = 32          # ticks per measured host-loop pass
@@ -86,7 +98,7 @@ def _measure(p, backend="ref"):
     return statistics.median(host_t) * 1e6, statistics.median(scan_t) * 1e6
 
 
-def measure_sizes(sizes=(DEFAULT, RODENT)):
+def measure_sizes(sizes=(DEFAULT, RODENT, HUMAN_COL)):
     """Returns {name: {host_us_per_tick, scan_us_per_tick, host_ticks_per_sec,
     scan_ticks_per_sec, speedup, n_hcu, rows, cols}}."""
     results = {}

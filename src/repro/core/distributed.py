@@ -211,14 +211,17 @@ def _shard_specs(axes):
 def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
                    axis="hcu", eager: bool = False,
                    backend: str | None = None, donate: bool = True,
-                   worklist: bool | None = None):
+                   worklist: bool | None = None,
+                   fused: bool | None = None):
     """Build the sharded tick: state/conn/ext sharded over `axis`, which may
     be a single mesh axis name or a tuple of axis names (flattened).
     `worklist` forces the worklist engine backend on/off (default: auto by
-    size, `hcu.use_worklist`)."""
+    size, `hcu.use_worklist`); `fused` forces its single-pass fused row
+    phase (default: on, `hcu.use_fused_rows`)."""
     axes = axis if isinstance(axis, tuple) else (axis,)
     state_specs, conn_specs, spec_h, _ = _shard_specs(axes)
-    be = E.select_backend(p, eager=eager, worklist=worklist, kernel=backend)
+    be = E.select_backend(p, eager=eager, worklist=worklist, kernel=backend,
+                          fused=fused)
 
     def local(state, conn, ext):
         state, fired = _local_tick(be.carry_in(state, p), conn, ext,
@@ -240,7 +243,8 @@ def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
 def make_dist_run(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
                   axis="hcu", eager: bool = False,
                   backend: str | None = None, donate: bool = True,
-                  worklist: bool | None = None):
+                  worklist: bool | None = None,
+                  fused: bool | None = None):
     """Scan-compiled multi-tick sharded driver (network_run's sharded twin).
 
     Returns fn(state, conn, ext) -> (state', fired (T, H)) where ext is the
@@ -256,7 +260,8 @@ def make_dist_run(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
     state_specs, conn_specs, spec_h, _ = _shard_specs(axes)
     ext_spec = P(None, axes)            # (T, H_local, A): time replicated
     fired_spec = P(None, axes)
-    be = E.select_backend(p, eager=eager, worklist=worklist, kernel=backend)
+    be = E.select_backend(p, eager=eager, worklist=worklist, kernel=backend,
+                          fused=fused)
 
     def _local_run(state, conn, ext):
         def body(s, e):

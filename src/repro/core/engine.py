@@ -13,10 +13,16 @@ the `TickBackend` protocol with two implementations:
                         (H, R, C) view, with the fused dense write forms
                         (modes: "lazy", "eager" golden reference, "merged").
   * `WorklistBackend` — rodent/human scales: a network-global deduplicated
-                        worklist over the canonical flat (H*R, C) planes,
-                        with in-place dynamic-slice loops (CPU) or the
-                        scalar-prefetch Pallas kernel (TPU)
-                        (modes: "lazy", "merged").
+                        worklist over the canonical flat (H*R, C) planes.
+                        The lazy row phase is FUSED by default: one
+                        stage+compute loop over the valid entries
+                        (`worklist.fused_stage_compute`) + the in-place
+                        writeback loop on CPU, or the `ops.fused_row_update`
+                        scalar-prefetch megakernel on TPU (`fused=` forces
+                        either form, see `hcu.use_fused_rows`); columns and
+                        the merged row phase use the three-phase loops
+                        (modes: "lazy", "merged"; docs/NUMERICS.md explains
+                        why merged stays three-phase).
 
 `select_backend(p, ...)` picks by the `hcu.use_worklist` size guard (the
 `worklist=` runtime argument forces either); both backends produce
@@ -235,11 +241,19 @@ def _column_worklist(hcus: H.HCUState, h_idx, j_idx, now, p: BCPNNParams,
 
 
 def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
-                       kernel: str | None = None):
+                       kernel: str | None = None, fused: bool = True):
     """Lazy worklist row phase on canonical flat planes: dedup + worklist
     build, in-place row rewrites (ds/dus loops on CPU, scalar-prefetch Pallas
     kernel on TPU) and the i-vector writeback. Returns (hcus', w_rows,
     common) where common carries the prologue intermediates (counts etc.).
+
+    ``fused`` (default, `hcu.use_fused_rows`) fuses staging and compute into
+    one loop over the nv valid entries (`worklist.fused_stage_compute` +
+    the in-place writeback loop) on CPU, or runs the whole phase as the
+    `ops.fused_row_update` megakernel on TPU (ij planes + i-vectors aliased
+    in place, weight rows emitted for the WTA). fused=False keeps the
+    three-phase stage/compute/writeback form — bitwise-identical, kept as
+    the A/B reference (tests/test_worklist.py).
 
     Exposed (not underscored) because `benchmarks/profile_phases.py` times it
     as the row-update phase.
@@ -248,7 +262,25 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
     hcus = c["hcus"]
     n, A = c["n"], c["A"]
     kb = kernel or ops.default_backend()
-    if kb in ("pallas", "pallas_interpret"):
+    if kb in ("pallas", "pallas_interpret") and fused:
+        # megakernel: one scalar-prefetch grid pass over SLOT-ordered
+        # entries (g_row already carries the H*R sentinel on padding slots;
+        # ops reroutes sentinels onto the junk row) updates ij planes AND
+        # i-vectors in place and emits the h-major weight rows directly
+        W = n * A
+        h_of = jnp.arange(W, dtype=jnp.int32) // A
+        flats, ivecs, w_flat = ops.fused_row_update(
+            *_ij_flats(hcus), hcus.zi, hcus.ei, hcus.pi, hcus.ti,
+            rows=c["g_row"], now=t, counts=c["counts"].reshape(-1),
+            zj=hcus.zj[h_of], p_i=c["zep_i"].p.reshape(-1),
+            pj=hcus.pj[h_of],
+            zi_new=c["zi_new"].reshape(-1), ei_new=c["zep_i"].e.reshape(-1),
+            pi_new=c["zep_i"].p.reshape(-1),
+            coeffs=H.coeffs_ij(p), eps=p.eps, backend=kb)
+        hcus = _put_flats(hcus, flats)._replace(
+            zi=ivecs[0], ei=ivecs[1], pi=ivecs[2], ti=ivecs[3])
+        w_rows = w_flat.reshape(n, A, p.cols)
+    elif kb in ("pallas", "pallas_interpret"):
         # scalar-prefetch Pallas kernel: grid over worklist entries, planes
         # aliased in place (interpret mode on CPU)
         order = c["order"]
@@ -279,6 +311,40 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
         w_g = flats[3][jnp.minimum(c["g_row"], n * p.rows - 1)]   # (W, C)
         w_rows = jnp.where((c["g_row"] < n * p.rows)[:, None], w_g, 0.0) \
             .reshape(n, A, p.cols)
+    elif fused:
+        # fused stage+compute loop: per valid entry, read the (1, C) row
+        # blocks and run the SAME cell formulas the vmapped compute runs
+        # (ops.row_update "ref" dispatch at (1, C) — bitwise-identical to
+        # the (H, A, C) fusion, pinned by the head fixtures) in the same
+        # iteration — compute on nv entries instead of every staged slot.
+        # The writeback stays the separate in-place write_rows loop: a loop
+        # that reads AND writes the same carried plane forces a full-plane
+        # copy per iteration on XLA:CPU (docs/NUMERICS.md).
+        counts_f = c["counts"].reshape(-1)
+        pi_f = c["zep_i"].p.reshape(-1)
+        zj_all, pj_all = hcus.zj, hcus.pj
+        Cc = p.cols
+
+        def row_math(slot, z, e, pp, tt):
+            h = slot // A
+            one = lambda v: jax.lax.dynamic_slice(v, (slot,), (1,))
+            vec = lambda v: jax.lax.dynamic_slice(
+                v, (h, 0), (1, Cc)).reshape(Cc)
+            z1, e1, p1, w1, _ = ops.row_update(
+                z, e, pp, tt, t, one(counts_f), vec(zj_all), one(pi_f),
+                vec(pj_all), H.coeffs_ij(p), p.eps, backend=kernel)
+            return z1, e1, p1, w1
+
+        flats = _ij_flats(hcus)
+        ivecs = (hcus.zi, hcus.ei, hcus.pi, hcus.ti)
+        vals = WL.fused_stage_compute(
+            (flats[0], flats[1], flats[2], flats[4]),
+            c["g_row"], c["order"], c["nv"], row_math)
+        flats, ivecs = WL.write_rows(flats, ivecs, c["g_row"], c["order"],
+                                     c["nv"], vals, c["iv_vals"], t)
+        hcus = _put_flats(hcus, flats)._replace(
+            zi=ivecs[0], ei=ivecs[1], pi=ivecs[2], ti=ivecs[3])
+        w_rows = vals[3].reshape(n, A, p.cols)
     else:
         flats = _ij_flats(hcus)
         ivecs = (hcus.zi, hcus.ei, hcus.pi, hcus.ti)
@@ -304,10 +370,26 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
     return hcus, w_rows, c
 
 
-def worklist_merged_rows(hcus: H.HCUState, jring, rows, t, p: BCPNNParams):
+def worklist_merged_rows(hcus: H.HCUState, jring, rows, t, p: BCPNNParams,
+                         fused: bool = True):
     """Merged worklist row phase (piecewise ring integration) on canonical
-    flat planes. Returns (hcus', w_rows, common)."""
+    flat planes. Returns (hcus', w_rows, common).
+
+    ``fused`` is accepted for driver-API symmetry with the lazy phase but is
+    DELIBERATELY inert here: the merged row phase always runs the
+    three-phase stage/compute/writeback form. The fused single-pass form was
+    built and A/B-measured for this path too, and it diverges from the
+    vmapped compute at 1 ulp in Zij: `merged_row_math`'s ring-integration
+    island is large enough that XLA:CPU's fusion emitter contracts the tail
+    ``z*ez + dz`` into an FMA in the big vmapped compilation, and NO
+    loop-embedded compilation of the same sealed island — per-entry (1, C)
+    or per-HCU (A, C) blocks alike — reproduces that contraction. Since the
+    head fixtures pin the vmapped semantics bit-for-bit, merged keeps the
+    staged compute. Full story: docs/NUMERICS.md (the lazy island is small
+    enough to compile identically in both contexts, which is why
+    `worklist_lazy_rows` CAN fuse)."""
     from repro.core import merged as M
+    del fused
     c = _row_worklist_common(hcus, rows, t, p)
     hcus = c["hcus"]
     n, A = c["n"], c["A"]
@@ -332,17 +414,19 @@ def worklist_merged_rows(hcus: H.HCUState, jring, rows, t, p: BCPNNParams):
 
 
 def _merged_worklist_update(hcus: H.HCUState, jring, rows, t, keys,
-                            p: BCPNNParams):
+                            p: BCPNNParams, fused: bool = True):
     """Worklist twin of `jax.vmap(merged.hcu_tick_merged)`: merged row
-    updates (piecewise ring integration), WTA, overflow column flush,
-    same-tick cell patch, ring push and Zj bump — all row-plane traffic
-    through the in-place flat-plane loops. Bitwise-identical trajectories to
-    the vmapped path (tests/test_worklist.py). Returns (hcus', jring',
-    fired)."""
+    updates (piecewise ring integration; `fused` threads through but the
+    merged row phase stays three-phase — see `worklist_merged_rows`), WTA,
+    overflow column flush, same-tick cell patch, ring push and Zj bump — all
+    row-plane traffic through the in-place flat-plane loops.
+    Bitwise-identical trajectories to the vmapped path
+    (tests/test_worklist.py). Returns (hcus', jring', fired)."""
     from repro.core import merged as M
     n = rows.shape[0]
     R = p.rows
-    hcus, w_rows, c = worklist_merged_rows(hcus, jring, rows, t, p)
+    hcus, w_rows, c = worklist_merged_rows(hcus, jring, rows, t, p,
+                                           fused=fused)
     hcus, fired = _wta(hcus, w_rows, c["counts"], t, keys, p)
 
     active = fired >= 0
@@ -464,9 +548,15 @@ class WorklistBackend(NamedTuple):
     O(touched rows) per tick, the paper's §VI.D guarantee. The scan carry IS
     the stored flat layout: no per-tick reshapes.
     mode: "lazy" or "merged"; kernel as in DenseBackend.
+    fused: fuse the lazy row phase's staging and compute into one
+    valid-entries-only loop (`worklist.fused_stage_compute`; the
+    `ops.fused_row_update` megakernel on TPU) instead of the three-phase
+    stage/compute/writeback form — default on (`hcu.use_fused_rows`),
+    bitwise-identical either way.
     """
     mode: str = "lazy"
     kernel: str | None = None
+    fused: bool = True
 
     def carry_in(self, state, p: BCPNNParams):
         return state
@@ -479,12 +569,13 @@ class WorklistBackend(NamedTuple):
         n = state.delay_rows.shape[0]
         if self.mode == "merged":
             hcus, jring, fired = _merged_worklist_update(
-                state.hcus, state.jring, rows, t, keys, p)
+                state.hcus, state.jring, rows, t, keys, p, fused=self.fused)
             h_idx, j_idx, n_drop = N.select_fired(fired, cap)
             return (state._replace(hcus=hcus, jring=jring), fired,
                     h_idx, j_idx, n_drop)
         hcus, w_rows, c = worklist_lazy_rows(state.hcus, rows, t, p,
-                                             kernel=self.kernel)
+                                             kernel=self.kernel,
+                                             fused=self.fused)
         hcus, fired = _wta(hcus, w_rows, c["counts"], t, keys, p)
         h_idx, j_idx, n_drop = N.select_fired(fired, cap)
         kb = self.kernel or ops.default_backend()
@@ -503,18 +594,23 @@ class WorklistBackend(NamedTuple):
 
 def select_backend(p: BCPNNParams, *, eager: bool = False,
                    merged: bool = False, worklist: bool | None = None,
-                   kernel: str | None = None) -> "TickBackend":
+                   kernel: str | None = None,
+                   fused: bool | None = None) -> "TickBackend":
     """Map the historical mode flags onto a TickBackend.
 
     Keeps `hcu.use_worklist`'s size-guard semantics (R*C > DENSE_CELLS_MAX
-    switches to the worklist engine) and the `worklist=` override. The eager
-    golden reference is dense by definition (it touches every cell anyway).
+    switches to the worklist engine) and the `worklist=` override; `fused=`
+    likewise forces the worklist backend's single-pass row phase on/off
+    (`hcu.use_fused_rows`, default on — a no-op for the dense backends). The
+    eager golden reference is dense by definition (it touches every cell
+    anyway).
     """
     if eager:
         return DenseBackend(mode="eager", kernel=kernel)
     mode = "merged" if merged else "lazy"
     if H.use_worklist(p, worklist):
-        return WorklistBackend(mode=mode, kernel=kernel)
+        return WorklistBackend(mode=mode, kernel=kernel,
+                               fused=H.use_fused_rows(p, fused))
     return DenseBackend(mode=mode, kernel=kernel)
 
 
@@ -591,11 +687,12 @@ class Simulator:
     def __init__(self, p: BCPNNParams, key=0, *, n_hcu: int | None = None,
                  merged: bool = False, eager: bool = False,
                  worklist: bool | None = None, kernel: str | None = None,
+                 fused: bool | None = None,
                  cap_fire: int | None = None, chunk: int = 128):
         self.p = p
         self.n_hcu = n_hcu or p.n_hcu
         self.merged, self.eager = merged, eager
-        self.worklist, self.kernel = worklist, kernel
+        self.worklist, self.kernel, self.fused = worklist, kernel, fused
         self.cap_fire, self.chunk = cap_fire, chunk
         self._dist_cache = None
         self._key = jax.random.PRNGKey(key) if isinstance(key, int) else key
@@ -607,12 +704,13 @@ class Simulator:
     def _kw(self):
         return dict(eager=self.eager, merged=self.merged,
                     worklist=self.worklist, backend=self.kernel,
-                    cap_fire=self.cap_fire)
+                    fused=self.fused, cap_fire=self.cap_fire)
 
     @property
     def backend(self) -> "TickBackend":
         return select_backend(self.p, eager=self.eager, merged=self.merged,
-                              worklist=self.worklist, kernel=self.kernel)
+                              worklist=self.worklist, kernel=self.kernel,
+                              fused=self.fused)
 
     def reset(self, key=None) -> "Simulator":
         """Re-init the network state (same connectivity unless key given)."""
@@ -676,7 +774,7 @@ class Simulator:
                                                      self.conn, axis=axis)
             fn = DD.make_dist_run(mesh, self.p, rc, axis=axis,
                                   eager=self.eager, backend=self.kernel,
-                                  worklist=self.worklist)
+                                  worklist=self.worklist, fused=self.fused)
             self._dist_cache = (cache_key, fn)
         self.state, fired = self._dist_cache[1](self.state, self.conn,
                                                 jnp.asarray(ext))

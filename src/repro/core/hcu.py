@@ -64,6 +64,26 @@ def use_worklist(p: "BCPNNParams", override: bool | None = None) -> bool:
     return p.rows * p.cols > DENSE_CELLS_MAX
 
 
+def use_fused_rows(p: "BCPNNParams", override: bool | None = None) -> bool:
+    """Guard for the fused (single-pass) worklist row phase.
+
+    The fused row phase replaces the worklist backend's three-phase row
+    update — staging gather loop, vmapped compute over every staged slot,
+    writeback loop — with a fused stage+compute loop over the valid entries
+    only (`worklist.fused_stage_compute` + the in-place writeback loop on
+    CPU, `ops.fused_row_update`'s scalar-prefetch megakernel on TPU). It only
+    ever applies inside `engine.WorklistBackend`, so `use_worklist`'s
+    R*C > DENSE_CELLS_MAX size guard is its size guard too: the dense forms
+    at small scale are untouched. ``override`` (the `fused=` runtime
+    argument) forces either form — tests use it to A/B the fused pass
+    against the split loops; both are bitwise-identical
+    (tests/test_worklist.py, tests/test_engine_fixtures.py).
+    """
+    if override is not None:
+        return bool(override)
+    return True
+
+
 class HCUState(NamedTuple):
     # synaptic ij-matrix planes, (R, C)
     zij: jnp.ndarray

@@ -23,12 +23,22 @@ consumed by `engine.WorklistBackend`):
     a fancy gather next to a loop forces full-plane copies; ds/dus loops do
     not), and the loops early-exit at the valid-entry count — traffic and
     trip count are O(touched rows);
-  * the trace math itself is NOT reimplemented here: the read loop stages
-    touched rows into dense h-major buffers and `repro.core.engine` runs
-    the *identical* vmapped compute graph the per-HCU path runs (same
-    shapes, same broadcasts), which is what makes the two paths
-    bitwise-identical — XLA's elementwise fusion is shape-sensitive at the
-    1-ulp level, so "same formula, different batch shape" is not enough.
+  * the trace math itself is NOT reimplemented here. Two loop forms exist:
+    the FUSED form (`fused_stage_compute` + `write_rows`, the lazy default
+    since PR 4) inlines the engine-supplied row math into the staging loop
+    and computes ONLY the nv valid entries; the three-phase form
+    (`read_rows` -> vmapped compute -> `write_rows`) stages touched rows
+    into dense h-major buffers and runs the *identical* vmapped compute
+    graph the per-HCU path runs over every slot. Both are bitwise-identical
+    to the dense path where pinned — but NOT automatically: XLA:CPU codegen
+    (exp lowering, FMA contraction) is context-sensitive at the 1-ulp
+    level, which is why the merged mode keeps the three-phase form (see
+    docs/NUMERICS.md for the measured FMA case). A further hard rule: a
+    loop body must access each carried buffer in ONE direction only —
+    read-only or write-only. A body that both dynamic-slices and
+    dynamic-update-slices the same carried plane forces XLA:CPU to copy the
+    full plane PER ITERATION (measured ~200x at rodent16), which is why the
+    writeback is a separate loop rather than folded into the compute loop.
 
 On TPU the same worklist drives the scalar-prefetch Pallas kernel
 (`repro.kernels.bcpnn_update.worklist_update_kernel_call`), whose grid
@@ -157,6 +167,55 @@ def write_rows(flats, ivecs, g_row, order, nv, vals, iv_vals, now):
     out = jax.lax.while_loop(lambda s: s[0] < nv, body,
                              (jnp.asarray(0, jnp.int32), flats, ivecs))
     return out[1], out[2]
+
+
+def fused_stage_compute(flats, g_row, order, nv, row_math):
+    """Fused stage+compute pass: one loop that reads each touched row and
+    runs the row math on it IN THE SAME ITERATION, writing the results to
+    compact h-major value buffers.
+
+    Replaces the first two of the three phases (`read_rows` staging +
+    vmapped compute): the old form staged every slot and then computed the
+    WHOLE (cap_total, C) buffer — padding slots included — where this loop
+    computes exactly the nv valid entries. The writeback stays the separate
+    `write_rows` loop: XLA:CPU keeps a while-loop carry in place only when
+    each carried buffer is accessed in ONE direction per loop (read-only or
+    write-only); a body that dynamic-slices and dynamic-update-slices the
+    same carried plane forces a full-plane copy PER ITERATION (measured:
+    ~200x slower at rodent16 — see docs/NUMERICS.md). Here the planes are
+    read-only and the value buffers write-only, so everything stays in
+    place.
+
+      flats:    (zij, eij, pij, tij) flat (H*R, C) planes (read-only; note
+                Wij is not needed — it is recomputed);
+      row_math: row_math(slot, z, e, p, t) -> (z1, e1, p1, w1) on (1, C)
+                blocks — MUST be the same cell formulas the vmapped compute
+                runs (the engine passes closures over `bcpnn_ref` math;
+                bitwise identity across the block-shape change is pinned by
+                tests/test_worklist.py and the head fixtures);
+
+    Returns (z1, e1, p1, w1) value buffers, each (cap_total, C) h-major,
+    zeros at padding slots (their WTA drive terms are zero-count, and
+    `write_rows` never reads them).
+    """
+    C = flats[0].shape[1]
+    cap_total = g_row.shape[0]
+    vals = tuple(jnp.zeros((cap_total, C), jnp.float32) for _ in range(4))
+    dus = jax.lax.dynamic_update_slice
+
+    def body(s):
+        e, vals = s
+        slot = order[e]
+        r = g_row[slot]
+        ds = lambda f: jax.lax.dynamic_slice(f, (r, 0), (1, C))
+        z1, e1, p1, w1 = row_math(slot, ds(flats[0]), ds(flats[1]),
+                                  ds(flats[2]), ds(flats[3]))
+        vals = (dus(vals[0], z1, (slot, 0)), dus(vals[1], e1, (slot, 0)),
+                dus(vals[2], p1, (slot, 0)), dus(vals[3], w1, (slot, 0)))
+        return e + 1, vals
+
+    return jax.lax.while_loop(lambda s: s[0] < nv, body,
+                              (jnp.asarray(0, jnp.int32), vals))[1]
 
 
 # ----------------------------- column worklist -------------------------------

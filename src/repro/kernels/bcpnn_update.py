@@ -12,11 +12,18 @@ its ping-pong buffering (EQ3, k=2):
   * blocks are (BS, 128)-shaped: the 128-lane dimension is the hardware
     analogue of the paper's "cell-level parallelism" (#FPU_sets).
 
-Three entry points:
-  row_update_kernel_call      : (S, C) row blocks, rank-1 counts x zj
-  col_update_kernel_call      : a column viewed as (R/128, 128) lanes
-  worklist_update_kernel_call : scalar-prefetch grid over a network-global
-                                worklist of flat (H*R, C) plane rows
+Four entry points:
+  row_update_kernel_call        : (S, C) row blocks, rank-1 counts x zj
+  col_update_kernel_call        : a column viewed as (R/128, 128) lanes
+  worklist_update_kernel_call   : scalar-prefetch grid over a network-global
+                                  worklist of flat (H*R, C) plane rows
+  fused_row_update_kernel_call  : the worklist row-phase MEGAKERNEL — same
+                                  scalar-prefetch grid, but one grid step
+                                  completes the whole row phase for its
+                                  entry: the five ij planes AND the four
+                                  i-vector planes are aliased in place, and
+                                  the freshly recomputed weight row is
+                                  emitted per entry for the WTA drive
 
 All alias the five state-plane inputs onto their outputs
 (``input_output_aliases``), so the Zij/Eij/Pij/Wij/Tij planes are rewritten
@@ -260,6 +267,115 @@ def worklist_update_kernel_call(zij, eij, pij, wij, tij, rows, nv, now,
     return fn(rows.astype(jnp.int32), jnp.asarray(nv, jnp.int32).reshape(1),
               now_arr, zij, eij, pij, wij, tij,
               counts.reshape(W, 1), zj, p_i.reshape(W, 1), pj)
+
+
+def _fused_row_kernel(rows_ref, now_ref, z_ref, e_ref, p_ref, w_ref, t_ref,
+                      zi_ref, ei_ref, pi_ref, ti_ref, counts_ref, zj_ref,
+                      piv_ref, pj_ref, zin_ref, ein_ref, pin_ref,
+                      zo_ref, eo_ref, po_ref, wo_ref, to_ref,
+                      zio_ref, eio_ref, pio_ref, tio_ref, wrow_ref,
+                      *, k: DecayCoeffs, eps: float, hr: int):
+    """One worklist entry per grid step, the WHOLE row phase fused:
+
+      * the (1, C) ij-plane row blocks the index_maps DMA'd in are updated
+        with the fused cell math and written back in place (aliased);
+      * the entry's (1, 1) i-vector cells are rewritten in place from the
+        prefetched post-decay values (the i-vector math runs once in the
+        engine prologue — same sealed `ivec_decay` island as every other
+        path — so the kernel only moves the results);
+      * the recomputed weight row is emitted to the per-entry `wrow` output,
+        which IS the WTA drive input — no post-kernel re-gather of Wij.
+
+    Validity is per entry, not a compacted prefix: `rows` is slot-ordered
+    and the caller reroutes invalid slots onto the junk row past the logical
+    plane (row >= hr), so a padding step can only ever rewrite junk. The
+    `valid` gate keeps even that write a pass-through."""
+    i = pl.program_id(0)
+    valid = rows_ref[i] < hr
+    now = now_ref[0, 0]
+    dt = (now - t_ref[...]).astype(jnp.float32)
+    dz = counts_ref[...] * zj_ref[...]           # (1,1) * (1,BL) rank-1
+    z1, e1, p1, w1 = _cell_math(z_ref[...], e_ref[...], p_ref[...], dt, dz,
+                                piv_ref[...], pj_ref[...], k, eps)
+    zo_ref[...] = jnp.where(valid, z1, z_ref[...])
+    eo_ref[...] = jnp.where(valid, e1, e_ref[...])
+    po_ref[...] = jnp.where(valid, p1, p_ref[...])
+    wo_ref[...] = jnp.where(valid, w1, w_ref[...])
+    to_ref[...] = jnp.where(valid, jnp.full_like(t_ref[...], now), t_ref[...])
+    zio_ref[...] = jnp.where(valid, zin_ref[...], zi_ref[...])
+    eio_ref[...] = jnp.where(valid, ein_ref[...], ei_ref[...])
+    pio_ref[...] = jnp.where(valid, pin_ref[...], pi_ref[...])
+    tio_ref[...] = jnp.where(valid, jnp.full_like(ti_ref[...], now),
+                             ti_ref[...])
+    wrow_ref[...] = jnp.where(valid, w1, jnp.zeros_like(w1))
+
+
+# Megakernel aliases (prefetch operands count first): 0=rows, 1=now,
+# 2=zij..6=tij -> plane outputs 0..4; 7=zi..10=ti -> i-vector outputs 5..8.
+# Output 9 (the per-entry weight row) is the one fresh allocation.
+_FUSED_ALIASES = {2: 0, 3: 1, 4: 2, 5: 3, 6: 4, 7: 5, 8: 6, 9: 7, 10: 8}
+
+
+@functools.partial(jax.jit, static_argnames=("k", "eps", "hr", "interpret"))
+def fused_row_update_kernel_call(zij, eij, pij, wij, tij, zi, ei, pi, ti,
+                                 rows, now, counts, zj, p_i, pj,
+                                 zi_new, ei_new, pi_new, k: DecayCoeffs,
+                                 eps: float, hr: int, interpret: bool = False):
+    """Scalar-prefetch Pallas megakernel for the fused worklist row phase.
+
+    Planes (HRp, C) f32/int32, i-vectors (HRp, 1); rows (W,) int32 SLOT-
+    ordered flat row indices — entries for padding/duplicate slots must be
+    rerouted by the caller onto junk rows in [hr, HRp) (``hr`` is the
+    logical H*R row count; everything at or past it is junk territory).
+    counts/p_i/zi_new/ei_new/pi_new (W, 1) and zj/pj (W, C) are per-entry
+    operands. The nine state-plane inputs alias the nine state outputs
+    (in-place rewrite); the tenth output is the (W, C) weight-row buffer
+    consumed by the WTA drive. HRp % 8 == 0 and C % 128 == 0 required
+    (ops.py pads).
+    """
+    HR, C = zij.shape
+    W = rows.shape[0]
+    if pltpu is None:  # pragma: no cover - pltpu import failed
+        raise NotImplementedError(
+            "fused_row_update_kernel_call needs jax.experimental.pallas.tpu "
+            "(PrefetchScalarGridSpec); use the 'ref' fused loop instead")
+    now_arr = jnp.asarray(now, jnp.int32).reshape(1, 1)
+    row_spec = pl.BlockSpec((1, C), lambda i, rows_ref: (rows_ref[i], 0))
+    iv_spec = pl.BlockSpec((1, 1), lambda i, rows_ref: (rows_ref[i], 0))
+    ent_spec = pl.BlockSpec((1, C), lambda i, rows_ref: (i, 0))
+    ent1_spec = pl.BlockSpec((1, 1), lambda i, rows_ref: (i, 0))
+    one = pl.BlockSpec((1, 1), lambda i, rows_ref: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(W,),
+        in_specs=[one,
+                  row_spec, row_spec, row_spec, row_spec, row_spec,
+                  iv_spec, iv_spec, iv_spec, iv_spec,
+                  ent1_spec, ent_spec, ent1_spec, ent_spec,
+                  ent1_spec, ent1_spec, ent1_spec],
+        out_specs=[row_spec] * 5 + [iv_spec] * 4 + [ent_spec],
+    )
+    out_shape = [jax.ShapeDtypeStruct((HR, C), jnp.float32)] * 4 \
+        + [jax.ShapeDtypeStruct((HR, C), jnp.int32)] \
+        + [jax.ShapeDtypeStruct((HR, 1), jnp.float32)] * 3 \
+        + [jax.ShapeDtypeStruct((HR, 1), jnp.int32)] \
+        + [jax.ShapeDtypeStruct((W, C), jnp.float32)]
+    kwargs = {}
+    cp = _compiler_params(("arbitrary",))
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    fn = pl.pallas_call(
+        functools.partial(_fused_row_kernel, k=k, eps=eps, hr=hr),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=_FUSED_ALIASES,
+        interpret=interpret,
+        **kwargs,
+    )
+    return fn(rows.astype(jnp.int32), now_arr, zij, eij, pij, wij, tij,
+              zi, ei, pi, ti, counts.reshape(W, 1), zj,
+              p_i.reshape(W, 1), pj, zi_new.reshape(W, 1),
+              ei_new.reshape(W, 1), pi_new.reshape(W, 1))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "eps", "bs", "bl", "interpret"))

@@ -111,6 +111,50 @@ def worklist_row_update(zij, eij, pij, wij, tij, rows, nv, now, counts, zj,
     return tuple(o[:HR, :C] for o in out)
 
 
+def fused_row_update(zij, eij, pij, wij, tij, zi, ei, pi, ti, rows, now,
+                     counts, zj, p_i, pj, zi_new, ei_new, pi_new,
+                     coeffs: DecayCoeffs, eps: float,
+                     backend: str | None = None):
+    """Fused worklist row phase over the canonical flat planes — Pallas
+    megakernel dispatch (the "ref" fused path is
+    `worklist.fused_stage_compute` + `worklist.write_rows`;
+    this wrapper is the TPU/interpret half of `engine.worklist_lazy_rows`'
+    fused branch).
+
+    One kernel launch completes the whole row phase: the five (H*R, C) ij
+    planes AND the four (H*R,) i-vectors are rewritten in place (aliased),
+    and the per-entry recomputed weight rows come back as a (W, C) buffer
+    for the WTA drive — replacing the old three-op tail (worklist kernel +
+    four i-vector scatters + a Wij re-gather).
+
+    rows (W,): SLOT-ordered flat row indices, one per worklist slot, with
+    the H*R sentinel on padding/duplicate slots (no compaction: the grid is
+    W steps either way, and slot order is what makes the weight-row output
+    land h-major for free). counts/p_i/zi_new/ei_new/pi_new (W,);
+    zj/pj (W, C) per-entry operands. Sentinel entries are rerouted onto the
+    junk row region (>= H*R) added by the alignment padding, so a padding
+    grid step can never clobber a touched row.
+    Returns ((zij', eij', pij', wij', tij'), (zi', ei', pi', ti'), w_rows).
+    """
+    backend = backend or default_backend()
+    HR, C = zij.shape
+    W = rows.shape[0]
+    HRp = _round_up(HR + 1, 8)       # always >= 1 junk row for padding
+    Cp = _round_up(C, bcpnn_update.DEFAULT_BLOCK_L)
+    interp = backend == "pallas_interpret"
+    rows_eff = jnp.where(rows < HR, jnp.clip(rows, 0, HRp - 1), HRp - 1)
+    iv2 = lambda v, fill=0: _pad1(v, HRp, fill).reshape(HRp, 1)
+    out = bcpnn_update.fused_row_update_kernel_call(
+        _pad2(zij, HRp, Cp), _pad2(eij, HRp, Cp), _pad2(pij, HRp, Cp),
+        _pad2(wij, HRp, Cp), _pad2(tij, HRp, Cp, fill=0),
+        iv2(zi), iv2(ei), iv2(pi), iv2(ti),
+        rows_eff, now, counts, _pad2(zj, W, Cp), p_i, _pad2(pj, W, Cp),
+        zi_new, ei_new, pi_new, k=coeffs, eps=eps, hr=HR, interpret=interp)
+    flats = tuple(o[:HR, :C] for o in out[:5])
+    ivecs = tuple(o.reshape(HRp)[:HR] for o in out[5:9])
+    return flats, ivecs, out[9][:, :C]
+
+
 def col_update(z_col, e_col, p_col, t_col, now, zi_t, p_i, p_j_scalar,
                coeffs: DecayCoeffs, eps: float, backend: str | None = None,
                w_col=None):

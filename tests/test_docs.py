@@ -1,0 +1,104 @@
+"""Docs link-consistency: every file path and dotted symbol named in
+docs/*.md (and README.md) must actually exist.
+
+Two mechanical conventions, enforced so the docs cannot silently rot:
+
+  * path-like tokens (``a/b/c.py``, ``FOO.md``, ``x.json``, ...) must exist
+    relative to the repo root, or — shorthand used by architecture diagrams
+    — relative to ``src/repro/`` (``core/engine.py``);
+  * dotted code references starting with a known top-level package
+    (``repro.core.engine.tick``, ``benchmarks.bcpnn_tables.fig10_rowmerge``)
+    must resolve: the longest importable module prefix is imported and the
+    remaining attributes are getattr-walked.
+
+When writing docs, reference code with exactly these two forms and this
+test keeps them honest. Wired into tier-1 (`make verify` -> `make test`).
+"""
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+
+_PATH_RE = re.compile(
+    r"\.?[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|md|json|yml|yaml|npz|txt)\b")
+_DOTTED_RE = re.compile(
+    r"\b(?:repro|benchmarks)\.[A-Za-z_][A-Za-z0-9_.]*[A-Za-z0-9_]")
+
+# glob-ish tokens used to describe families of files are checked as globs
+_GLOBBABLE = ("*", "?")
+
+
+def _path_candidates(tok: str):
+    yield ROOT / tok
+    yield ROOT / "src" / "repro" / tok
+
+
+def _resolve_dotted(tok: str) -> bool:
+    parts = tok.split(".")
+    for k in range(len(parts), 0, -1):
+        modname = ".".join(parts[:k])
+        try:
+            obj = importlib.import_module(modname)
+        except ImportError:
+            continue
+        for attr in parts[k:]:
+            if not hasattr(obj, attr):
+                return False
+            obj = getattr(obj, attr)
+        return True
+    return False
+
+
+def _doc_ids():
+    return [p.relative_to(ROOT).as_posix() for p in DOCS]
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _repo_root_on_path():
+    # `benchmarks.*` resolves when pytest runs from the repo root (tier-1);
+    # make that explicit so the test is cwd-independent
+    sys.path.insert(0, str(ROOT))
+    yield
+    sys.path.remove(str(ROOT))
+
+
+def test_docs_tree_exists():
+    for name in ("ARCHITECTURE.md", "PAPER_MAP.md", "NUMERICS.md",
+                 "BENCHMARKING.md"):
+        assert (ROOT / "docs" / name).is_file(), f"docs/{name} missing"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=_doc_ids())
+def test_doc_file_paths_exist(doc):
+    text = doc.read_text()
+    missing = []
+    for tok in sorted(set(_PATH_RE.findall(text))):
+        if any(ch in tok for ch in _GLOBBABLE):
+            if not list(ROOT.glob(tok)):
+                missing.append(tok)
+            continue
+        if not any(c.exists() for c in _path_candidates(tok)):
+            missing.append(tok)
+    assert not missing, (
+        f"{doc.name} references nonexistent files: {missing}")
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=_doc_ids())
+def test_doc_symbols_resolve(doc):
+    text = doc.read_text()
+    missing = []
+    for tok in sorted(set(_DOTTED_RE.findall(text))):
+        # path-like tokens with extensions are covered by the path check
+        if _PATH_RE.fullmatch(tok):
+            continue
+        if not _resolve_dotted(tok):
+            missing.append(tok)
+    assert not missing, (
+        f"{doc.name} references unresolvable symbols: {missing}")

@@ -172,3 +172,108 @@ def test_worklist_kernel_padding_entries_are_noops():
     for o, ex, name in zip(out, exp, "zepwt"):
         np.testing.assert_allclose(np.asarray(o), ex, rtol=3e-6, atol=3e-6,
                                    err_msg=f"plane {name}")
+
+
+def _fused_args(rng, HR, C, W, rows_list, tmax=100):
+    """Slot-ordered args for the fused megakernel: `rows` carries the HR
+    sentinel on invalid slots (no compaction)."""
+    rows = jnp.asarray(list(rows_list) + [HR] * (W - len(rows_list)),
+                       jnp.int32)
+    return dict(
+        zij=jnp.asarray(rng.uniform(0, 2, (HR, C)), jnp.float32),
+        eij=jnp.asarray(rng.uniform(0, 2, (HR, C)), jnp.float32),
+        pij=jnp.asarray(rng.uniform(1e-3, 1, (HR, C)), jnp.float32),
+        wij=jnp.asarray(rng.uniform(-1, 1, (HR, C)), jnp.float32),
+        tij=jnp.asarray(rng.integers(0, tmax, (HR, C)), jnp.int32),
+        zi=jnp.asarray(rng.uniform(0, 2, (HR,)), jnp.float32),
+        ei=jnp.asarray(rng.uniform(0, 2, (HR,)), jnp.float32),
+        pi=jnp.asarray(rng.uniform(1e-3, 1, (HR,)), jnp.float32),
+        ti=jnp.asarray(rng.integers(0, tmax, (HR,)), jnp.int32),
+        rows=rows, now=tmax,
+        counts=jnp.asarray(rng.integers(0, 4, (W,)), jnp.float32),
+        zj=jnp.asarray(rng.uniform(0, 2, (W, C)), jnp.float32),
+        p_i=jnp.asarray(rng.uniform(1e-3, 1, (W,)), jnp.float32),
+        pj=jnp.asarray(rng.uniform(1e-3, 1, (W, C)), jnp.float32),
+        zi_new=jnp.asarray(rng.uniform(0, 3, (W,)), jnp.float32),
+        ei_new=jnp.asarray(rng.uniform(0, 2, (W,)), jnp.float32),
+        pi_new=jnp.asarray(rng.uniform(1e-3, 1, (W,)), jnp.float32),
+    )
+
+
+def _fused_expected(a, HR, C, W):
+    """Per-entry bcpnn_ref oracle for the fused megakernel: planes, the
+    in-place i-vector rewrite and the per-slot weight-row output."""
+    from repro.kernels import bcpnn_ref
+    exp = [np.array(a[k]) for k in ("zij", "eij", "pij", "wij", "tij")]
+    iv = [np.array(a[k]) for k in ("zi", "ei", "pi", "ti")]
+    w_rows = np.zeros((W, C), np.float32)
+    for e in range(W):
+        r = int(a["rows"][e])
+        if r >= HR:
+            continue
+        z1, e1, p1, w1, t1 = bcpnn_ref.row_update_ref(
+            a["zij"][r:r + 1], a["eij"][r:r + 1], a["pij"][r:r + 1],
+            a["tij"][r:r + 1], a["now"], a["counts"][e:e + 1], a["zj"][e],
+            a["p_i"][e:e + 1], a["pj"][e], K, EPS)
+        for plane, val in zip(exp, (z1, e1, p1, w1, t1)):
+            plane[r] = np.asarray(val)[0]
+        iv[0][r] = float(a["zi_new"][e])
+        iv[1][r] = float(a["ei_new"][e])
+        iv[2][r] = float(a["pi_new"][e])
+        iv[3][r] = a["now"]
+        w_rows[e] = np.asarray(w1)[0]
+    return exp, iv, w_rows
+
+
+@pytest.mark.parametrize("HR,C,W,rows", [
+    (32, 128, 8, (3, 7, 11, 30)),          # aligned, no padding
+    (256, 16, 24, (1, 4, 66, 89, 128, 199, 255)),      # lane padding
+    (40, 100, 8, (0, 39)),                 # both-dim padding
+    (32, 128, 8, ()),                      # empty worklist
+])
+def test_fused_megakernel_matches_ref(HR, C, W, rows):
+    """The fused row-phase megakernel (interpret mode) vs the per-row
+    oracle: ij planes, i-vectors and the per-slot weight rows all match;
+    untouched rows / i-vector cells stay EXACTLY preserved (in-place
+    aliasing contract)."""
+    rng = np.random.default_rng(HR * 1000 + C)
+    a = _fused_args(rng, HR, C, W, rows)
+    flats, ivecs, w_out = ops.fused_row_update(
+        **a, coeffs=K, eps=EPS, backend="pallas_interpret")
+    exp, iv_exp, w_exp = _fused_expected(a, HR, C, W)
+    untouched = np.setdiff1d(np.arange(HR), np.asarray(rows, int))
+    for o, ex, name in zip(flats, exp, "zepwt"):
+        o = np.asarray(o)
+        np.testing.assert_allclose(o, ex, rtol=3e-6, atol=3e-6,
+                                   err_msg=f"plane {name}")
+        np.testing.assert_array_equal(o[untouched], ex[untouched],
+                                      err_msg=f"untouched rows, plane {name}")
+    for o, ex, name in zip(ivecs, iv_exp, ("zi", "ei", "pi", "ti")):
+        # i-vector writes are pure data movement -> exact everywhere
+        np.testing.assert_array_equal(np.asarray(o), ex,
+                                      err_msg=f"i-vector {name}")
+    np.testing.assert_allclose(np.asarray(w_out), w_exp, rtol=3e-6,
+                               atol=3e-6, err_msg="weight rows")
+
+
+def test_fused_megakernel_sentinel_slots_are_noops():
+    """Interleaved sentinel slots (slot order, no compaction) must leave
+    every plane row and i-vector cell untouched, and emit zero weight rows
+    for those slots."""
+    rng = np.random.default_rng(1)
+    HR, C, W = 32, 128, 8
+    a = _fused_args(rng, HR, C, W, ())
+    # valid slots 1 and 5; everything else the HR sentinel
+    a["rows"] = jnp.asarray([HR, 3, HR, HR, HR, 17, HR, HR], jnp.int32)
+    flats, ivecs, w_out = ops.fused_row_update(
+        **a, coeffs=K, eps=EPS, backend="pallas_interpret")
+    exp, iv_exp, w_exp = _fused_expected(a, HR, C, W)
+    for o, ex, name in zip(flats, exp, "zepwt"):
+        np.testing.assert_allclose(np.asarray(o), ex, rtol=3e-6, atol=3e-6,
+                                   err_msg=f"plane {name}")
+    for o, ex, name in zip(ivecs, iv_exp, ("zi", "ei", "pi", "ti")):
+        np.testing.assert_array_equal(np.asarray(o), ex,
+                                      err_msg=f"i-vector {name}")
+    assert np.all(np.asarray(w_out)[[0, 2, 3, 4, 6, 7]] == 0.0), \
+        "sentinel slots must emit zero weight rows"
+    np.testing.assert_allclose(np.asarray(w_out), w_exp, rtol=3e-6, atol=3e-6)

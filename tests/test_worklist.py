@@ -56,7 +56,7 @@ def _ext_tensor(p, seed, n_ticks, width=8, lam=3.0, duplicates=False):
     return jnp.asarray(out)
 
 
-def _run_both(p, ext, merged=False, chunk=16, key_seed=0):
+def _run_both(p, ext, merged=False, chunk=16, key_seed=0, fused=None):
     key = jax.random.PRNGKey(key_seed)
     conn = make_connectivity(p, jax.random.fold_in(key, 1))
     kw = dict(merged=merged, chunk=chunk,
@@ -64,7 +64,7 @@ def _run_both(p, ext, merged=False, chunk=16, key_seed=0):
     sa, fa = network_run(init_network(p, key, merged=merged), conn, ext, p,
                          worklist=False, **kw)
     sb, fb = network_run(init_network(p, key, merged=merged), conn, ext, p,
-                         worklist=True, **kw)
+                         worklist=True, fused=fused, **kw)
     return sa, fa, sb, fb
 
 
@@ -176,17 +176,75 @@ def test_sharded_worklist_bitwise():
     assert "SHARDED-WORKLIST-OK" in r.stdout, r.stdout + r.stderr
 
 
-def test_pallas_interpret_worklist_matches_vmap_path():
-    """The scalar-prefetch Pallas worklist kernel (interpret mode) must
-    reproduce the vmapped pallas-interpret path exactly: both run the same
-    kernel cell math, so even the weight planes match bitwise."""
+@pytest.mark.parametrize("fused", [False, True])
+def test_lazy_worklist_fused_vs_staged_bitwise(fused):
+    """The fused single-pass row phase (`fused=True`, the default) and the
+    three-phase staged form (`fused=False`) must both match the dense path
+    bit-for-bit — the fused loop inlines the SAME (1, C) cell formulas the
+    vmapped compute runs, and the lazy island is small enough that XLA:CPU
+    compiles it identically in both contexts (docs/NUMERICS.md)."""
+    ext = _ext_tensor(LAZY_P, seed=23, n_ticks=40, lam=3.0)
+    sa, fa, sb, fb = _run_both(LAZY_P, ext, fused=fused)
+    assert (np.asarray(fa) >= 0).sum() > 0
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+def test_lazy_fused_bitwise_at_rodent_dimensioning():
+    """Pin the fused/staged identity AT A SHAPE WHERE FUSED ACTUALLY RUNS
+    BY DEFAULT: R=1200, C=70 (rodent dimensioning, R*C > DENSE_CELLS_MAX so
+    `use_worklist` holds without an override). The numerics doctrine
+    (docs/NUMERICS.md) is that codegen identity across compilation contexts
+    is shape-dependent and must be empirically pinned — the toy-size A/Bs
+    above do not cover the large-shape compilations a jax/XLA upgrade could
+    change."""
+    p = BCPNNParams(n_hcu=2, rows=1200, cols=70, fanout=2, active_queue=8,
+                    max_delay=8)
+    assert H.use_worklist(p), "must exercise the default-on regime"
+    ext = _ext_tensor(p, seed=13, n_ticks=8, lam=4.0)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    sa, fa = network_run(init_network(p, key), conn, ext, p, chunk=8,
+                         fused=False)
+    sb, fb = network_run(init_network(p, key), conn, ext, p, chunk=8,
+                         fused=True)
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+def test_lazy_worklist_fused_under_queue_overflow():
+    ext = _ext_tensor(HOT_P, seed=5, n_ticks=60, lam=6.0)
+    sa, fa, sb, fb = _run_both(HOT_P, ext, chunk=60, fused=True)
+    assert int(sa.drops_in) > 0 and int(sa.drops_fire) > 0
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+def test_pallas_interpret_fused_megakernel_matches_vmap_path():
+    """The fused scalar-prefetch megakernel (`ops.fused_row_update`,
+    interpret mode) must reproduce the vmapped pallas-interpret path exactly
+    — ij planes, i-vectors (rewritten in place by the kernel) and weight
+    planes alike."""
     ext = _ext_tensor(LAZY_P, seed=3, n_ticks=12, lam=3.0)
     key = jax.random.PRNGKey(0)
     conn = make_connectivity(LAZY_P, jax.random.fold_in(key, 1))
     sa, fa = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
                          chunk=12, worklist=False, backend="pallas_interpret")
     sb, fb = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
-                         chunk=12, worklist=True, backend="pallas_interpret")
+                         chunk=12, worklist=True, fused=True,
+                         backend="pallas_interpret")
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+def test_pallas_interpret_worklist_matches_vmap_path():
+    """The non-fused scalar-prefetch Pallas worklist kernel (interpret mode)
+    must reproduce the vmapped pallas-interpret path exactly: both run the
+    same kernel cell math, so even the weight planes match bitwise."""
+    ext = _ext_tensor(LAZY_P, seed=3, n_ticks=12, lam=3.0)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(LAZY_P, jax.random.fold_in(key, 1))
+    sa, fa = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
+                         chunk=12, worklist=False, backend="pallas_interpret")
+    sb, fb = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
+                         chunk=12, worklist=True, fused=False,
+                         backend="pallas_interpret")
     _assert_bitwise(sa, fa, sb, fb)
 
 
