@@ -1,7 +1,7 @@
 # Tier-1 verification (mirrors .github/workflows/ci.yml)
 PY ?= python
 
-.PHONY: verify test bench bench-json profile
+.PHONY: verify test bench bench-json profile check-pycache ci-local
 
 verify: test bench
 
@@ -19,7 +19,29 @@ bench-json:
 	PYTHONPATH=src $(PY) -m benchmarks.render_bench_table
 
 # tick-loop numbers (default + rodent16 + human_col) plus the per-phase
-# breakdown (row-update / column-update / WTA / queue) that guides the next
-# perf PR — read docs/BENCHMARKING.md before trusting the isolated numbers
+# scan-context ablation (queue / row / WTA / column, measured as deltas on
+# the scan path itself) written to BENCH_phase_breakdown.json — read
+# docs/BENCHMARKING.md before trusting the isolated numbers also printed
 profile: bench-json
+	PYTHONPATH=src $(PY) -m benchmarks.profile_phases --legacy-cpu
+
+# fail if bytecode artifacts ever get committed (nested __pycache__ dirs
+# included); CI runs this in the `tests` job
+check-pycache:
+	@if git ls-files | grep -E '(^|/)__pycache__(/|$$)|\.py[co]$$'; then \
+		echo "ERROR: tracked bytecode artifacts (see above)"; exit 1; \
+	else echo "no tracked bytecode"; fi
+
+# the exact CI sequence (tests job + bench-gate job), runnable locally so a
+# gate failure can be reproduced without pushing: pycache guard -> tier-1
+# tests -> fast benchmarks -> tick-loop regression gate vs the COMMITTED
+# JSON (taken from HEAD, not the working tree, so repeated runs cannot
+# compound a slow drift past the gate; note the fresh measurement is left
+# in BENCH_tick_loop.json afterwards, same as `make bench-json`) ->
+# per-phase ablation artifact
+ci-local: check-pycache test bench
+	git show HEAD:BENCH_tick_loop.json > /tmp/BENCH_committed.json
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast --json --legacy-cpu
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		--committed /tmp/BENCH_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.profile_phases --legacy-cpu

@@ -1,0 +1,48 @@
+"""Tick-loop benchmark regression gate (shared by CI and `make ci-local`).
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --committed /tmp/BENCH_committed.json [--fresh BENCH_tick_loop.json]
+
+Compares a freshly measured BENCH_tick_loop.json against the committed one
+and fails (exit 1) if any gated size's `scan_us_per_tick` regresses beyond
+the headroom factor. The headroom (1.25x) absorbs CI-runner noise while
+still catching the step-function regressions that matter (a lost in-place
+alias or an accidental full-plane copy is 2x+, never 1.1x). See
+docs/BENCHMARKING.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_SIZES = ("default", "rodent16", "human_col")
+METRIC = "scan_us_per_tick"
+HEADROOM = 1.25
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--committed", required=True,
+                    help="path to the committed (baseline) JSON")
+    ap.add_argument("--fresh", default="BENCH_tick_loop.json",
+                    help="path to the freshly measured JSON")
+    ap.add_argument("--headroom", type=float, default=HEADROOM)
+    args = ap.parse_args()
+
+    committed = json.load(open(args.committed))
+    fresh = json.load(open(args.fresh))
+    failures = []
+    for name in GATED_SIZES:
+        old, new = committed[name][METRIC], fresh[name][METRIC]
+        print(f"{name}/{METRIC}: committed {old:.1f} us, fresh {new:.1f} us "
+              f"({new / old:.2f}x, limit {args.headroom:.2f}x)")
+        if new > old * args.headroom:
+            failures.append(f"{name}/{METRIC} {new:.1f} us exceeds committed "
+                            f"{old:.1f} us by >{args.headroom:.2f}x")
+    if failures:
+        sys.exit("perf regression: " + "; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

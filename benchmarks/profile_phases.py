@@ -1,30 +1,45 @@
-"""Per-phase tick timing breakdown: row-update / column-update / WTA / queue.
+"""Per-phase tick timing: SCAN-CONTEXT ABLATION + isolated-phase breakdown.
 
   PYTHONPATH=src python -m benchmarks.profile_phases [--legacy-cpu] [--json]
 
 `make profile` runs this after the tick-loop benchmark to show WHERE the
 tick budget goes at each size, so the next perf PR aims at the right phase
-(the paper's EQ2 budget analysis, applied to our own runtime). Each phase is
-timed as its own jitted computation on realistic inputs:
+(the paper's EQ2 budget analysis, applied to our own runtime). Always
+writes ``BENCH_phase_breakdown.json`` at the repo root (uploaded as a CI
+artifact next to BENCH_tick_loop.json, so the "what's the next bottleneck"
+ablation is regenerated on every PR instead of by hand).
 
-  * queue       — consume_bucket + enqueue_spikes for a full fanout batch
-  * row-update  — the engine's row phase (worklist or dense per-HCU form,
-                  whichever `select_backend` would pick at that size)
-  * wta         — support integration + soft winner-take-all
-  * column      — the fired-batch column update (worklist or dense form)
+Two measurements per size:
 
-Isolated-phase timings exclude cross-phase fusion AND — because each phase
-is its own non-donated jit — pay a one-time copy of every written plane at
-call entry that the scan runtime (donated carry, in-place loops) never
-pays. Their sum therefore brackets the fused full-tick loosely and
-OVERSTATES plane-writing phases at large sizes; treat the ratios as a hint
-and confirm with a scan-path ablation before optimizing (see
-docs/BENCHMARKING.md).
+  * scan ablation (the trustworthy one) — the full `network_run`-style
+    scan (donated carry, `engine.tick`, one compiled chunk) is re-measured
+    with ONE phase replaced by a cheap stand-in, and the phase cost is the
+    DELTA against the unmodified scan. This is measured in the exact
+    compilation context the production runtime pays for — cross-phase
+    fusion, in-place carries and all. Caveats: ablating a phase perturbs
+    the spike trajectory downstream (zero WTA drive changes winners, a
+    no-op enqueue empties future buckets), so deltas are O(phase) accurate,
+    not exact; and deltas need not sum to the full-tick time.
+  * isolated phases (kept for continuity) — each phase as its own jitted
+    computation on realistic inputs. Because each is a non-donated jit, a
+    plane-writing phase pays a one-time copy of every written plane at call
+    entry that the scan runtime never pays: isolated numbers OVERSTATE
+    plane-writing phases at large sizes (measured in PR 4: the row phase
+    looked ~2x its scan-context cost). Trust the ablation column; treat
+    isolated numbers as a fusion-free upper bracket (docs/BENCHMARKING.md).
+
+Phases: enqueue (the fanout spike-enqueue side of the queue; the bucket
+CONSUME side runs inside `engine.tick` and cannot be ablated through the
+route hook, so it is not part of this delta — the isolated `queue` timing
+covers both), row_update (the engine's row phase), wta (support
+integration + soft winner-take-all), column_update (the fired-batch
+column phase).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import statistics
 import sys
 import time
@@ -36,20 +51,26 @@ def main() -> None:
                     help="pin the legacy XLA CPU runtime (matches the "
                          "committed BENCH_tick_loop.json configuration)")
     ap.add_argument("--json", action="store_true",
-                    help="print a JSON blob instead of CSV rows")
+                    help="print the JSON blob instead of CSV rows (the "
+                         "file is written either way)")
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--inner", type=int, default=20,
-                    help="calls per timed repeat")
+                    help="calls per timed repeat (isolated phases)")
+    ap.add_argument("--ticks", type=int, default=128,
+                    help="ticks per measured scan chunk (ablation)")
     args = ap.parse_args()
     if args.legacy_cpu:
         from benchmarks.run import pin_legacy_cpu_runtime
         pin_legacy_cpu_runtime()
 
+    import functools
+    from typing import NamedTuple
+
     import jax
     import jax.numpy as jnp
     import numpy as np
 
-    from benchmarks.tick_loop import DEFAULT, HUMAN_COL, RODENT
+    from benchmarks.tick_loop import DEFAULT, HUMAN_COL, RODENT, _ext_tensor
     from repro.core import engine as E
     from repro.core import hcu as H
     from repro.core import layout as L
@@ -67,6 +88,135 @@ def main() -> None:
             meas.append((time.perf_counter() - t0) / inner)
         return statistics.median(meas) * 1e6      # us per call
 
+    # ---------------- scan-context ablation --------------------------------
+    # `base` is the REAL backend `select_backend` picks at this size; the
+    # "full" variant runs it untouched (so the baseline is the production
+    # graph), and each ablated variant swaps ONE phase for a cheap stand-in
+    # by re-composing the same engine functions the backend calls. The
+    # plane-update recomposition here must track engine.{Dense,Worklist}
+    # Backend.plane_update — it is benchmark-only code, so drift skews the
+    # ablation deltas, never the product runtime.
+    def cheap_fire(keys, p):
+        """Drive-independent stand-in for the WTA: keeps the gate (same
+        firing RATE, so downstream column/fanout load stays realistic),
+        drops the support integration + categorical winner."""
+        def one(k):
+            gate = jax.random.uniform(jax.random.split(k)[0])
+            return jnp.where(gate < p.out_rate * p.dt_ms, 0, -1)
+        return jax.vmap(one)(keys).astype(jnp.int32)
+
+    class AblatedBackend(NamedTuple):
+        base: object   # hashable TickBackend
+        skip: str      # "row_update" | "wta" | "column_update" |
+                       # "plane_update" (the whole block at once)
+
+        def carry_in(self, state, p):
+            return self.base.carry_in(state, p)
+
+        def carry_out(self, state, p):
+            return self.base.carry_out(state, p)
+
+        def plane_update(self, state, rows, t, keys, p, cap, cond_columns):
+            n = state.delay_rows.shape[0]
+            A = rows.shape[1]
+            wl = isinstance(self.base, E.WorklistBackend)
+            kernel = self.base.kernel
+
+            if self.skip == "plane_update":
+                # whole block skipped: its delta vs `full` is the plane
+                # update's TOTAL scan cost, including loop-interaction
+                # overhead the per-phase deltas miss
+                fired = cheap_fire(keys, p)
+                h_idx, j_idx, n_drop = N.select_fired(fired, cap)
+                return state, fired, h_idx, j_idx, n_drop
+
+            # --- row phase ------------------------------------------------
+            if self.skip == "row_update":
+                # zero drive, zero counts: planes untouched; the firing
+                # rate is unaffected (the WTA gate is drive-independent)
+                counts = jnp.zeros((n, A), jnp.float32)
+                w_rows = jnp.zeros((n, A, p.cols), jnp.float32)
+                hcus = state.hcus
+            elif wl:
+                hcus, w_rows, c = E.worklist_lazy_rows(
+                    state.hcus, rows, t, p, kernel=kernel,
+                    fused=self.base.fused)
+                counts = c["counts"]
+            else:
+                hb, w_rows, counts, _ = jax.vmap(
+                    lambda s, r: H.row_updates(H._decay_jvec(s, p), r, t, p,
+                                               backend=kernel)
+                )(state.hcus, rows)
+                hcus = hb
+
+            # --- WTA ------------------------------------------------------
+            if self.skip == "wta":
+                fired = cheap_fire(keys, p)
+            else:
+                hcus, fired = E._wta(hcus, w_rows, counts, t, keys, p)
+            h_idx, j_idx, n_drop = N.select_fired(fired, cap)
+
+            # --- column phase (the engine's own dispatch) -----------------
+            if self.skip == "column_update":
+                col = lambda hc: hc
+            elif wl:
+                col = E.worklist_col_dispatch(
+                    kernel, self.base.fused_cols, h_idx, j_idx, t, p, n)
+            else:
+                col = lambda hc: E.column_updates_batched(hc, h_idx, j_idx,
+                                                          t, p,
+                                                          backend=kernel)
+            if cond_columns:
+                hcus = jax.lax.cond(jnp.any(h_idx < n), col,
+                                    lambda hc: hc, hcus)
+            else:
+                hcus = col(hcus)
+            return state._replace(hcus=hcus), fired, h_idx, j_idx, n_drop
+
+    def scan_ablation(p, conn, ext, key):
+        T = ext.shape[0]
+        base = E.select_backend(p)
+        noop_route = lambda state, dh, dr, dly, valid, p_, n_: state
+
+        def make_run(be, route):
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def run(state, ext):
+                def body(s, e):
+                    return E.tick(s, conn, e, p, be, route=route)
+                s, f = jax.lax.scan(body, be.carry_in(state, p), ext)
+                return be.carry_out(s, p), f
+            return run
+
+        variants = {
+            "full": make_run(base, None),
+            "enqueue": make_run(base, noop_route),
+            "row_update": make_run(AblatedBackend(base, "row_update"), None),
+            "wta": make_run(AblatedBackend(base, "wta"), None),
+            "column_update": make_run(AblatedBackend(base, "column_update"),
+                                      None),
+            "plane_update": make_run(AblatedBackend(base, "plane_update"),
+                                     None),
+        }
+        for fn in variants.values():              # compile + warm all first
+            s, f = fn(N.init_network(p, key), ext)
+            jax.block_until_ready(f)
+        # interleave rounds across variants and keep the MIN round: this
+        # benchmark must survive noisy shared CI runners, and a burst of
+        # contention hitting one variant's consecutive repeats would
+        # otherwise masquerade as a phase cost
+        meas = {k: [] for k in variants}
+        for _ in range(args.repeats):
+            for name, fn in variants.items():
+                state = N.init_network(p, key)
+                t0 = time.perf_counter()
+                s, f = fn(state, ext)
+                jax.block_until_ready(f)
+                meas[name].append((time.perf_counter() - t0) / T)
+        us = {k: min(v) * 1e6 for k, v in meas.items()}
+        full = us.pop("full")
+        return full, {k: full - v for k, v in us.items()}
+
+    # ---------------- isolated phases (the PR 3 breakdown) -----------------
     def profile_size(name, p):
         key = jax.random.PRNGKey(0)
         state = N.init_network(p, key)
@@ -145,33 +295,54 @@ def main() -> None:
             st, fired = E.tick(be.carry_in(st, p), conn, ext, p, be)
             return be.carry_out(st, p).hcus.zij, fired
 
-        phases = {
+        isolated = {
             "queue": timed(queue_phase, state),
             "row_update": timed(row_phase, state.hcus),
             "wta": timed(wta_phase, state.hcus, w_rows, counts),
             "column_update": timed(col_phase, state.hcus),
             "full_tick": timed(full_tick, state),
         }
-        phases["backend"] = type(be).__name__
-        return phases
+
+        # --- scan-context ablation ------------------------------------------
+        ext_t = _ext_tensor(p, args.ticks)
+        scan_full, ablation = scan_ablation(
+            p, conn, ext_t, jax.random.PRNGKey(0))
+
+        return {
+            "backend": type(be).__name__,
+            "n_hcu": p.n_hcu, "rows": p.rows, "cols": p.cols,
+            "scan_us_per_tick": scan_full,
+            "scan_ablation_us": ablation,
+            "isolated_us": isolated,
+        }
 
     results = {}
     for name, p in (DEFAULT, RODENT, HUMAN_COL):
         results[name] = profile_size(name, p)
 
+    out = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_phase_breakdown.json"
+    out.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"# wrote {out}", file=sys.stderr)
+
     if args.json:
         json.dump(results, sys.stdout, indent=2)
         print()
         return
-    print("size,phase,us_per_call,share_of_sum")
-    for name, phases in results.items():
-        total = sum(v for k, v in phases.items()
-                    if k not in ("full_tick", "backend"))
-        for phase in ("queue", "row_update", "wta", "column_update"):
-            us = phases[phase]
-            print(f"{name},{phase},{us:.1f},{us / total:.2f}")
-        print(f"{name},full_tick,{phases['full_tick']:.1f},-  "
-              f"# {phases['backend']}, isolated-phase sum {total:.1f}")
+    print("size,phase,scan_ablation_us,share_of_scan,isolated_us")
+    for name, r in results.items():
+        full = r["scan_us_per_tick"]
+        for phase in ("enqueue", "row_update", "wta", "column_update"):
+            ab = r["scan_ablation_us"][phase]
+            # the isolated 'queue' timing covers consume+enqueue; it is the
+            # closest isolated analogue of the enqueue ablation
+            iso = r["isolated_us"]["queue" if phase == "enqueue" else phase]
+            print(f"{name},{phase},{ab:.1f},{ab / full:.2f},{iso:.1f}")
+        all_pl = r["scan_ablation_us"]["plane_update"]
+        print(f"{name},plane_update_all,{all_pl:.1f},{all_pl / full:.2f},-")
+        print(f"{name},full_scan_tick,{full:.1f},1.00,"
+              f"{r['isolated_us']['full_tick']:.1f}"
+              f"  # {r['backend']}")
 
 
 if __name__ == "__main__":

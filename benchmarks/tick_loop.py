@@ -34,7 +34,6 @@ profile`).
 """
 from __future__ import annotations
 
-import statistics
 import time
 
 import jax
@@ -58,7 +57,16 @@ HUMAN_COL = ("human_col", BCPNNParams(n_hcu=4, rows=HUMAN_CFG.rows,
 
 N_SCAN = 128         # ticks per measured scan call (one compiled chunk)
 N_HOST = 32          # ticks per measured host-loop pass
-REPEATS = 3          # median over repeats (host dispatch cost is noisy)
+REPEATS = 5          # min over repeats (see note below)
+
+# The estimator is MIN over repeats, not median: CI runners and shared dev
+# VMs burst-throttle (measured on the dev box: a 10x CPU-speed swing within
+# one minute), and contention is strictly additive noise on a deterministic
+# computation — the fastest observed repeat is the best estimate of the
+# code's cost, where a median of 3 is a lottery ticket on the throttle
+# phase. The committed numbers and the CI regression gate both use this
+# estimator (PR 5; earlier JSONs were medians of 3, so the PR 5
+# regeneration is the comparison floor going forward).
 
 
 def _ext_tensor(p, T, width=8, lam=4.0, seed=0):
@@ -72,7 +80,7 @@ def _ext_tensor(p, T, width=8, lam=4.0, seed=0):
 
 
 def _measure(p, backend="ref"):
-    """Returns (host_us_per_tick, scan_us_per_tick), medians over REPEATS."""
+    """Returns (host_us_per_tick, scan_us_per_tick), min over REPEATS."""
     sim = Simulator(p, key=0, kernel=backend, chunk=N_SCAN)
     ext = _ext_tensor(p, N_SCAN)
 
@@ -95,7 +103,7 @@ def _measure(p, backend="ref"):
         f = sim.run(ext)
         jax.block_until_ready(f)
         scan_t.append((time.perf_counter() - t0) / N_SCAN)
-    return statistics.median(host_t) * 1e6, statistics.median(scan_t) * 1e6
+    return min(host_t) * 1e6, min(scan_t) * 1e6
 
 
 def measure_sizes(sizes=(DEFAULT, RODENT, HUMAN_COL)):

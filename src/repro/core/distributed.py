@@ -212,16 +212,18 @@ def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
                    axis="hcu", eager: bool = False,
                    backend: str | None = None, donate: bool = True,
                    worklist: bool | None = None,
-                   fused: bool | None = None):
+                   fused: bool | None = None,
+                   fused_cols: bool | None = None):
     """Build the sharded tick: state/conn/ext sharded over `axis`, which may
     be a single mesh axis name or a tuple of axis names (flattened).
     `worklist` forces the worklist engine backend on/off (default: auto by
     size, `hcu.use_worklist`); `fused` forces its single-pass fused row
-    phase (default: on, `hcu.use_fused_rows`)."""
+    phase (default: on, `hcu.use_fused_rows`) and `fused_cols` its
+    single-pass fused column phase (default: on, `hcu.use_fused_cols`)."""
     axes = axis if isinstance(axis, tuple) else (axis,)
     state_specs, conn_specs, spec_h, _ = _shard_specs(axes)
     be = E.select_backend(p, eager=eager, worklist=worklist, kernel=backend,
-                          fused=fused)
+                          fused=fused, fused_cols=fused_cols)
 
     def local(state, conn, ext):
         state, fired = _local_tick(be.carry_in(state, p), conn, ext,
@@ -244,7 +246,8 @@ def make_dist_run(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
                   axis="hcu", eager: bool = False,
                   backend: str | None = None, donate: bool = True,
                   worklist: bool | None = None,
-                  fused: bool | None = None):
+                  fused: bool | None = None,
+                  fused_cols: bool | None = None):
     """Scan-compiled multi-tick sharded driver (network_run's sharded twin).
 
     Returns fn(state, conn, ext) -> (state', fired (T, H)) where ext is the
@@ -261,7 +264,7 @@ def make_dist_run(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
     ext_spec = P(None, axes)            # (T, H_local, A): time replicated
     fired_spec = P(None, axes)
     be = E.select_backend(p, eager=eager, worklist=worklist, kernel=backend,
-                          fused=fused)
+                          fused=fused, fused_cols=fused_cols)
 
     def _local_run(state, conn, ext):
         def body(s, e):

@@ -14,13 +14,16 @@ the `TickBackend` protocol with two implementations:
                         (modes: "lazy", "eager" golden reference, "merged").
   * `WorklistBackend` — rodent/human scales: a network-global deduplicated
                         worklist over the canonical flat (H*R, C) planes.
-                        The lazy row phase is FUSED by default: one
-                        stage+compute loop over the valid entries
-                        (`worklist.fused_stage_compute`) + the in-place
-                        writeback loop on CPU, or the `ops.fused_row_update`
-                        scalar-prefetch megakernel on TPU (`fused=` forces
-                        either form, see `hcu.use_fused_rows`); columns and
-                        the merged row phase use the three-phase loops
+                        The lazy row AND column phases are FUSED by
+                        default: one stage+compute loop over the valid
+                        entries (`worklist.fused_stage_compute` rows /
+                        `worklist.fused_col_stage_compute` columns) + the
+                        in-place writeback loop on CPU, or the
+                        `ops.fused_row_update` / `ops.fused_col_update`
+                        scalar-prefetch megakernels on TPU (`fused=` /
+                        `fused_cols=` force either form, see
+                        `hcu.use_fused_rows` / `hcu.use_fused_cols`); the
+                        merged row phase uses the three-phase loops
                         (modes: "lazy", "merged"; docs/NUMERICS.md explains
                         why merged stays three-phase).
 
@@ -208,36 +211,122 @@ def _wta(hcus: H.HCUState, w_rows, counts, t, keys, p: BCPNNParams):
     return hcus._replace(h=h_new), fired
 
 
-def _column_worklist(hcus: H.HCUState, h_idx, j_idx, now, p: BCPNNParams,
-                     backend=None):
-    """Worklist twin of `column_updates_batched`: same compacted fired batch,
-    same vmapped per-cell compute graph (bitwise-identical values), but the
-    (R, 1) column blocks are read and rewritten in place through dynamic
-    slices on the canonical flat planes instead of batched gather/scatter."""
-    n = hcus.zj.shape[0]
+def _col_worklist_prologue(hcus: H.HCUState, h_idx, j_idx, now,
+                           p: BCPNNParams, n: int):
+    """Shared fused/staged column prologue: per-entry presynaptic traces
+    brought to `now` (the sealed `ivec_decay` island on the (K, R) gathered
+    i-vectors — identical graph in both forms, which is what keeps them
+    bitwise-interchangeable) and the per-entry postsynaptic P."""
     R = p.rows
-    n_fired = jnp.sum(h_idx < n)
     safe_h = jnp.minimum(h_idx, n - 1)
     ivr = lambda v: v.reshape(n, R)[safe_h]                   # (K, R)
     zep_i = H.ivec_decay(ivr(hcus.zi), ivr(hcus.ei), ivr(hcus.pi),
                          ivr(hcus.ti), now, p)
     pj_sc = hcus.pj[safe_h, j_idx]                            # (K,)
+    return zep_i, pj_sc
+
+
+def _column_worklist(hcus: H.HCUState, h_idx, j_idx, now, p: BCPNNParams,
+                     backend=None, fused: bool = True):
+    """Worklist twin of `column_updates_batched`: same compacted fired batch,
+    same per-cell compute graph (bitwise-identical values), but the (R, 1)
+    column blocks are read and rewritten in place through dynamic slices on
+    the canonical flat planes instead of batched gather/scatter.
+
+    ``fused`` (default, `hcu.use_fused_cols`) fuses staging and compute into
+    one loop over the n_fired valid entries (`worklist.fused_col_stage_
+    compute` + the in-place `write_cols` loop) — the PR 4 row recipe applied
+    to columns. fused=False keeps the three-phase stage/compute/writeback
+    form — bitwise-identical, kept as the A/B reference
+    (tests/test_worklist.py).
+    """
+    n = hcus.zj.shape[0]
+    R = p.rows
+    n_fired = jnp.sum(h_idx < n)
+    zep_i, pj_sc = _col_worklist_prologue(hcus, h_idx, j_idx, now, p, n)
     flats = _ij_flats(hcus)
-    zb, eb, pb, tb = WL.read_cols((flats[0], flats[1], flats[2], flats[4]),
-                                  h_idx, j_idx, n_fired, R)
-    # same vmap-of-col_update graph as column_updates_batched, fed from the
-    # staged buffers (padding slots read zeros instead of clipped gathers;
-    # their results are never written back)
-    z1, e1, p1, w1, _ = jax.vmap(
-        lambda z, e, pp, t, zi, pi, pj: H.ops.col_update(
-            z, e, pp, t, now, zi, pi, pj, H.coeffs_ij(p), p.eps,
-            backend=backend)
-    )(zb, eb, pb, tb, zep_i.z, zep_i.p, pj_sc)
-    flats = WL.write_cols(flats, h_idx, j_idx, n_fired, (z1, e1, p1, w1),
-                          now, R)
+    if fused:
+        # fused stage+compute loop: per valid entry, read the (R, 1) column
+        # block and run the SAME cell formulas the vmapped compute runs
+        # (ops.col_update "ref" dispatch at (R,) — bitwise-identical to the
+        # (K, R) vmapped form, pinned by the head fixtures) in the same
+        # iteration — compute on n_fired entries instead of every fired-
+        # batch slot. The writeback stays the separate in-place write_cols
+        # loop (one-direction loop rule, docs/NUMERICS.md).
+        zi_all, pi_all = zep_i.z, zep_i.p                     # (K, R)
+
+        def col_math(e, z, ee, pp, tt):
+            row = lambda v: jax.lax.dynamic_slice(v, (e, 0), (1, R)) \
+                .reshape(R)
+            pj_e = jax.lax.dynamic_slice(pj_sc, (e,), (1,))[0]
+            z1, e1, p1, w1, _ = H.ops.col_update(
+                z, ee, pp, tt, now, row(zi_all), row(pi_all), pj_e,
+                H.coeffs_ij(p), p.eps, backend=backend)
+            return z1, e1, p1, w1
+
+        vals = WL.fused_col_stage_compute(
+            (flats[0], flats[1], flats[2], flats[4]),
+            h_idx, j_idx, n_fired, R, col_math)
+    else:
+        zb, eb, pb, tb = WL.read_cols(
+            (flats[0], flats[1], flats[2], flats[4]),
+            h_idx, j_idx, n_fired, R)
+        # same vmap-of-col_update graph as column_updates_batched, fed from
+        # the staged buffers (padding slots read zeros instead of clipped
+        # gathers; their results are never written back)
+        z1, e1, p1, w1, _ = jax.vmap(
+            lambda z, e, pp, t, zi, pi, pj: H.ops.col_update(
+                z, e, pp, t, now, zi, pi, pj, H.coeffs_ij(p), p.eps,
+                backend=backend)
+        )(zb, eb, pb, tb, zep_i.z, zep_i.p, pj_sc)
+        vals = (z1, e1, p1, w1)
+    flats = WL.write_cols(flats, h_idx, j_idx, n_fired, vals, now, R)
     hcus = _put_flats(hcus, flats)
     # tij is already stamped by write_cols; only the Zj bump remains
     return hcus._replace(zj=_bump_zj(hcus.zj, h_idx, j_idx, n, p))
+
+
+def _column_worklist_megakernel(hcus: H.HCUState, h_idx, j_idx, now,
+                                p: BCPNNParams, backend, n: int):
+    """TPU half of the fused column phase: one scalar-prefetch Pallas
+    megakernel launch (`ops.fused_col_update`) rewrites every fired (R, 1)
+    column block of the five ij planes in place — Tij stamped in-kernel,
+    padding fired-batch entries routed onto the junk lane. Replaces the
+    batched-view kernel + gather/scatter tail the non-fused Pallas column
+    step pays (`_column_batched_on_flat`)."""
+    R = p.rows
+    zep_i, pj_sc = _col_worklist_prologue(hcus, h_idx, j_idx, now, p, n)
+    flats = ops.fused_col_update(
+        *_ij_flats(hcus), h_idx=h_idx, j_idx=j_idx, now=now,
+        zi_t=zep_i.z, p_i=zep_i.p, pj_sc=pj_sc,
+        coeffs=H.coeffs_ij(p), eps=p.eps, n_hcu=n, rows=R, backend=backend)
+    hcus = _put_flats(hcus, flats)
+    return hcus._replace(zj=_bump_zj(hcus.zj, h_idx, j_idx, n, p))
+
+
+def worklist_col_dispatch(kernel, fused_cols, h_idx, j_idx, t,
+                          p: BCPNNParams, n: int):
+    """Pick the worklist backend's lazy column-phase implementation for the
+    resolved kernel backend: the in-place loops (`_column_worklist`,
+    fused or staged) on "ref", the `ops.fused_col_update` megakernel or
+    the batched-view kernel on the Pallas backends. Returns a
+    hcus -> hcus' closure. Exposed (not underscored) because
+    `benchmarks/profile_phases.py`'s ablation harness reuses it — the
+    published per-phase deltas must dispatch exactly what the engine
+    dispatches."""
+    kb = kernel or ops.default_backend()
+    if kb == "ref":
+        return lambda hc: _column_worklist(hc, h_idx, j_idx, t, p,
+                                           backend=kernel, fused=fused_cols)
+    # the column megakernel selects the per-entry presynaptic lane out of
+    # one 128-wide tile, so a fired batch larger than a lane tile falls
+    # back to the batched-view kernel (n_hcu >= ~366 at the default
+    # cap_fire formula) instead of tracing an unsatisfiable kernel
+    if fused_cols and h_idx.shape[0] <= ops.bcpnn_update.DEFAULT_BLOCK_L:
+        return lambda hc: _column_worklist_megakernel(hc, h_idx, j_idx, t,
+                                                      p, kb, n)
+    return lambda hc: _column_batched_on_flat(hc, h_idx, j_idx, t, p,
+                                              kernel, n)
 
 
 def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
@@ -553,10 +642,16 @@ class WorklistBackend(NamedTuple):
     `ops.fused_row_update` megakernel on TPU) instead of the three-phase
     stage/compute/writeback form — default on (`hcu.use_fused_rows`),
     bitwise-identical either way.
+    fused_cols: the same fusion for the lazy column phase
+    (`worklist.fused_col_stage_compute`; the `ops.fused_col_update`
+    megakernel on TPU) — default on (`hcu.use_fused_cols`),
+    bitwise-identical either way; inert in merged mode (the merged column
+    flush keeps the shared `merged_col_math` island).
     """
     mode: str = "lazy"
     kernel: str | None = None
     fused: bool = True
+    fused_cols: bool = True
 
     def carry_in(self, state, p: BCPNNParams):
         return state
@@ -578,13 +673,8 @@ class WorklistBackend(NamedTuple):
                                              fused=self.fused)
         hcus, fired = _wta(hcus, w_rows, c["counts"], t, keys, p)
         h_idx, j_idx, n_drop = N.select_fired(fired, cap)
-        kb = self.kernel or ops.default_backend()
-        if kb == "ref":
-            col = lambda hc: _column_worklist(hc, h_idx, j_idx, t, p,
-                                              backend=self.kernel)
-        else:
-            col = lambda hc: _column_batched_on_flat(hc, h_idx, j_idx, t, p,
-                                                     self.kernel, n)
+        col = worklist_col_dispatch(self.kernel, self.fused_cols,
+                                    h_idx, j_idx, t, p, n)
         if cond_columns:
             hcus = jax.lax.cond(jnp.any(h_idx < n), col, lambda hc: hc, hcus)
         else:
@@ -595,22 +685,25 @@ class WorklistBackend(NamedTuple):
 def select_backend(p: BCPNNParams, *, eager: bool = False,
                    merged: bool = False, worklist: bool | None = None,
                    kernel: str | None = None,
-                   fused: bool | None = None) -> "TickBackend":
+                   fused: bool | None = None,
+                   fused_cols: bool | None = None) -> "TickBackend":
     """Map the historical mode flags onto a TickBackend.
 
     Keeps `hcu.use_worklist`'s size-guard semantics (R*C > DENSE_CELLS_MAX
     switches to the worklist engine) and the `worklist=` override; `fused=`
     likewise forces the worklist backend's single-pass row phase on/off
-    (`hcu.use_fused_rows`, default on — a no-op for the dense backends). The
-    eager golden reference is dense by definition (it touches every cell
-    anyway).
+    (`hcu.use_fused_rows`) and `fused_cols=` its single-pass column phase
+    (`hcu.use_fused_cols`) — both default on, both no-ops for the dense
+    backends. The eager golden reference is dense by definition (it touches
+    every cell anyway).
     """
     if eager:
         return DenseBackend(mode="eager", kernel=kernel)
     mode = "merged" if merged else "lazy"
     if H.use_worklist(p, worklist):
         return WorklistBackend(mode=mode, kernel=kernel,
-                               fused=H.use_fused_rows(p, fused))
+                               fused=H.use_fused_rows(p, fused),
+                               fused_cols=H.use_fused_cols(p, fused_cols))
     return DenseBackend(mode=mode, kernel=kernel)
 
 
@@ -687,12 +780,13 @@ class Simulator:
     def __init__(self, p: BCPNNParams, key=0, *, n_hcu: int | None = None,
                  merged: bool = False, eager: bool = False,
                  worklist: bool | None = None, kernel: str | None = None,
-                 fused: bool | None = None,
+                 fused: bool | None = None, fused_cols: bool | None = None,
                  cap_fire: int | None = None, chunk: int = 128):
         self.p = p
         self.n_hcu = n_hcu or p.n_hcu
         self.merged, self.eager = merged, eager
         self.worklist, self.kernel, self.fused = worklist, kernel, fused
+        self.fused_cols = fused_cols
         self.cap_fire, self.chunk = cap_fire, chunk
         self._dist_cache = None
         self._key = jax.random.PRNGKey(key) if isinstance(key, int) else key
@@ -704,13 +798,14 @@ class Simulator:
     def _kw(self):
         return dict(eager=self.eager, merged=self.merged,
                     worklist=self.worklist, backend=self.kernel,
-                    fused=self.fused, cap_fire=self.cap_fire)
+                    fused=self.fused, fused_cols=self.fused_cols,
+                    cap_fire=self.cap_fire)
 
     @property
     def backend(self) -> "TickBackend":
         return select_backend(self.p, eager=self.eager, merged=self.merged,
                               worklist=self.worklist, kernel=self.kernel,
-                              fused=self.fused)
+                              fused=self.fused, fused_cols=self.fused_cols)
 
     def reset(self, key=None) -> "Simulator":
         """Re-init the network state (same connectivity unless key given)."""
@@ -774,7 +869,8 @@ class Simulator:
                                                      self.conn, axis=axis)
             fn = DD.make_dist_run(mesh, self.p, rc, axis=axis,
                                   eager=self.eager, backend=self.kernel,
-                                  worklist=self.worklist, fused=self.fused)
+                                  worklist=self.worklist, fused=self.fused,
+                                  fused_cols=self.fused_cols)
             self._dist_cache = (cache_key, fn)
         self.state, fired = self._dist_cache[1](self.state, self.conn,
                                                 jnp.asarray(ext))

@@ -84,6 +84,27 @@ def use_fused_rows(p: "BCPNNParams", override: bool | None = None) -> bool:
     return True
 
 
+def use_fused_cols(p: "BCPNNParams", override: bool | None = None) -> bool:
+    """Guard for the fused (single-pass) worklist column phase.
+
+    The column twin of `use_fused_rows`: replaces the worklist backend's
+    three-phase lazy column update — `worklist.read_cols` staging loop,
+    vmapped compute over every fired-batch slot, `worklist.write_cols`
+    writeback — with a fused stage+compute loop over the n_fired valid
+    entries only (`worklist.fused_col_stage_compute` + the in-place
+    writeback loop on CPU, `ops.fused_col_update`'s scalar-prefetch
+    megakernel on TPU). Applies only inside `engine.WorklistBackend`'s LAZY
+    mode — the merged column flush keeps its shared `merged_col_math` island
+    untouched — so `use_worklist`'s size guard is its size guard too.
+    ``override`` (the `fused_cols=` runtime argument) forces either form —
+    tests use it to A/B the fused pass against the staged loops; both are
+    bitwise-identical (tests/test_worklist.py, tests/test_engine_fixtures.py).
+    """
+    if override is not None:
+        return bool(override)
+    return True
+
+
 class HCUState(NamedTuple):
     # synaptic ij-matrix planes, (R, C)
     zij: jnp.ndarray

@@ -242,12 +242,14 @@ def select_fired(fired: jnp.ndarray, cap: int):
 
 @functools.partial(jax.jit, static_argnames=("p", "eager", "backend",
                                              "cap_fire", "merged",
-                                             "worklist", "fused"),
+                                             "worklist", "fused",
+                                             "fused_cols"),
                    donate_argnums=(0,))
 def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
                  p: BCPNNParams, *, eager: bool = False, merged: bool = False,
                  backend: str | None = None, cap_fire: int | None = None,
-                 worklist: bool | None = None, fused: bool | None = None):
+                 worklist: bool | None = None, fused: bool | None = None,
+                 fused_cols: bool | None = None):
     """Advance the whole network by one 1 ms tick.
 
     ext_rows: (H, A_ext) external input spikes (row index, padding == p.rows)
@@ -257,11 +259,13 @@ def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
     worklist=True/False forces the worklist engine backend on/off (default:
     auto by size, `hcu.use_worklist`); fused=True/False likewise forces the
     worklist backend's single-pass fused row phase (default: on,
-    `hcu.use_fused_rows`); trajectories are identical either way.
+    `hcu.use_fused_rows`) and fused_cols=True/False its single-pass fused
+    column phase (default: on, `hcu.use_fused_cols`); trajectories are
+    identical every way.
     """
     from repro.core import engine as E
     be = E.select_backend(p, eager=eager, merged=merged, worklist=worklist,
-                          kernel=backend, fused=fused)
+                          kernel=backend, fused=fused, fused_cols=fused_cols)
     state, fired = E.tick(be.carry_in(state, p), conn, ext_rows, p, be,
                           cap_fire)
     return be.carry_out(state, p), fired
@@ -269,12 +273,14 @@ def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
 
 @functools.partial(jax.jit, static_argnames=("p", "eager", "backend",
                                              "cap_fire", "merged",
-                                             "worklist", "fused"),
+                                             "worklist", "fused",
+                                             "fused_cols"),
                    donate_argnums=(0,))
 def _run_chunk(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
                p: BCPNNParams, *, eager: bool, merged: bool,
                backend: str | None, cap_fire: int | None,
-               worklist: bool | None, fused: bool | None):
+               worklist: bool | None, fused: bool | None,
+               fused_cols: bool | None):
     """One compiled scan over ext (T_chunk, H, A_ext): a single dispatch
     advances the network T_chunk ticks, threading the donated state. The
     backend picks the carry layout ONCE per chunk (`carry_in`/`carry_out` at
@@ -282,7 +288,7 @@ def _run_chunk(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
     layout itself, so the tick body has zero per-tick reshapes."""
     from repro.core import engine as E
     be = E.select_backend(p, eager=eager, merged=merged, worklist=worklist,
-                          kernel=backend, fused=fused)
+                          kernel=backend, fused=fused, fused_cols=fused_cols)
 
     def body(s, e):
         return E.tick(s, conn, e, p, be, cap_fire)
@@ -295,7 +301,7 @@ def network_run(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
                 p: BCPNNParams, *, chunk: int = 128, eager: bool = False,
                 merged: bool = False, backend: str | None = None,
                 cap_fire: int | None = None, worklist: bool | None = None,
-                fused: bool | None = None):
+                fused: bool | None = None, fused_cols: bool | None = None):
     """Scan-compiled multi-tick driver (see module docstring contract).
 
     ext: (T, H, A_ext) pre-staged external spikes — use `stage_external`.
@@ -315,7 +321,7 @@ def network_run(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
         state, fired = _run_chunk(state, conn, ext[i:i + step], p,
                                   eager=eager, merged=merged, backend=backend,
                                   cap_fire=cap_fire, worklist=worklist,
-                                  fused=fused)
+                                  fused=fused, fused_cols=fused_cols)
         hist.append(fired)
         i += step
     return state, (hist[0] if len(hist) == 1 else jnp.concatenate(hist))

@@ -220,6 +220,53 @@ def fused_stage_compute(flats, g_row, order, nv, row_math):
 
 # ----------------------------- column worklist -------------------------------
 
+def fused_col_stage_compute(flats, h_idx, j_idx, n_fired, n_rows: int,
+                            col_math):
+    """Fused column stage+compute pass: one loop that reads each fired
+    (R, 1) column block and runs the column math on it IN THE SAME
+    ITERATION, writing the results to compact (K, R) value buffers.
+
+    The column twin of `fused_stage_compute` (the PR 4 row recipe): it
+    replaces the first two of the three column phases (`read_cols` staging +
+    vmapped compute) — the old form staged every fired-batch slot and then
+    computed the WHOLE (K, R) buffer, padding slots included, where this
+    loop computes exactly the n_fired valid entries. The writeback stays the
+    separate `write_cols` loop, per the one-direction loop rule
+    (docs/NUMERICS.md): here the planes are read-only and the value buffers
+    write-only, so everything stays in place.
+
+      flats:    (zij, eij, pij, tij) flat (H*R, C) planes (read-only; Wij
+                is not needed — it is recomputed);
+      h_idx/j_idx: (K,) compacted fired batch (valid prefix of length
+                n_fired, as produced by network.select_fired);
+      col_math: col_math(e, z, ee, pp, tt) -> (z1, e1, p1, w1) on (R,)
+                columns — MUST be the same cell formulas the vmapped
+                compute runs (the engine passes closures over `bcpnn_ref`
+                math; bitwise identity across the block-shape change is
+                pinned by tests/test_worklist.py and the head fixtures).
+
+    Returns (z1, e1, p1, w1) value buffers, each (K, R), zeros at padding
+    slots (`write_cols` never reads them).
+    """
+    K = h_idx.shape[0]
+    vals = tuple(jnp.zeros((K, n_rows), jnp.float32) for _ in range(4))
+    dus = jax.lax.dynamic_update_slice
+
+    def body(s):
+        e, vals = s
+        off, j = col_offset(h_idx[e], j_idx[e], n_rows)
+        ds = lambda f: jax.lax.dynamic_slice(
+            f, (off, j), (n_rows, 1)).reshape(n_rows)
+        z1, e1, p1, w1 = col_math(e, ds(flats[0]), ds(flats[1]),
+                                  ds(flats[2]), ds(flats[3]))
+        vals = tuple(dus(v, val.reshape(1, n_rows), (e, 0))
+                     for v, val in zip(vals, (z1, e1, p1, w1)))
+        return e + 1, vals
+
+    return jax.lax.while_loop(lambda s: s[0] < n_fired, body,
+                              (jnp.asarray(0, jnp.int32), vals))[1]
+
+
 def read_cols(flats, h_idx, j_idx, n_fired, n_rows: int):
     """Stage fired columns into compact (K, R) buffers.
 

@@ -12,7 +12,7 @@ its ping-pong buffering (EQ3, k=2):
   * blocks are (BS, 128)-shaped: the 128-lane dimension is the hardware
     analogue of the paper's "cell-level parallelism" (#FPU_sets).
 
-Four entry points:
+Five entry points:
   row_update_kernel_call        : (S, C) row blocks, rank-1 counts x zj
   col_update_kernel_call        : a column viewed as (R/128, 128) lanes
   worklist_update_kernel_call   : scalar-prefetch grid over a network-global
@@ -24,6 +24,15 @@ Four entry points:
                                   i-vector planes are aliased in place, and
                                   the freshly recomputed weight row is
                                   emitted per entry for the WTA drive
+  fused_col_update_kernel_call  : the worklist column-phase MEGAKERNEL —
+                                  2-D scalar-prefetch grid over FIRED
+                                  ENTRIES x ROW-BLOCKS: each step rewrites
+                                  one (8, 128) lane tile of the fired
+                                  column in place through an in-kernel
+                                  lane mask (Tij `now` stamp emitted
+                                  in-kernel); padding fired-batch entries
+                                  are pinned onto a dedicated junk
+                                  row-block
 
 All alias the five state-plane inputs onto their outputs
 (``input_output_aliases``), so the Zij/Eij/Pij/Wij/Tij planes are rewritten
@@ -376,6 +385,132 @@ def fused_row_update_kernel_call(zij, eij, pij, wij, tij, zi, ei, pi, ti,
               zi, ei, pi, ti, counts.reshape(W, 1), zj,
               p_i.reshape(W, 1), pj, zi_new.reshape(W, 1),
               ei_new.reshape(W, 1), pi_new.reshape(W, 1))
+
+
+def _fused_col_kernel(rbase_ref, rstep_ref, jt_ref, jl_ref, now_ref, z_ref,
+                      e_ref, p_ref, w_ref, t_ref, zi_ref, pi_ref, pj_ref,
+                      zo_ref, eo_ref, po_ref, wo_ref, to_ref,
+                      *, k: DecayCoeffs, eps: float, bs: int, bl: int,
+                      kp: int):
+    """Grid step (entry e, row-block rb) of the fused column phase: the
+    (bs, bl) lane tile of the five ij planes containing rows
+    [h*R + rb*bs, ...) of the entry's fired column (rbase_ref[e] and the
+    tile index jt_ref[e] selected the block) is DMA'd in, the fused cell
+    math runs on every lane, and ONLY the fired column's lane (jl_ref[e],
+    an in-kernel iota mask) is replaced — every other lane is written back
+    bit-unchanged. Lane tiles are 128 wide, so Mosaic's lane-dimension
+    alignment rules are satisfied without data-dependent sub-lane offsets
+    (a (R, 1) block at a prefetched lane offset would not lower).
+
+    The per-entry presynaptic traces arrive as (bs, kp) tiles of the
+    lane-padded (R, kp) buffers; the entry's own lane is selected with a
+    second iota mask and a lane reduce. Validity arrives as
+    rstep_ref[e] (1 = valid): the caller pins every one of a padding
+    entry's grid steps onto the dedicated junk row-block past the logical
+    plane (rbase = HR/bs, rstep = 0), so a padding step can only ever
+    rewrite junk — which matters beyond defense in depth: the block
+    pipeline hands each step the block contents as of its own DMA, so a
+    padding step sharing a tile with an already-updated valid column
+    would write the STALE tile back. Valid entries never collide with
+    each other (fired-batch HCU indices are unique, so their (h, jt)
+    tiles differ); padding entries share only the junk block."""
+    e = pl.program_id(0)
+    valid = rstep_ref[e] == 1
+    jl = jl_ref[e]
+    now = now_ref[0, 0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bs, bl), 1)
+    hit = valid & (lane == jl)                              # (bs, bl) mask
+    # select the entry's presynaptic lane out of the (bs, kp) trace tiles
+    ent_lane = jax.lax.broadcasted_iota(jnp.int32, (bs, kp), 1)
+    sel = (ent_lane == e).astype(jnp.float32)
+    zi = jnp.sum(zi_ref[...] * sel, axis=1, keepdims=True)  # (bs, 1)
+    p_i = jnp.sum(pi_ref[...] * sel, axis=1, keepdims=True)
+    dt = (now - t_ref[...]).astype(jnp.float32)
+    z1, e1, p1, w1 = _cell_math(z_ref[...], e_ref[...], p_ref[...], dt,
+                                zi, p_i, pj_ref[...], k, eps)
+    zo_ref[...] = jnp.where(hit, z1, z_ref[...])
+    eo_ref[...] = jnp.where(hit, e1, e_ref[...])
+    po_ref[...] = jnp.where(hit, p1, p_ref[...])
+    wo_ref[...] = jnp.where(hit, w1, w_ref[...])
+    to_ref[...] = jnp.where(hit, jnp.full_like(t_ref[...], now), t_ref[...])
+
+
+# Column-megakernel aliases (prefetch operands count first): 0=row_base,
+# 1=row_step, 2=j_tile, 3=j_lane, 4=now, 5=zij ... 9=tij -> outputs 0..4.
+_FUSED_COL_ALIASES = {5: 0, 6: 1, 7: 2, 8: 3, 9: 4}
+
+
+@functools.partial(jax.jit, static_argnames=("k", "eps", "r", "bs",
+                                             "interpret"))
+def fused_col_update_kernel_call(zij, eij, pij, wij, tij, row_base, row_step,
+                                 j_tile, j_lane, now, zi_cols, pi_cols, pj_e,
+                                 k: DecayCoeffs, eps: float, r: int,
+                                 bs: int = DEFAULT_BLOCK_S,
+                                 interpret: bool = False):
+    """Scalar-prefetch Pallas megakernel for the fused worklist column phase.
+
+    Planes (H*r + bs, Cp) f32/int32 with Cp % 128 == 0 and r % bs == 0
+    (ops.py pads; the trailing bs rows are the junk row-block). Per
+    fired-batch entry, four prefetched (K,) int32 arrays select the column
+    as lane ``j_lane`` of the (bs, 128) tiles at block
+    (row_base + rb * row_step, j_tile): valid entries carry
+    (h*r/bs, 1, j//128, j%128); padding entries carry (H*r/bs, 0, 0, 0) so
+    every one of their grid steps lands on the junk row-block (they must
+    never share a tile with a valid entry — see the kernel docstring). The
+    grid is 2-D (entry, row-block), so VMEM holds only (bs, 128) tiles
+    regardless of R (a human-scale R=10000 column does NOT fit VMEM as one
+    block). zi_cols/pi_cols (r, kp) are the per-entry presynaptic traces
+    at `now`, column-major and lane-padded to kp == 128 so their blocks
+    cover the lane dimension exactly; pj_e (K, 1) the per-entry
+    postsynaptic P scalar. The five plane inputs alias the five outputs:
+    each grid step rewrites one (bs, 128) tile of the fired column in
+    place — O(fired columns x R/bs) tile DMAs per call, the minimum the
+    128-lane tile granularity allows (the paper's §VI.D column budget, at
+    hardware tile resolution). Data-dependent in-place tiles ->
+    ("arbitrary", "arbitrary") dimension semantics, like the row worklist
+    kernels.
+    """
+    HRp, Cp = zij.shape
+    K = row_base.shape[0]
+    R_BS = r // bs
+    kp = zi_cols.shape[1]
+    if pltpu is None:  # pragma: no cover - pltpu import failed
+        raise NotImplementedError(
+            "fused_col_update_kernel_call needs jax.experimental.pallas.tpu "
+            "(PrefetchScalarGridSpec); use the 'ref' fused loop instead")
+    now_arr = jnp.asarray(now, jnp.int32).reshape(1, 1)
+    tile = pl.BlockSpec((bs, DEFAULT_BLOCK_L),
+                        lambda e, rb, rbase, rstep, jt, jl:
+                        (rbase[e] + rb * rstep[e], jt[e]))
+    ent_tile = pl.BlockSpec((bs, kp),
+                            lambda e, rb, rbase, rstep, jt, jl: (rb, 0))
+    ent1 = pl.BlockSpec((1, 1), lambda e, rb, rbase, rstep, jt, jl: (e, 0))
+    one = pl.BlockSpec((1, 1), lambda e, rb, rbase, rstep, jt, jl: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(K, R_BS),
+        in_specs=[one, tile, tile, tile, tile, tile,
+                  ent_tile, ent_tile, ent1],
+        out_specs=[tile] * 5,
+    )
+    out_shape = [jax.ShapeDtypeStruct((HRp, Cp), jnp.float32)] * 4 \
+        + [jax.ShapeDtypeStruct((HRp, Cp), jnp.int32)]
+    kwargs = {}
+    cp = _compiler_params(("arbitrary", "arbitrary"))
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    fn = pl.pallas_call(
+        functools.partial(_fused_col_kernel, k=k, eps=eps, bs=bs,
+                          bl=DEFAULT_BLOCK_L, kp=kp),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=_FUSED_COL_ALIASES,
+        interpret=interpret,
+        **kwargs,
+    )
+    return fn(row_base.astype(jnp.int32), row_step.astype(jnp.int32),
+              j_tile.astype(jnp.int32), j_lane.astype(jnp.int32), now_arr,
+              zij, eij, pij, wij, tij, zi_cols, pi_cols, pj_e)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "eps", "bs", "bl", "interpret"))

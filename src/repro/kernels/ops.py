@@ -155,6 +155,59 @@ def fused_row_update(zij, eij, pij, wij, tij, zi, ei, pi, ti, rows, now,
     return flats, ivecs, out[9][:, :C]
 
 
+def fused_col_update(zij, eij, pij, wij, tij, h_idx, j_idx, now, zi_t, p_i,
+                     pj_sc, coeffs: DecayCoeffs, eps: float, n_hcu: int,
+                     rows: int, backend: str | None = None):
+    """Fused worklist column phase over the canonical flat planes — Pallas
+    megakernel dispatch (the "ref" fused path is
+    `worklist.fused_col_stage_compute` + `worklist.write_cols`; this wrapper
+    is the TPU/interpret half of `engine._column_worklist`'s fused branch).
+
+    One kernel launch completes the whole column phase except the Zj bump:
+    for each valid fired-batch entry the (rows, 1) column block at
+    (h_idx*rows, j_idx) of the five (H*rows, C) ij planes is rewritten in
+    place (aliased), Tij stamped to `now` in-kernel.
+
+    h_idx/j_idx (K,): the compacted fired batch as produced by
+    `network.select_fired` (padding entries carry h_idx == n_hcu and are
+    rerouted onto the junk row-block appended by the alignment padding, so
+    a padding grid step can never clobber — or stale-overwrite — a fired
+    column). zi_t/p_i (K, rows): per-entry presynaptic traces at `now`
+    (transposed here to column-major (rows, K), lane-padded); pj_sc (K,):
+    per-entry postsynaptic P.
+    Returns the five updated (H*rows, C) planes.
+    """
+    backend = backend or default_backend()
+    HR, C = zij.shape
+    K = h_idx.shape[0]
+    L = bcpnn_update.DEFAULT_BLOCK_L
+    # lane-align C and add one junk ROW-BLOCK (bs rows) for padding
+    # entries. The pad + unpad copies per call are the same accepted
+    # per-call trade as the row megakernel's — storing the planes
+    # pre-aligned is the next layout step if TPU profiles show the pad
+    # dominating.
+    Cp = _round_up(C, L)
+    bs = next(b for b in (bcpnn_update.DEFAULT_BLOCK_S, 4, 2, 1)
+              if rows % b == 0)
+    HRp = HR + bs
+    assert K <= L, "fired-batch capacity exceeds one lane tile"
+    interp = backend == "pallas_interpret"
+    valid = h_idx < n_hcu
+    r_bs = rows // bs
+    row_base = jnp.where(valid, jnp.clip(h_idx, 0, n_hcu - 1) * r_bs,
+                         HR // bs)
+    row_step = valid.astype(jnp.int32)
+    j_eff = jnp.where(valid, jnp.clip(j_idx, 0, C - 1), 0)
+    out = bcpnn_update.fused_col_update_kernel_call(
+        _pad2(zij, HRp, Cp), _pad2(eij, HRp, Cp), _pad2(pij, HRp, Cp),
+        _pad2(wij, HRp, Cp), _pad2(tij, HRp, Cp, fill=0),
+        row_base, row_step, j_eff // L, j_eff % L, now,
+        _pad2(zi_t.T, rows, L), _pad2(p_i.T, rows, L),
+        pj_sc.reshape(K, 1), k=coeffs, eps=eps, r=rows, bs=bs,
+        interpret=interp)
+    return tuple(o[:HR, :C] for o in out)
+
+
 def col_update(z_col, e_col, p_col, t_col, now, zi_t, p_i, p_j_scalar,
                coeffs: DecayCoeffs, eps: float, backend: str | None = None,
                w_col=None):

@@ -256,6 +256,102 @@ def test_fused_megakernel_matches_ref(HR, C, W, rows):
                                atol=3e-6, err_msg="weight rows")
 
 
+def _fused_col_args(rng, H_, R, C, cap, fired, tmax=100):
+    """Fired-batch args for the fused column megakernel: `fired` is a list
+    of (h, j) pairs; padding slots carry h == H_ (the select_fired
+    sentinel)."""
+    HR = H_ * R
+    h_idx = jnp.asarray([h for h, _ in fired] + [H_] * (cap - len(fired)),
+                        jnp.int32)
+    j_idx = jnp.asarray([j for _, j in fired] + [0] * (cap - len(fired)),
+                        jnp.int32)
+    return dict(
+        zij=jnp.asarray(rng.uniform(0, 2, (HR, C)), jnp.float32),
+        eij=jnp.asarray(rng.uniform(0, 2, (HR, C)), jnp.float32),
+        pij=jnp.asarray(rng.uniform(1e-3, 1, (HR, C)), jnp.float32),
+        wij=jnp.asarray(rng.uniform(-1, 1, (HR, C)), jnp.float32),
+        tij=jnp.asarray(rng.integers(0, tmax, (HR, C)), jnp.int32),
+        h_idx=h_idx, j_idx=j_idx, now=tmax,
+        zi_t=jnp.asarray(rng.uniform(0, 2, (cap, R)), jnp.float32),
+        p_i=jnp.asarray(rng.uniform(1e-3, 1, (cap, R)), jnp.float32),
+        pj_sc=jnp.asarray(rng.uniform(1e-3, 1, (cap,)), jnp.float32),
+    )
+
+
+def _fused_col_expected(a, H_, R, cap):
+    """Per-entry bcpnn_ref column oracle applied to the fired (R, 1) column
+    blocks of the flat planes only."""
+    from repro.kernels import bcpnn_ref
+    exp = [np.array(a[k]) for k in ("zij", "eij", "pij", "wij", "tij")]
+    for e in range(cap):
+        h, j = int(a["h_idx"][e]), int(a["j_idx"][e])
+        if h >= H_:
+            continue
+        sl = slice(h * R, (h + 1) * R)
+        z1, e1, p1, w1, t1 = bcpnn_ref.col_update_ref(
+            a["zij"][sl, j], a["eij"][sl, j], a["pij"][sl, j],
+            a["tij"][sl, j], a["now"], a["zi_t"][e], a["p_i"][e],
+            a["pj_sc"][e], K, EPS)
+        for plane, val in zip(exp, (z1, e1, p1, w1, t1)):
+            plane[sl, j] = np.asarray(val)
+    return exp
+
+
+@pytest.mark.parametrize("H_,R,C,fired", [
+    (4, 32, 128, [(0, 3), (2, 100), (3, 127)]),   # lane-aligned C
+    (3, 40, 100, [(1, 0), (2, 99)]),              # lane padding (junk col)
+    (2, 64, 16, []),                              # nothing fired
+])
+def test_fused_col_megakernel_matches_ref(H_, R, C, fired):
+    """The fused column-phase megakernel (interpret mode) vs the per-column
+    oracle: fired (R, 1) column blocks update (Tij stamped in-kernel),
+    every untouched cell stays EXACTLY preserved (in-place aliasing
+    contract)."""
+    rng = np.random.default_rng(H_ * 1000 + R)
+    cap = 6
+    a = _fused_col_args(rng, H_, R, C, cap, fired)
+    out = ops.fused_col_update(
+        a["zij"], a["eij"], a["pij"], a["wij"], a["tij"],
+        h_idx=a["h_idx"], j_idx=a["j_idx"], now=a["now"],
+        zi_t=a["zi_t"], p_i=a["p_i"], pj_sc=a["pj_sc"],
+        coeffs=K, eps=EPS, n_hcu=H_, rows=R,
+        backend="pallas_interpret")
+    exp = _fused_col_expected(a, H_, R, cap)
+    touched = np.zeros((H_ * R, C), bool)
+    for h, j in fired:
+        touched[h * R:(h + 1) * R, j] = True
+    for o, ex, name in zip(out, exp, "zepwt"):
+        o = np.asarray(o)
+        np.testing.assert_allclose(o, ex, rtol=3e-6, atol=3e-6,
+                                   err_msg=f"plane {name}")
+        np.testing.assert_array_equal(o[~touched], ex[~touched],
+                                      err_msg=f"untouched cells, plane {name}")
+
+
+def test_fused_col_megakernel_padding_entries_are_noops():
+    """Padding fired-batch entries (h_idx == n_hcu, the select_fired
+    sentinel) must not perturb ANY cell even when their j_idx aliases a
+    genuinely fired column — the junk-lane rerouting plus the in-kernel
+    valid gate make them pass-throughs."""
+    rng = np.random.default_rng(2)
+    H_, R, C, cap = 3, 32, 100, 6
+    a = _fused_col_args(rng, H_, R, C, cap, [(0, 7), (2, 50)])
+    # poison the padding entries: in-range (h, j) pairs that alias fired and
+    # unfired columns alike — only the h_idx == H_ sentinel marks them
+    a["h_idx"] = jnp.asarray([0, 2, H_, H_, H_, H_], jnp.int32)
+    a["j_idx"] = jnp.asarray([7, 50, 7, 50, 0, 99], jnp.int32)
+    out = ops.fused_col_update(
+        a["zij"], a["eij"], a["pij"], a["wij"], a["tij"],
+        h_idx=a["h_idx"], j_idx=a["j_idx"], now=a["now"],
+        zi_t=a["zi_t"], p_i=a["p_i"], pj_sc=a["pj_sc"],
+        coeffs=K, eps=EPS, n_hcu=H_, rows=R,
+        backend="pallas_interpret")
+    exp = _fused_col_expected(a, H_, R, cap)
+    for o, ex, name in zip(out, exp, "zepwt"):
+        np.testing.assert_allclose(np.asarray(o), ex, rtol=3e-6, atol=3e-6,
+                                   err_msg=f"plane {name}")
+
+
 def test_fused_megakernel_sentinel_slots_are_noops():
     """Interleaved sentinel slots (slot order, no compaction) must leave
     every plane row and i-vector cell untouched, and emit zero weight rows

@@ -56,7 +56,8 @@ def _ext_tensor(p, seed, n_ticks, width=8, lam=3.0, duplicates=False):
     return jnp.asarray(out)
 
 
-def _run_both(p, ext, merged=False, chunk=16, key_seed=0, fused=None):
+def _run_both(p, ext, merged=False, chunk=16, key_seed=0, fused=None,
+              fused_cols=None):
     key = jax.random.PRNGKey(key_seed)
     conn = make_connectivity(p, jax.random.fold_in(key, 1))
     kw = dict(merged=merged, chunk=chunk,
@@ -64,7 +65,8 @@ def _run_both(p, ext, merged=False, chunk=16, key_seed=0, fused=None):
     sa, fa = network_run(init_network(p, key, merged=merged), conn, ext, p,
                          worklist=False, **kw)
     sb, fb = network_run(init_network(p, key, merged=merged), conn, ext, p,
-                         worklist=True, fused=fused, **kw)
+                         worklist=True, fused=fused, fused_cols=fused_cols,
+                         **kw)
     return sa, fa, sb, fb
 
 
@@ -248,6 +250,103 @@ def test_pallas_interpret_worklist_matches_vmap_path():
     _assert_bitwise(sa, fa, sb, fb)
 
 
+@pytest.mark.parametrize("fused_cols", [False, True])
+def test_lazy_worklist_fused_cols_vs_staged_bitwise(fused_cols):
+    """The fused single-pass column phase (`fused_cols=True`, the default)
+    and the three-phase staged form (`fused_cols=False`) must both match the
+    dense path bit-for-bit — the fused loop inlines the SAME (R,) cell
+    formulas the vmapped compute runs, and the lazy column island (one
+    `decay_zep` + increment + `log`, the same island the fused row phase
+    proved) compiles identically in both contexts (docs/NUMERICS.md)."""
+    ext = _ext_tensor(LAZY_P, seed=29, n_ticks=40, lam=3.0)
+    sa, fa, sb, fb = _run_both(LAZY_P, ext, fused_cols=fused_cols)
+    assert (np.asarray(fa) >= 0).sum() > 0, "must exercise column updates"
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+@pytest.mark.parametrize("rows,cols", [(1200, 70), (10000, 100)])
+def test_lazy_fused_cols_bitwise_at_scale_dimensioning(rows, cols):
+    """Pin the fused/staged COLUMN identity at shapes where fused is the
+    default-on path (R*C > DENSE_CELLS_MAX): rodent16 (R=1200, C=70) and
+    human-column (R=10000, C=100) dimensioning. Codegen identity across
+    compilation contexts is shape-dependent and must be empirically pinned
+    (docs/NUMERICS.md) — the toy-size A/Bs do not cover these
+    compilations."""
+    p = BCPNNParams(n_hcu=2, rows=rows, cols=cols, fanout=2, active_queue=8,
+                    max_delay=8, out_rate=0.9)
+    assert H.use_worklist(p), "must exercise the default-on regime"
+    n_ticks = 8 if rows <= 1200 else 4
+    ext = _ext_tensor(p, seed=17, n_ticks=n_ticks, lam=4.0)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    sa, fa = network_run(init_network(p, key), conn, ext, p, chunk=n_ticks,
+                         fused_cols=False)
+    sb, fb = network_run(init_network(p, key), conn, ext, p, chunk=n_ticks,
+                         fused_cols=True)
+    assert (np.asarray(fa) >= 0).sum() > 0, "must exercise column updates"
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+def test_lazy_worklist_fused_cols_under_queue_overflow():
+    """Queue/fired-batch overflow under the fused column path: drops must be
+    counted identically and the padding fired-batch slots (h_idx == n) must
+    stay no-ops in the fused loop."""
+    ext = _ext_tensor(HOT_P, seed=5, n_ticks=60, lam=6.0)
+    sa, fa, sb, fb = _run_both(HOT_P, ext, chunk=60, fused_cols=True)
+    assert int(sa.drops_in) > 0 and int(sa.drops_fire) > 0
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+@pytest.mark.parametrize("fused_cols", [False, True])
+def test_merged_worklist_fused_cols_is_inert(fused_cols):
+    """Merged mode: `fused_cols` is accepted but the merged column flush and
+    the same-tick `patch_cells` interaction keep the shared
+    `merged_col_math` island — trajectories (incl. ring overflow flushes)
+    must be bitwise-identical to the dense merged path either way."""
+    ext = _ext_tensor(MERGED_P, seed=7, n_ticks=80, lam=6.0)
+    sa, fa, sb, fb = _run_both(MERGED_P, ext, merged=True, chunk=11,
+                               fused_cols=fused_cols)
+    assert (np.asarray(fa) >= 0).sum() > MERGED_P.n_hcu * 8, \
+        "case must exercise ring overflow (fires > H * RING_DEPTH)"
+    _assert_bitwise(sa, fa, sb, fb, merged=True)
+
+
+def test_pallas_interpret_fused_col_megakernel_matches_vmap_path():
+    """The fused column megakernel (`ops.fused_col_update`, interpret mode)
+    must reproduce the vmapped pallas-interpret path exactly — the fired
+    (R, 1) column blocks are rewritten in place with the same kernel cell
+    math the batched column kernel runs."""
+    ext = _ext_tensor(LAZY_P, seed=3, n_ticks=12, lam=3.0)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(LAZY_P, jax.random.fold_in(key, 1))
+    sa, fa = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
+                         chunk=12, worklist=False, backend="pallas_interpret")
+    sb, fb = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
+                         chunk=12, worklist=True, fused_cols=True,
+                         backend="pallas_interpret")
+    assert (np.asarray(fa) >= 0).sum() > 0
+    _assert_bitwise(sa, fa, sb, fb)
+
+
+def test_fused_cols_megakernel_large_fired_batch_fallback():
+    """A fired-batch capacity larger than one lane tile (cap_fire > 128)
+    cannot use the column megakernel (its per-entry lane select is one
+    128-wide tile): `engine.worklist_col_dispatch` must fall back to the
+    batched-view kernel instead of tracing an unsatisfiable kernel, still
+    bitwise against the vmapped path."""
+    ext = _ext_tensor(LAZY_P, seed=3, n_ticks=6, lam=3.0)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(LAZY_P, jax.random.fold_in(key, 1))
+    cap = 130
+    sa, fa = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
+                         chunk=6, worklist=False, cap_fire=cap,
+                         backend="pallas_interpret")
+    sb, fb = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
+                         chunk=6, worklist=True, fused_cols=True,
+                         cap_fire=cap, backend="pallas_interpret")
+    _assert_bitwise(sa, fa, sb, fb)
+
+
 # ----------------------------- unit tests ------------------------------------
 
 def test_build_worklist_compaction_and_dedup_sentinels():
@@ -280,3 +379,9 @@ def test_use_worklist_guard():
     assert H.use_worklist(LAZY_P, override=True)
     assert not H.use_worklist(BCPNNParams(n_hcu=2, rows=1200, cols=70),
                               override=False)
+
+
+def test_use_fused_cols_guard():
+    assert H.use_fused_cols(LAZY_P)                        # default on
+    assert not H.use_fused_cols(LAZY_P, override=False)
+    assert H.use_fused_cols(LAZY_P, override=True)
