@@ -1,7 +1,7 @@
 # Tier-1 verification (mirrors .github/workflows/ci.yml)
 PY ?= python
 
-.PHONY: verify test bench bench-json profile check-pycache ci-local
+.PHONY: verify test bench bench-json profile resilience check-pycache ci-local
 
 verify: test bench
 
@@ -25,6 +25,15 @@ bench-json:
 profile: bench-json
 	PYTHONPATH=src $(PY) -m benchmarks.profile_phases --legacy-cpu
 
+# fault-injection suite + resilience telemetry (BENCH_resilience.json:
+# recall-vs-bit-flip-rate curves + rodent16 drop-budget health report) +
+# the sanity gate on the fault-free recall path; mirrors the CI
+# `resilience` job (see docs/RESILIENCE.md)
+resilience:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_resilience.py tests/test_checkpoint.py
+	PYTHONPATH=src $(PY) -m benchmarks.resilience --legacy-cpu
+	PYTHONPATH=src $(PY) -m benchmarks.check_resilience
+
 # fail if bytecode artifacts ever get committed (nested __pycache__ dirs
 # included); CI runs this in the `tests` job
 check-pycache:
@@ -32,16 +41,19 @@ check-pycache:
 		echo "ERROR: tracked bytecode artifacts (see above)"; exit 1; \
 	else echo "no tracked bytecode"; fi
 
-# the exact CI sequence (tests job + bench-gate job), runnable locally so a
-# gate failure can be reproduced without pushing: pycache guard -> tier-1
-# tests -> fast benchmarks -> tick-loop regression gate vs the COMMITTED
-# JSON (taken from HEAD, not the working tree, so repeated runs cannot
-# compound a slow drift past the gate; note the fresh measurement is left
-# in BENCH_tick_loop.json afterwards, same as `make bench-json`) ->
-# per-phase ablation artifact
+# the exact CI sequence (tests job + bench-gate job + resilience job),
+# runnable locally so a gate failure can be reproduced without pushing:
+# pycache guard -> tier-1 tests -> fast benchmarks -> tick-loop regression
+# gate vs the COMMITTED JSON (taken from HEAD, not the working tree, so
+# repeated runs cannot compound a slow drift past the gate; note the fresh
+# measurement is left in BENCH_tick_loop.json afterwards, same as `make
+# bench-json`) -> per-phase ablation artifact -> resilience telemetry +
+# gate (the fault-injection tests already ran inside `test`)
 ci-local: check-pycache test bench
 	git show HEAD:BENCH_tick_loop.json > /tmp/BENCH_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast --json --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
 		--committed /tmp/BENCH_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.profile_phases --legacy-cpu
+	PYTHONPATH=src $(PY) -m benchmarks.resilience --legacy-cpu
+	PYTHONPATH=src $(PY) -m benchmarks.check_resilience

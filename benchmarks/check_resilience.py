@@ -1,0 +1,77 @@
+"""Resilience benchmark sanity gate (shared by CI and `make ci-local`).
+
+  PYTHONPATH=src python -m benchmarks.check_resilience \
+      [--fresh BENCH_resilience.json]
+
+Validates a freshly generated BENCH_resilience.json:
+  * every fault-pattern curve ("clear", "flip") has a zero-rate recall
+    point that probed at least one undriven HCU and scored > 2x chance —
+    the functional gate: the fault-injection machinery must not have
+    perturbed the fault-FREE path;
+  * each curve covers a nonzero rate too (it is a curve, not a point);
+  * the rodent16 health report is structurally complete (status /
+    drops / budget / deadline) with a known status and nonzero ticks.
+
+Wall-clock fields (us/tick, deadline status) are deliberately NOT gated —
+CI runners throttle; the deadline half of the report is trend data, the
+drop-budget half is deterministic.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+KNOWN_STATUS = ("ok", "over-budget", "deadline-missed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="BENCH_resilience.json",
+                    help="path to the freshly generated JSON")
+    args = ap.parse_args()
+
+    d = json.load(open(args.fresh))
+    failures = []
+
+    curves = d.get("recall_vs_flip_rate", {})
+    chance = d.get("chance", 0.0)
+    if not curves:
+        failures.append("no recall curves")
+    for mode, curve in curves.items():
+        zero = [r for r in curve if r["rate"] == 0.0]
+        if not zero:
+            failures.append(f"{mode}: no zero-rate recall point")
+        else:
+            r = zero[0]
+            print(f"recall@{mode}/0: {r['correct']}/{r['total']} "
+                  f"(acc={r['acc']:.2f}, chance={chance:.2f})")
+            if r["total"] <= 0:
+                failures.append(f"{mode}: zero-rate recall probed no "
+                                "undriven HCUs")
+            elif r["acc"] <= 2 * chance:
+                failures.append(f"{mode}: zero-rate recall acc "
+                                f"{r['acc']:.2f} is not > 2x chance "
+                                f"({chance:.2f})")
+        if not any(r["rate"] > 0 for r in curve):
+            failures.append(f"{mode}: curve has no nonzero rate")
+
+    h = d.get("rodent16_health", {})
+    print(f"rodent16: status={h.get('status')} ticks={h.get('ticks')} "
+          f"drops={h.get('drops', {}).get('total')} "
+          f"restarts={h.get('restarts')}")
+    if h.get("status") not in KNOWN_STATUS:
+        failures.append(f"unknown health status {h.get('status')!r}")
+    if not h.get("ticks", 0) > 0:
+        failures.append("health report covers zero ticks")
+    for key in ("drops", "budget", "deadline"):
+        if key not in h:
+            failures.append(f"health report missing {key!r}")
+
+    if failures:
+        sys.exit("resilience gate: " + "; ".join(failures))
+    print("resilience gate: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Resilience benchmark: recall under DRAM-retention faults + drop-budget
+health at rodent16.
+
+  PYTHONPATH=src python -m benchmarks.resilience [--legacy-cpu] [--fast]
+
+Two measurements, written to BENCH_resilience.json for CI trending (the
+robustness analogue of BENCH_tick_loop.json):
+
+1. recall_vs_flip_rate — the paper's relaxed-refresh 3D DRAM argument made
+   quantitative: train the associative memory once (the protocol from
+   `repro.experiments`), then for each per-bit fault rate corrupt the
+   synaptic ij planes of a fresh copy of the trained state
+   (`repro.runtime.resilience.inject_retention_faults`) and measure
+   partial-cue pattern completion. Recall runs from an
+   `repro.experiments.sram_loss` state (volatile j-vectors reset, planes
+   kept) so completion is carried by the DRAM planes alone — without that,
+   the trained pj bias recalls the attractor regardless of plane damage and
+   the curve measures nothing. Two fault patterns are curved:
+     * "clear" — hit bits forced to 0, the retention-decay pattern the
+       paper's relaxed refresh produces (measured: recall survives per-bit
+       clear rates up to ~0.9 — the extreme-tolerance claim);
+     * "flip"  — hit bits inverted, generic soft errors (knee near 1e-4).
+   The zero-rate points double as the functional gate
+   (`benchmarks/check_resilience.py`): recall must stay well above chance.
+
+2. rodent16_health — a crash-recovery run at the rodent16 benchmark size
+   through `repro.runtime.resilience.ResilientRunner` (one injected failure,
+   restore-and-replay) with the `HealthMonitor` drop-budget + realtime
+   deadline report (Fig 7 analytic budget from `repro.core.queues`).
+
+Cue masks and fault keys are derived from fixed seeds, so the curve is
+deterministic up to wall-clock fields in the health report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+
+# retention decay tolerates extreme clear rates; generic flips knee ~1e-4
+RATES = {"clear": (0.0, 0.1, 0.5, 0.8, 0.9, 0.95, 1.0),
+         "flip": (0.0, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2)}
+N_PATTERNS = 3
+TRAIN_REPS = 30
+
+
+def recall_vs_flip_rate(rates=None, *, train_reps=TRAIN_REPS):
+    """Train once, then measure cue->attractor completion from an SRAM-loss
+    state at each per-bit fault rate and pattern. Returns
+    ({mode: curve rows}, chance, config dict)."""
+    import jax
+    import numpy as np
+    from repro.core import Simulator
+    from repro.data import make_patterns
+    from repro.experiments import (assoc_params, recall_accuracy, sram_loss,
+                                   train_assoc)
+    from repro.runtime import inject_retention_faults
+
+    rates = rates if rates is not None else RATES
+    p = assoc_params()
+    sim = Simulator(p, key=0, cap_fire=p.n_hcu)
+    patterns = make_patterns(p, N_PATTERNS, seed=3)
+    attractor = train_assoc(sim, patterns, reps=train_reps)
+    trained = jax.tree.map(np.array, sim.state)
+
+    def corrupter(rate, mode):
+        base = jax.random.PRNGKey(42)
+        count = [0]
+
+        def corrupt(state):
+            count[0] += 1
+            return inject_retention_faults(
+                sram_loss(state, p), jax.random.fold_in(base, count[0]),
+                rate, mode=mode)
+        return corrupt
+
+    curves = {}
+    for mode, mode_rates in rates.items():
+        curve = curves[mode] = []
+        for rate in mode_rates:
+            # fresh rng per point: identical cue masks across the curves
+            correct, total = recall_accuracy(
+                sim, trained, patterns, attractor,
+                rng=np.random.default_rng(0), corrupt=corrupter(rate, mode))
+            curve.append({"rate": rate, "correct": correct, "total": total,
+                          "acc": correct / max(total, 1)})
+            print(f"resilience/recall@{mode}_rate={rate:g}: "
+                  f"{correct}/{total} (acc={curve[-1]['acc']:.2f})")
+    cfg = {"n_hcu": p.n_hcu, "rows": p.rows, "cols": p.cols,
+           "n_patterns": N_PATTERNS, "train_reps": train_reps,
+           "recall": "sram_loss", "planes": "zij/eij/pij/wij/tij"}
+    return curves, 1.0 / p.cols, cfg
+
+
+def rodent16_health(n_ticks=256, chunk_ticks=64):
+    """Crash-recovery run at the rodent16 size with one injected failure;
+    returns the structured HealthMonitor report."""
+    from benchmarks.tick_loop import RODENT, _ext_tensor
+    from repro.core import Simulator
+    from repro.runtime import ResilientRunner
+
+    _, p = RODENT
+    sim = Simulator(p, key=0, chunk=chunk_ticks)
+    ext = _ext_tensor(p, n_ticks)
+    fails = {2}
+
+    def injector(chunk):
+        if chunk in fails:
+            fails.discard(chunk)
+            return True
+        return False
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        runner = ResilientRunner(sim, ckpt_dir, chunk_ticks=chunk_ticks,
+                                 save_every=1, fail_injector=injector)
+        fired, health = runner.run(ext)
+    health["size"] = {"name": "rodent16", "n_hcu": p.n_hcu, "rows": p.rows,
+                      "cols": p.cols, "n_ticks": int(n_ticks)}
+    health["fired_ticks"] = int((fired >= 0).any(axis=1).sum())
+    print(f"resilience/rodent16: status={health['status']} "
+          f"drops={health['drops']['total']} "
+          f"(budget {health['budget']['expected_drops_run']:.1f}) "
+          f"restarts={health['restarts']} "
+          f"{health['deadline']['observed_us_per_tick']:.0f} us/tick")
+    return health
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="shorter training and rodent16 run (smoke test; "
+                         "do not commit the resulting JSON)")
+    ap.add_argument("--legacy-cpu", action="store_true",
+                    help="pin the legacy XLA CPU runtime (the configuration "
+                         "the committed numbers were measured with)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: <repo>/BENCH_resilience.json)")
+    args = ap.parse_args()
+    if args.legacy_cpu:
+        from benchmarks.run import pin_legacy_cpu_runtime
+        pin_legacy_cpu_runtime()
+
+    train_reps = 10 if args.fast else TRAIN_REPS
+    n_ticks = 128 if args.fast else 256
+    curves, chance, cfg = recall_vs_flip_rate(train_reps=train_reps)
+    health = rodent16_health(n_ticks=n_ticks)
+
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_resilience.json"
+    out.write_text(json.dumps({
+        "schema": 1,
+        "config": cfg,
+        "chance": chance,
+        "recall_vs_flip_rate": curves,
+        "rodent16_health": health,
+    }, indent=2) + "\n")
+    print(f"# wrote {out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,17 +16,19 @@ lazily-evaluated implementation, driven through the `Simulator` facade:
 
 Chance level is 1/C (C = MCUs per HCU). A working associative memory scores
 far above it.
+
+The train/cue/recall protocol itself lives in `repro.experiments` so the
+resilience benchmark (`benchmarks/resilience.py`) can re-run recall under
+injected DRAM-retention bit flips; this script is the plain, fault-free run.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BCPNNParams, Simulator
+from repro.core import Simulator
 from repro.data import make_patterns
+from repro.experiments import assoc_params, recall_accuracy, train_assoc
 
-P_ = BCPNNParams(n_hcu=12, rows=64, cols=8, fanout=12, active_queue=16,
-                 max_delay=4, mean_delay=1.5, out_rate=1.0, wta_temp=0.25,
-                 tau_p=400.0)
+P_ = assoc_params()
 N_PATTERNS = 3
 TRAIN_REPS = 30
 PRESENT_MS = 6
@@ -35,52 +37,14 @@ CUE_FRACTION = 0.6
 sim = Simulator(P_, key=0, cap_fire=P_.n_hcu)
 patterns = make_patterns(P_, N_PATTERNS, seed=3)
 
-
-def drive(pattern_rows, active_mask):
-    ext = np.full((P_.n_hcu, 4), P_.rows, np.int32)
-    for h in range(P_.n_hcu):
-        if active_mask[h]:
-            ext[h, 0] = pattern_rows[h]
-    return jnp.asarray(ext)
-
-
-def run_ticks(ext, n):
-    winners = np.full((P_.n_hcu,), -1, np.int64)
-    for _ in range(n):
-        f = np.asarray(sim.tick(ext))
-        upd = f >= 0
-        winners[upd] = f[upd]
-    return winners
-
-
-# ---------------------------------- train -----------------------------------
-all_on = np.ones(P_.n_hcu, bool)
-attractor = np.zeros((N_PATTERNS, P_.n_hcu), np.int64)
-for rep in range(TRAIN_REPS):
-    for pid in range(N_PATTERNS):
-        winners = run_ticks(drive(patterns[pid], all_on), PRESENT_MS)
-        if rep == TRAIN_REPS - 1:
-            attractor[pid] = winners
-    # short silence between presentations lets Z traces decay
-    run_ticks(drive(patterns[0], np.zeros(P_.n_hcu, bool)), 2)
-
+attractor = train_assoc(sim, patterns, reps=TRAIN_REPS,
+                        present_ms=PRESENT_MS)
 print("trained", N_PATTERNS, "patterns,", TRAIN_REPS, "reps each")
 
-# ---------------------------------- recall ----------------------------------
-rng = np.random.default_rng(0)
-correct = total = 0
-trained_state = sim.state
-for pid in range(N_PATTERNS):
-    cue_mask = rng.random(P_.n_hcu) < CUE_FRACTION
-    ext = drive(patterns[pid], cue_mask)
-    # each recall runs on a fresh copy of the trained state (the tick
-    # drivers donate their input buffers, so the original must be kept
-    # aside; after the loop the sim holds the last recall trajectory)
-    sim.state = jax.tree.map(jnp.copy, trained_state)
-    winners = run_ticks(ext, 12)
-    probe = ~cue_mask & (winners >= 0) & (attractor[pid] >= 0)
-    correct += int((winners[probe] == attractor[pid][probe]).sum())
-    total += int(probe.sum())
+trained_state = jax.tree.map(np.array, sim.state)
+correct, total = recall_accuracy(sim, trained_state, patterns, attractor,
+                                 cue_fraction=CUE_FRACTION,
+                                 rng=np.random.default_rng(0))
 
 chance = 1.0 / P_.cols
 acc = correct / max(total, 1)

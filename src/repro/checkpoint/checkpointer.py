@@ -38,8 +38,32 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _step_id(name: str) -> int | None:
+    """step_<N> -> N; None for anything else (tmp dirs, stray files)."""
+    if not name.startswith("step_"):
+        return None
+    try:
+        return int(name[len("step_"):])
+    except ValueError:
+        return None
+
+
+def _sweep_stale_tmp(ckpt_dir: str):
+    """Remove `.tmp_step_*` staging dirs orphaned by a crash mid-save.
+
+    Safe: a tmp dir only exists between `save` staging and its atomic
+    rename, and saves within one process are serialized (AsyncCheckpointer
+    joins the previous write before starting the next) — so any tmp dir
+    found at the START of a save is a leftover from a died writer.
+    """
+    for d in os.listdir(ckpt_dir):
+        if d.startswith(".tmp_step_"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
 def save(ckpt_dir: str, step: int, tree, keep_last: int = 3) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
+    _sweep_stale_tmp(ckpt_dir)
     final = os.path.join(ckpt_dir, f"step_{step}")
     tmp = os.path.join(ckpt_dir, f".tmp_step_{step}_{os.getpid()}")
     os.makedirs(tmp, exist_ok=True)
@@ -62,8 +86,8 @@ def save(ckpt_dir: str, step: int, tree, keep_last: int = 3) -> str:
 
 
 def _prune(ckpt_dir: str, keep_last: int):
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-                   if d.startswith("step_"))
+    steps = sorted(s for s in map(_step_id, os.listdir(ckpt_dir))
+                   if s is not None)
     for s in steps[:-keep_last] if keep_last > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
 
@@ -78,7 +102,10 @@ class AsyncCheckpointer:
 
     def save_async(self, step: int, tree):
         self.wait()
-        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot
+        # np.array, not np.asarray: on CPU jax the latter can alias the
+        # device buffer, and a donating run launched before the background
+        # write finishes would corrupt the checkpoint in flight
+        host_tree = jax.tree.map(lambda x: np.array(x), tree)  # snapshot
         self._thread = threading.Thread(
             target=save, args=(self.ckpt_dir, step, host_tree),
             kwargs={"keep_last": self.keep_last}, daemon=True)
@@ -90,12 +117,40 @@ class AsyncCheckpointer:
             self._thread = None
 
 
+def _is_complete(ckpt_dir: str, step: int) -> bool:
+    """A step dir is restorable iff its manifest parses and every leaf file
+    it promises exists (a crash between staging and rename can't produce a
+    partial step dir, but a corrupt LATEST can point at a pruned one)."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            meta = json.load(f)
+        return all(os.path.exists(os.path.join(d, f"leaf_{i}.npy"))
+                   for i in range(int(meta["n_leaves"])))
+    except (OSError, ValueError, KeyError):
+        return False
+
+
 def latest_step(ckpt_dir: str) -> int | None:
-    p = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(p):
+    """Newest complete step, or None. LATEST is only a hint: if it is
+    missing, corrupt, or points at an incomplete/pruned step, fall back to
+    scanning for the newest complete step directory."""
+    if not os.path.isdir(ckpt_dir):
         return None
-    with open(p) as f:
-        return int(f.read().strip())
+    p = os.path.join(ckpt_dir, "LATEST")
+    try:
+        with open(p) as f:
+            s = int(f.read().strip())
+        if _is_complete(ckpt_dir, s):
+            return s
+    except (OSError, ValueError):
+        pass
+    steps = sorted((s for s in map(_step_id, os.listdir(ckpt_dir))
+                    if s is not None), reverse=True)
+    for s in steps:
+        if _is_complete(ckpt_dir, s):
+            return s
+    return None
 
 
 def restore(ckpt_dir: str, step: int, template, migrate=None):

@@ -1,0 +1,13 @@
+"""Reusable experiment harnesses over the Simulator facade.
+
+`repro.experiments.assoc_memory` factors the associative-memory
+train/cue/recall protocol out of `examples/bcpnn_assoc_memory.py` so the
+resilience benchmark (`benchmarks/resilience.py`) can re-run recall under
+injected DRAM-retention faults without duplicating the protocol.
+"""
+from repro.experiments.assoc_memory import (assoc_params, drive_frame,
+                                            recall_accuracy, sram_loss,
+                                            train_assoc, winners_from_fired)
+
+__all__ = ["assoc_params", "drive_frame", "recall_accuracy", "sram_loss",
+           "train_assoc", "winners_from_fired"]

@@ -1,3 +1,11 @@
-from repro.runtime.elastic import RestartableLoop, StragglerMonitor, remesh
+from repro.runtime.elastic import (InjectedFailure, RestartableLoop,
+                                   RestartBudgetExceeded, StragglerMonitor,
+                                   remesh)
+from repro.runtime.resilience import (HealthMonitor, ResilientRunner,
+                                      flip_bits, inject_retention_faults)
 
-__all__ = ["RestartableLoop", "StragglerMonitor", "remesh"]
+__all__ = [
+    "HealthMonitor", "InjectedFailure", "ResilientRunner", "RestartableLoop",
+    "RestartBudgetExceeded", "StragglerMonitor", "flip_bits",
+    "inject_retention_faults", "remesh",
+]

@@ -12,8 +12,14 @@ Components:
                               skip-budget accounting (BCPNN spikes are
                               droppable by design — the paper's queue-drop
                               budget, Fig 7, prices exactly this)
+  InjectedFailure             the simulated-fault exception: everything the
+                              restart machinery is allowed to swallow
   RestartableLoop             run steps with checkpoint/restore + simulated
-                              failure injection (used by tests)
+                              failure injection, bounded by `max_restarts`
+
+The BCPNN-specific resilience layer (crash-restore-replay over the tick
+engine, DRAM-retention bit-flip injection, the drop-budget health monitor)
+builds on these primitives in `repro.runtime.resilience`.
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ import time
 from typing import Any, Callable
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.checkpoint import AsyncCheckpointer, restore_latest
@@ -36,6 +43,19 @@ def remesh(tree, mesh: Mesh, specs):
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
 
 
+class InjectedFailure(RuntimeError):
+    """A *simulated* node failure raised by a `fail_injector`.
+
+    Dedicated type so the restart machinery can recover from injected faults
+    while real errors — a genuine `RuntimeError` from XLA, a shape bug —
+    propagate to the caller instead of being silently retried forever."""
+
+
+class RestartBudgetExceeded(RuntimeError):
+    """Raised when a restart loop exhausts its `max_restarts` budget —
+    the "crash loop" guard a real scheduler applies before paging a human."""
+
+
 @dataclasses.dataclass
 class StragglerMonitor:
     """Deadline-based straggler accounting for a fixed-rate loop.
@@ -43,12 +63,17 @@ class StragglerMonitor:
     In a real multi-host deployment each host reports step wall time; a step
     exceeding `deadline_s` is logged and (for droppable work like BCPNN spike
     delivery) may be skipped against a drop budget instead of stalling the
-    collective — the paper's 1-spike-per-month budget generalized.
+    collective — the paper's 1-spike-per-month budget generalized. Wall-clock
+    totals (`total_s`, `worst_s`, `last_s`) feed the realtime-deadline half
+    of `repro.runtime.resilience.HealthMonitor`.
     """
     deadline_s: float
     slow_steps: int = 0
     skipped: int = 0
     total: int = 0
+    total_s: float = 0.0
+    worst_s: float = 0.0
+    last_s: float = 0.0
     _last: float = 0.0
 
     def start(self):
@@ -58,6 +83,10 @@ class StragglerMonitor:
         """Returns True if the step met its deadline."""
         dt = time.monotonic() - self._last
         self.total += 1
+        self.total_s += dt
+        self.last_s = dt
+        if dt > self.worst_s:
+            self.worst_s = dt
         if dt > self.deadline_s:
             self.slow_steps += 1
             return False
@@ -68,43 +97,62 @@ class StragglerMonitor:
 
     def summary(self):
         return {"total": self.total, "slow": self.slow_steps,
-                "skipped": self.skipped}
+                "skipped": self.skipped, "total_s": self.total_s,
+                "worst_s": self.worst_s}
 
 
 class RestartableLoop:
-    """Checkpointed step loop with failure recovery.
+    """Checkpointed step loop with bounded failure recovery.
 
-    fail_injector(step) -> bool lets tests simulate node failures; on
-    failure the loop restores the latest checkpoint and continues, exactly
-    the restart path a real deployment takes after re-scheduling.
+    fail_injector(step) -> bool lets tests simulate node failures (raised as
+    `InjectedFailure`); on an injected failure the loop restores the latest
+    checkpoint and continues — exactly the restart path a real deployment
+    takes after re-scheduling. Only `InjectedFailure` is recovered: a real
+    exception out of `step_fn` propagates immediately (it would recur on
+    replay anyway). `max_restarts` bounds the recovery budget — an
+    always-failing step (e.g. a failure injected before the first checkpoint
+    ever lands) raises `RestartBudgetExceeded` instead of spinning forever.
     """
 
     def __init__(self, ckpt_dir: str, save_every: int = 10,
-                 fail_injector: Callable[[int], bool] | None = None):
+                 fail_injector: Callable[[int], bool] | None = None,
+                 max_restarts: int = 32):
         self.ckpt = AsyncCheckpointer(ckpt_dir)
         self.ckpt_dir = ckpt_dir
         self.save_every = save_every
         self.fail_injector = fail_injector
+        self.max_restarts = max_restarts
         self.restarts = 0
 
     def run(self, state: Any, step_fn: Callable[[Any, int], Any],
             n_steps: int):
+        # host snapshot of the entry state: a restart with no checkpoint on
+        # disk must replay from HERE, not from the half-mutated live state
+        # (np.array forces a real copy — on CPU jax, np.asarray can alias
+        # the device buffer, which a later donation would invalidate)
+        initial = jax.tree.map(np.array, state)
         step = 0
         while step < n_steps:
             try:
                 if self.fail_injector and self.fail_injector(step):
-                    raise RuntimeError(f"injected failure at step {step}")
+                    raise InjectedFailure(f"injected failure at step {step}")
                 state = step_fn(state, step)
                 step += 1
                 if step % self.save_every == 0:
                     self.ckpt.save_async(step, state)
-            except RuntimeError:
+            except InjectedFailure as e:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise RestartBudgetExceeded(
+                        f"{self.restarts - 1} restarts exhausted the budget "
+                        f"of {self.max_restarts}") from e
                 self.ckpt.wait()
                 restored, s = restore_latest(self.ckpt_dir, state)
                 if restored is None:
-                    step = 0          # no checkpoint yet: restart from scratch
+                    # no checkpoint yet: restart from scratch
+                    state = jax.tree.map(np.array, initial)
+                    step = 0
                 else:
                     state, step = restored, s
-                self.restarts += 1
         self.ckpt.wait()
         return state, step

@@ -1,0 +1,349 @@
+"""Resilient realtime BCPNN runtime: crash recovery, DRAM-retention fault
+injection, and drop-budget health accounting.
+
+eBrainII is not just a fast BCPNN — it is a *fault-priced* one. The paper
+dimensions its spike queues against an explicit drop budget (queue size 36 ≈
+one dropped spike per month, Fig 7 / EQ1 — `repro.core.queues`), and its
+custom 3D DRAM deliberately relaxes refresh because BCPNN tolerates
+synaptic-plane bit errors. This module turns those robustness claims into
+runnable machinery over the tick engine, across three fault classes:
+
+1. Crash/restart — `ResilientRunner` drives `Simulator.run` in chunks with
+   async checkpoints every `save_every` chunks and injectable failures
+   (`repro.runtime.elastic.InjectedFailure`). Restore-and-replay is BITWISE
+   identical to the uninterrupted trajectory: the checkpoint stores exact
+   NetworkState bits (incl. `base_key`), per-tick RNG keys are derived from
+   the tick index (`engine.tick` folds `t` into `base_key`), external input
+   is a pre-staged tensor re-sliced at the restored `t`, and scan-chunk
+   boundaries do not affect bits (the PR 3 head-fixture contract, pinned by
+   tests/test_resilience.py).
+
+2. Memory faults — `flip_bits` / `inject_retention_faults` corrupt the flat
+   synaptic ij planes (Zij/Eij/Pij/Wij/Tij) at a configurable per-bit rate
+   and pattern, emulating relaxed-refresh 3D DRAM retention errors. The
+   recall-quality experiment (`benchmarks/resilience.py`) measures
+   associative-recall overlap vs flip rate and emits `BENCH_resilience.json`.
+
+3. Overload/deadline faults — `HealthMonitor` reads the engine's
+   already-maintained drop counters (`Simulator.drops`) per chunk, compares
+   observed drops against the Fig 7 analytic budget
+   (`repro.core.queues.drop_probability_per_ms` scaled to run length and HCU
+   count), and folds in `StragglerMonitor` wall-clock accounting against the
+   paper's 1 ms/tick realtime target. The policy is graceful degradation:
+   log + flag in the structured health report (ok / over-budget /
+   deadline-missed), never stall or abort the scan.
+
+Everything here is host-side orchestration: the compiled tick graphs are
+untouched, so enabling resilience cannot perturb trajectories.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, restore_latest
+from repro.core import network as N
+from repro.core import queues
+from repro.core.params import BCPNNParams
+from repro.runtime.elastic import (InjectedFailure, RestartBudgetExceeded,
+                                   StragglerMonitor)
+
+log = logging.getLogger("repro.resilience")
+
+# the five synaptic ij planes the paper stores in (relaxed-refresh) 3D DRAM
+# — the 192-bit AoS cell, here as flat (H*R, C) SoA planes
+IJ_PLANES = ("zij", "eij", "pij", "wij", "tij")
+
+# paper realtime target: one biological ms per wall-clock ms
+REALTIME_US_PER_TICK = 1000.0
+
+
+def _host_copy(tree):
+    """Deep host-memory snapshot (np.array forces a copy; on CPU jax,
+    np.asarray may alias the device buffer a later donation invalidates)."""
+    return jax.tree.map(np.array, tree)
+
+
+def _device_tree(tree):
+    return jax.tree.map(jnp.asarray, tree)
+
+
+# ---------------------------------------------------------------------------
+# fault class 2: DRAM-retention bit flips
+# ---------------------------------------------------------------------------
+
+def flip_bits(plane: jnp.ndarray, key, rate: float, *, mode: str = "flip",
+              bit_mask: int = 0xFFFFFFFF) -> jnp.ndarray:
+    """Corrupt a 32-bit state plane with independent per-bit faults.
+
+    Each of the 32 bits of every cell is hit with probability `rate`
+    (restricted to the bits set in `bit_mask`); `mode` selects the fault
+    pattern:
+      * "flip"  — invert the hit bits (generic soft error),
+      * "clear" — force hit bits to 0 (a DRAM true-cell losing charge under
+                  relaxed refresh — the retention-error pattern),
+      * "set"   — force hit bits to 1 (anti-cell decay).
+    rate=0.0 is a bitwise no-op. Deterministic in `key`. Works for the f32
+    planes and the int32 Tij timestamps alike (both are bitcast to uint32).
+    """
+    if mode not in ("flip", "clear", "set"):
+        raise ValueError(f"unknown fault mode {mode!r}")
+    bits = jax.lax.bitcast_convert_type(plane, jnp.uint32)
+    hit = jax.random.bernoulli(key, rate, bits.shape + (32,))
+    weights = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    noise = jnp.sum(jnp.where(hit, weights, jnp.uint32(0)), axis=-1,
+                    dtype=jnp.uint32) & jnp.uint32(bit_mask)
+    if mode == "flip":
+        bits = bits ^ noise
+    elif mode == "clear":
+        bits = bits & ~noise
+    else:
+        bits = bits | noise
+    return jax.lax.bitcast_convert_type(bits, plane.dtype)
+
+
+def inject_retention_faults(state, key, rate: float, *,
+                            planes=IJ_PLANES, mode: str = "flip",
+                            bit_mask: int = 0xFFFFFFFF):
+    """Corrupt the selected synaptic planes of a NetworkState at per-bit
+    `rate` — the software stand-in for running the paper's 3D DRAM below its
+    worst-case refresh interval. Only the named ij planes are touched; queue
+    state, j-vectors and RNG key stay exact (they live in the ASIC's SRAM,
+    not the relaxed-refresh DRAM). Returns the corrupted state."""
+    upd = {}
+    for i, name in enumerate(planes):
+        if name not in IJ_PLANES:
+            raise ValueError(f"{name!r} is not a DRAM-resident ij plane "
+                             f"{IJ_PLANES}")
+        upd[name] = flip_bits(getattr(state.hcus, name),
+                              jax.random.fold_in(key, i), rate,
+                              mode=mode, bit_mask=bit_mask)
+    return state._replace(hcus=state.hcus._replace(**upd))
+
+
+# ---------------------------------------------------------------------------
+# fault class 3: overload / deadline health accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HealthMonitor:
+    """Per-chunk drop-budget + realtime-deadline accounting.
+
+    Drops: the engine already counts delay-queue overflows (`drops_in`) and
+    fired-batch overflows (`drops_fire`) — the Fig 7 failure currency. The
+    monitor compares the observed total against the analytic expectation
+    `drop_probability_per_ms(active_queue, in_rate) * ticks * n_hcu`
+    (`repro.core.queues`, EQ1) scaled by `budget_headroom`.
+
+    Deadlines: a `StragglerMonitor` tracks per-chunk wall time against the
+    paper's realtime target (`target_us_per_tick`, default 1 ms/tick).
+
+    Policy: graceful degradation. The monitor never raises and never blocks;
+    `report()` returns the structured verdict (ok / over-budget /
+    deadline-missed) and violations are logged as they are observed.
+    """
+    p: BCPNNParams
+    n_hcu: int | None = None
+    target_us_per_tick: float = REALTIME_US_PER_TICK
+    budget_headroom: float = 1.0
+    ticks: int = 0
+    straggler: StragglerMonitor = dataclasses.field(
+        default_factory=lambda: StragglerMonitor(deadline_s=0.0))
+    worst_us_per_tick: float = 0.0
+    _drops0: dict | None = None
+    _drops: dict | None = None
+
+    def begin(self, drops: dict) -> None:
+        """Record the drop-counter baseline (cumulative {'in','fire'})."""
+        self._drops0 = dict(drops)
+        self._drops = dict(drops)
+
+    def chunk_start(self, n_ticks: int) -> None:
+        self.straggler.deadline_s = n_ticks * self.target_us_per_tick / 1e6
+        self.straggler.start()
+
+    def chunk_end(self, n_ticks: int, drops: dict) -> bool:
+        """Close out a chunk: wall-clock + drop accounting. Returns True if
+        the chunk met its realtime deadline."""
+        met = self.straggler.finish()
+        per_tick_us = self.straggler.last_s * 1e6 / max(n_ticks, 1)
+        if per_tick_us > self.worst_us_per_tick:
+            self.worst_us_per_tick = per_tick_us
+        self.ticks += n_ticks
+        if self._drops0 is None:
+            self._drops0 = {k: 0 for k in drops}
+        self._drops = dict(drops)
+        if not met:
+            log.warning("deadline miss: chunk of %d ticks ran %.0f us/tick "
+                        "(target %.0f)", n_ticks, per_tick_us,
+                        self.target_us_per_tick)
+        return met
+
+    # -- verdict -------------------------------------------------------------
+    def expected_drops(self) -> float:
+        """Fig 7 analytic budget scaled to this run: expected dropped spikes
+        over `ticks` ms across `n_hcu` delay queues at the dimensioned
+        Poisson rate."""
+        n = self.n_hcu if self.n_hcu is not None else self.p.n_hcu
+        return (queues.drop_probability_per_ms(self.p.active_queue,
+                                               self.p.in_rate)
+                * self.ticks * n)
+
+    def observed_drops(self) -> dict:
+        d0 = self._drops0 or {}
+        d1 = self._drops or {}
+        out = {k: int(d1.get(k, 0)) - int(d0.get(k, 0)) for k in d1}
+        out["total"] = sum(out.values())
+        return out
+
+    def report(self, restarts: int = 0) -> dict:
+        """Structured health verdict. Never raises; see docs/RESILIENCE.md
+        for the schema."""
+        obs = self.observed_drops()
+        budget = self.expected_drops() * self.budget_headroom
+        over = obs.get("total", 0) > budget
+        missed = self.straggler.slow_steps > 0
+        status = ("over-budget" if over
+                  else "deadline-missed" if missed else "ok")
+        ticks = max(self.ticks, 1)
+        rep = {
+            "status": status,
+            "ticks": self.ticks,
+            "restarts": restarts,
+            "drops": obs,
+            "budget": {
+                "queue_size": self.p.active_queue,
+                "lam": self.p.in_rate,
+                "drop_p_per_ms": queues.drop_probability_per_ms(
+                    self.p.active_queue, self.p.in_rate),
+                "expected_drops_run": self.expected_drops(),
+                "expected_drops_per_month_per_hcu":
+                    queues.expected_drops_per_month(self.p.active_queue,
+                                                    self.p.in_rate),
+                "headroom": self.budget_headroom,
+                "over_budget": over,
+            },
+            "deadline": {
+                "target_us_per_tick": self.target_us_per_tick,
+                "observed_us_per_tick": self.straggler.total_s * 1e6 / ticks,
+                "worst_chunk_us_per_tick": self.worst_us_per_tick,
+                "chunks": self.straggler.total,
+                "chunks_missed": self.straggler.slow_steps,
+                "missed": missed,
+            },
+        }
+        if status != "ok":
+            log.warning("health: %s (drops=%s budget=%.3f, %d/%d chunks "
+                        "missed deadline)", status, obs, budget,
+                        self.straggler.slow_steps, self.straggler.total)
+        return rep
+
+
+# ---------------------------------------------------------------------------
+# fault class 1: crash / restart with bitwise replay
+# ---------------------------------------------------------------------------
+
+class ResilientRunner:
+    """Drive a `Simulator` through a long staged run with checkpoints,
+    bounded crash recovery, and health accounting.
+
+        sim = Simulator(p, key=0)
+        runner = ResilientRunner(sim, "ckpt", chunk_ticks=64, save_every=2)
+        fired, health = runner.run(ext)          # (T, H) history + report
+
+    The run is cut into `chunk_ticks`-tick scan calls; after every
+    `save_every` chunks the NetworkState is snapshotted to host memory and
+    written asynchronously (`repro.checkpoint.AsyncCheckpointer` — atomic
+    step dirs, stale-tmp sweep). `fail_injector(chunk_index) -> bool`
+    simulates a crash before that chunk (raised as `InjectedFailure`); the
+    runner then restores the newest complete checkpoint — or the initial
+    state when none landed yet — re-slices the staged input at the restored
+    `t`, and replays. Replay is bitwise-identical to the uninterrupted run:
+    per-tick RNG is derived from the tick index and the checkpointed
+    `base_key`, and chunk boundaries do not affect bits (head-fixture
+    contract). `max_restarts` bounds recovery (`RestartBudgetExceeded`).
+    Real exceptions are never swallowed.
+
+    Overlapping fired history is overwritten on replay with identical
+    values, so the returned (T, H) history is exactly the uninterrupted one.
+    """
+
+    def __init__(self, sim, ckpt_dir: str, *, chunk_ticks: int = 64,
+                 save_every: int = 1, keep_last: int = 3,
+                 fail_injector=None, max_restarts: int = 8,
+                 monitor: HealthMonitor | None = None):
+        self.sim = sim
+        self.ckpt = AsyncCheckpointer(ckpt_dir, keep_last=keep_last)
+        self.ckpt_dir = ckpt_dir
+        self.chunk_ticks = int(chunk_ticks)
+        self.save_every = int(save_every)
+        self.fail_injector = fail_injector
+        self.max_restarts = int(max_restarts)
+        self.monitor = monitor if monitor is not None else HealthMonitor(
+            sim.p, n_hcu=sim.n_hcu)
+        self.restarts = 0
+
+    def run(self, ext, n_ticks: int | None = None):
+        """Run `ext` (staged (T, H, A_ext) tensor, iterable of frames, or
+        callable ext_fn(t) with `n_ticks`) to completion through crashes.
+        Returns (fired_history (T, H) int32, health report dict)."""
+        sim = self.sim
+        t0 = int(sim.state.t)
+        if callable(ext) or not hasattr(ext, "ndim"):
+            ext = N.stage_external(ext, n_ticks, t0=t0)
+        ext = jnp.asarray(ext)
+        if n_ticks is not None:
+            ext = ext[:n_ticks]
+        T = int(ext.shape[0])
+        n = sim.state.delay_rows.shape[0]
+        fired = np.full((T, n), -1, np.int32)
+        # restart-from-scratch target (drivers donate sim.state, so only a
+        # host copy survives the first chunk)
+        initial = _host_copy(sim.state)
+        self.monitor.begin(sim.drops())
+        done = 0                       # ticks completed == history position
+        chunks_done = 0
+        while done < T:
+            step = min(self.chunk_ticks, T - done)
+            try:
+                if self.fail_injector is not None and \
+                        self.fail_injector(done // self.chunk_ticks):
+                    raise InjectedFailure(
+                        f"injected failure at tick {t0 + done}")
+                self.monitor.chunk_start(step)
+                f = sim.run(jax.lax.slice_in_dim(ext, done, done + step))
+                fired[done:done + step] = np.asarray(f)
+                done += step
+                chunks_done += 1
+                self.monitor.chunk_end(step, sim.drops())
+                if chunks_done % self.save_every == 0:
+                    # snapshot-to-host is synchronous (and a true copy —
+                    # the next chunk donates these buffers); disk write is
+                    # backgrounded
+                    self.ckpt.save_async(t0 + done, sim.state)
+            except InjectedFailure as e:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise RestartBudgetExceeded(
+                        f"{self.restarts - 1} restarts exhausted the budget "
+                        f"of {self.max_restarts}") from e
+                self.ckpt.wait()
+                restored, t_saved = restore_latest(self.ckpt_dir, sim.state)
+                if restored is None:
+                    sim.state = _device_tree(initial)
+                    done = 0
+                    log.warning("restart %d/%d: no checkpoint yet, replaying "
+                                "from t=%d", self.restarts, self.max_restarts,
+                                t0)
+                else:
+                    sim.state = _device_tree(restored)
+                    done = int(t_saved) - t0
+                    log.warning("restart %d/%d: restored t=%d, replaying",
+                                self.restarts, self.max_restarts,
+                                int(t_saved))
+        self.ckpt.wait()
+        return fired, self.monitor.report(restarts=self.restarts)

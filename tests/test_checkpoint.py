@@ -89,7 +89,63 @@ def test_straggler_monitor():
     mon2.start()
     assert mon2.finish() is False
     mon2.skip()
-    assert mon2.summary() == {"total": 1, "slow": 1, "skipped": 1}
+    s = mon2.summary()
+    assert s["total"] == 1 and s["slow"] == 1 and s["skipped"] == 1
+    assert s["total_s"] >= 0.0 and s["worst_s"] == mon2.worst_s
+    assert mon2.last_s >= 0.0 and mon2.total_s >= mon2.worst_s
+
+
+def test_stale_tmp_swept_on_next_save(tmp_path):
+    """A crash mid-save leaves a .tmp_step_* staging dir; the next save must
+    sweep it and pruning must not trip over it."""
+    t = _tree()
+    orphan = tmp_path / ".tmp_step_9_12345"
+    orphan.mkdir()
+    (orphan / "leaf_0.npy").write_bytes(b"partial garbage")
+    save(str(tmp_path), 1, t, keep_last=1)
+    names = os.listdir(tmp_path)
+    assert not any(d.startswith(".tmp") for d in names)
+    assert "step_1" in names
+    r, s = restore_latest(str(tmp_path), t)
+    assert s == 1 and r is not None
+
+
+def test_latest_corrupt_pointer_falls_back(tmp_path):
+    """A corrupt or dangling LATEST is only a hint: restore must fall back
+    to scanning for the newest complete step."""
+    t = _tree()
+    save(str(tmp_path), 3, t)
+    save(str(tmp_path), 5, t)
+    (tmp_path / "LATEST").write_text("not a number")
+    assert latest_step(str(tmp_path)) == 5
+    (tmp_path / "LATEST").write_text("999")        # dangling pointer
+    assert latest_step(str(tmp_path)) == 5
+    (tmp_path / "LATEST").write_text("")           # empty file
+    r, s = restore_latest(str(tmp_path), t)
+    assert s == 5 and r is not None
+
+
+def test_latest_skips_incomplete_step(tmp_path):
+    """A step dir with a manifest promising more leaves than exist (e.g. a
+    partially copied checkpoint) must not be selected as latest."""
+    import json as _json
+    t = _tree()
+    save(str(tmp_path), 2, t)
+    fake = tmp_path / "step_9"
+    fake.mkdir()
+    (fake / "manifest.json").write_text(_json.dumps({"n_leaves": 3}))
+    os.remove(tmp_path / "LATEST")
+    assert latest_step(str(tmp_path)) == 2
+    junk = tmp_path / "step_bogus"                 # unparseable step name
+    junk.mkdir()
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_restore_latest_empty_and_missing_dir(tmp_path):
+    t = _tree()
+    assert restore_latest(str(tmp_path), t) == (None, None)
+    assert restore_latest(str(tmp_path / "nope"), t) == (None, None)
+    assert latest_step(str(tmp_path / "nope")) is None
 
 
 def test_remesh_roundtrip():

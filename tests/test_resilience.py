@@ -1,0 +1,270 @@
+"""Resilience layer: crash-restore-replay bitwise identity vs the head
+fixtures, DRAM-retention bit-flip injection, drop-budget health accounting,
+and restart-budget guards.
+
+The crash tests re-run the exact trajectories pinned by
+tests/test_engine_fixtures.py (same params, connectivity, staged input, RNG
+key) through `ResilientRunner` with injected failures; restore-and-replay
+must land bit-for-bit on the uninterrupted fixtures in every combination of
+lazy/merged x dense/worklist.
+"""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Connectivity, Simulator, test_scale as tiny_scale
+from repro.core.params import BCPNNParams
+from repro.runtime import (HealthMonitor, InjectedFailure, ResilientRunner,
+                           RestartableLoop, RestartBudgetExceeded, flip_bits,
+                           inject_retention_faults)
+
+FIXTURES = pathlib.Path(__file__).resolve().parent / "fixtures"
+
+# must match tests/fixtures/capture_head.py
+LAZY_P = tiny_scale(n_hcu=4, rows=64, cols=16)
+MERGED_P = BCPNNParams(n_hcu=4, rows=24, cols=16, fanout=4, active_queue=8,
+                       max_delay=8, out_rate=0.6)
+
+CASES = {
+    "lazy_dense": (LAZY_P, dict(worklist=False)),
+    "lazy_worklist": (LAZY_P, dict(worklist=True)),
+    "merged_dense": (MERGED_P, dict(merged=True, worklist=False,
+                                    cap_fire=MERGED_P.n_hcu)),
+    "merged_worklist": (MERGED_P, dict(merged=True, worklist=True,
+                                       cap_fire=MERGED_P.n_hcu)),
+}
+
+
+def _fixture_sim(name):
+    p, kw = CASES[name]
+    d = np.load(FIXTURES / f"head_{name}.npz")
+    sim = Simulator(p, key=0, chunk=13, **kw)
+    sim.conn = Connectivity(jnp.asarray(d["conn_dest_hcu"]),
+                            jnp.asarray(d["conn_dest_row"]),
+                            jnp.asarray(d["conn_delay"]))
+    return sim, d
+
+
+def _assert_matches(state, fired, d, name):
+    np.testing.assert_array_equal(np.asarray(fired), d["fired"],
+                                  err_msg=f"{name}: fired history")
+    for f in state.hcus._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(state.hcus, f)),
+                                      d[f"hcus_{f}"],
+                                      err_msg=f"{name}: plane {f}")
+    np.testing.assert_array_equal(np.asarray(state.delay_rows),
+                                  d["delay_rows"], err_msg=name)
+    np.testing.assert_array_equal(np.asarray(state.delay_count),
+                                  d["delay_count"], err_msg=name)
+    assert int(state.t) == int(d["t"])
+    assert int(state.drops_in) == int(d["drops_in"])
+    assert int(state.drops_fire) == int(d["drops_fire"])
+    if "jring" in d:
+        np.testing.assert_array_equal(np.asarray(state.jring), d["jring"],
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# fault class 1: crash-restore-replay is bitwise identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_crash_restore_replay_bitwise(name, tmp_path):
+    """Two injected crashes; with save_every=2 the first hits before any
+    checkpoint (scratch restart) and the second restores a checkpoint OLDER
+    than the crash point (true replay of already-computed ticks). The
+    recovered trajectory must be bit-for-bit the uninterrupted fixture."""
+    sim, d = _fixture_sim(name)
+    fails = {1, 2}
+
+    def injector(chunk):
+        if chunk in fails:
+            fails.discard(chunk)
+            return True
+        return False
+
+    runner = ResilientRunner(sim, str(tmp_path), chunk_ticks=13,
+                             save_every=2, fail_injector=injector)
+    fired, health = runner.run(jnp.asarray(d["ext"]))
+    assert runner.restarts == 2 and not fails
+    assert health["restarts"] == 2
+    _assert_matches(sim.state, fired, d, name)
+
+
+def test_crash_before_first_checkpoint_restarts_from_scratch(tmp_path):
+    """A failure before any checkpoint lands must replay from the initial
+    state (not the half-mutated live state) — still bitwise identical."""
+    name = "lazy_worklist"
+    sim, d = _fixture_sim(name)
+    fails = {1}
+
+    def injector(chunk):
+        if chunk in fails:
+            fails.discard(chunk)
+            return True
+        return False
+
+    runner = ResilientRunner(sim, str(tmp_path), chunk_ticks=13,
+                             save_every=1000, fail_injector=injector)
+    fired, _ = runner.run(jnp.asarray(d["ext"]))
+    assert runner.restarts == 1
+    _assert_matches(sim.state, fired, d, name)
+
+
+def test_resilient_runner_restart_budget(tmp_path):
+    sim, d = _fixture_sim("lazy_dense")
+    runner = ResilientRunner(sim, str(tmp_path), chunk_ticks=13,
+                             save_every=1000, max_restarts=3,
+                             fail_injector=lambda c: c == 0)
+    with pytest.raises(RestartBudgetExceeded):
+        runner.run(jnp.asarray(d["ext"]))
+    assert runner.restarts == 4
+
+
+def test_restartable_loop_budget_and_real_errors(tmp_path):
+    """Always-failing injector with no checkpoint exhausts max_restarts;
+    a real exception from step_fn propagates instead of being retried."""
+    loop = RestartableLoop(str(tmp_path / "a"), save_every=1000,
+                           fail_injector=lambda s: True, max_restarts=5)
+    with pytest.raises(RestartBudgetExceeded):
+        loop.run({"x": jnp.zeros(())}, lambda s, i: s, 10)
+    assert loop.restarts == 6
+
+    def bad_step(state, step):
+        raise RuntimeError("real failure")
+
+    loop2 = RestartableLoop(str(tmp_path / "b"), save_every=1000)
+    with pytest.raises(RuntimeError, match="real failure"):
+        loop2.run({"x": jnp.zeros(())}, bad_step, 10)
+    assert loop2.restarts == 0
+
+
+# ---------------------------------------------------------------------------
+# fault class 2: retention bit flips
+# ---------------------------------------------------------------------------
+
+def test_flip_bits_rate_zero_is_bitwise_noop():
+    x = jnp.linspace(-3.0, 7.0, 64).reshape(8, 8)
+    for mode in ("flip", "clear", "set"):
+        y = flip_bits(x, jax.random.PRNGKey(0), 0.0, mode=mode)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_flip_bits_deterministic_and_modes():
+    x = jnp.linspace(0.5, 9.5, 64).reshape(8, 8)
+    k = jax.random.PRNGKey(3)
+    a = flip_bits(x, k, 0.1)
+    b = flip_bits(x, k, 0.1)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(a) != np.asarray(x)).any()
+    # clear only removes bits; set only adds them
+    xb = np.asarray(jax.lax.bitcast_convert_type(x, jnp.uint32))
+    cb = np.asarray(jax.lax.bitcast_convert_type(
+        flip_bits(x, k, 0.5, mode="clear"), jnp.uint32))
+    sb = np.asarray(jax.lax.bitcast_convert_type(
+        flip_bits(x, k, 0.5, mode="set"), jnp.uint32))
+    assert (cb & ~xb).sum() == 0
+    assert (~sb & xb).sum() == 0
+    with pytest.raises(ValueError):
+        flip_bits(x, k, 0.1, mode="zap")
+
+
+def test_flip_bits_bit_mask_sign_only():
+    """rate=1 with a sign-bit mask negates every float exactly."""
+    x = jnp.linspace(1.0, 4.0, 16)
+    y = flip_bits(x, jax.random.PRNGKey(0), 1.0, bit_mask=1 << 31)
+    np.testing.assert_array_equal(np.asarray(y), -np.asarray(x))
+
+
+def test_inject_retention_faults_scope():
+    """Only the named ij planes are corrupted; SRAM-resident state (queues,
+    j-vectors, RNG key) stays bit-exact; rate 0 is a full no-op."""
+    sim = Simulator(tiny_scale(n_hcu=2, rows=32, cols=16), key=0)
+    st = sim.state
+    z = inject_retention_faults(st, jax.random.PRNGKey(0), 0.0)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(z)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = inject_retention_faults(st, jax.random.PRNGKey(0), 0.05,
+                                planes=("wij",))
+    assert (np.asarray(c.hcus.wij) != np.asarray(st.hcus.wij)).any()
+    for f in ("zij", "eij", "pij", "tij", "zi", "zj", "pj"):
+        np.testing.assert_array_equal(np.asarray(getattr(c.hcus, f)),
+                                      np.asarray(getattr(st.hcus, f)),
+                                      err_msg=f)
+    np.testing.assert_array_equal(np.asarray(c.delay_rows),
+                                  np.asarray(st.delay_rows))
+    with pytest.raises(ValueError):
+        inject_retention_faults(st, jax.random.PRNGKey(0), 0.1,
+                                planes=("zj",))
+
+
+def test_corrupted_tij_timestamps_do_not_crash_engine():
+    """The engine must keep running on a state whose timestamps were hit —
+    graceful degradation, not a crash."""
+    p = tiny_scale(n_hcu=2, rows=32, cols=16)
+    sim = Simulator(p, key=0)
+    ext = jnp.full((8, 2, p.active_queue), p.rows, jnp.int32)
+    ext = ext.at[:, :, 0].set(3)
+    sim.run(ext)
+    sim.state = inject_retention_faults(sim.state, jax.random.PRNGKey(7),
+                                        0.01)
+    fired = sim.run(ext)
+    assert fired.shape == (8, 2)
+
+
+# ---------------------------------------------------------------------------
+# fault class 3: health accounting
+# ---------------------------------------------------------------------------
+
+def _p():
+    return tiny_scale(n_hcu=4, rows=32, cols=16)
+
+
+def test_health_monitor_ok():
+    mon = HealthMonitor(_p(), target_us_per_tick=1e9)
+    mon.begin({"in": 5, "fire": 1})
+    mon.chunk_start(10)
+    mon.chunk_end(10, {"in": 5, "fire": 1})
+    rep = mon.report()
+    assert rep["status"] == "ok"
+    assert rep["ticks"] == 10
+    assert rep["drops"]["total"] == 0
+    for key in ("budget", "deadline", "drops", "restarts"):
+        assert key in rep
+    assert rep["budget"]["expected_drops_run"] == pytest.approx(
+        mon.expected_drops())
+
+
+def test_health_monitor_over_budget():
+    mon = HealthMonitor(_p(), target_us_per_tick=1e9)
+    mon.begin({"in": 0, "fire": 0})
+    mon.chunk_start(10)
+    mon.chunk_end(10, {"in": 10_000_000, "fire": 0})
+    rep = mon.report()
+    assert rep["status"] == "over-budget"
+    assert rep["budget"]["over_budget"] is True
+    assert rep["drops"]["in"] == 10_000_000
+
+
+def test_health_monitor_deadline_missed():
+    mon = HealthMonitor(_p(), target_us_per_tick=0.0)
+    mon.begin({"in": 0, "fire": 0})
+    mon.chunk_start(10)
+    mon.chunk_end(10, {"in": 0, "fire": 0})
+    rep = mon.report()
+    assert rep["status"] == "deadline-missed"
+    assert rep["deadline"]["chunks_missed"] == 1
+    # over-budget outranks deadline-missed
+    mon.chunk_start(10)
+    mon.chunk_end(10, {"in": 10_000_000, "fire": 0})
+    assert mon.report()["status"] == "over-budget"
+
+
+def test_simulator_drops_accessor():
+    sim = Simulator(_p(), key=0)
+    d = sim.drops()
+    assert d == {"in": 0, "fire": 0}
+    assert isinstance(d["in"], int)
