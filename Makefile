@@ -25,12 +25,14 @@ bench-json:
 profile: bench-json
 	PYTHONPATH=src $(PY) -m benchmarks.profile_phases --legacy-cpu
 
-# fault-injection suite + resilience telemetry (BENCH_resilience.json:
-# recall-vs-bit-flip-rate curves + rodent16 drop-budget health report) +
-# the sanity gate on the fault-free recall path; mirrors the CI
-# `resilience` job (see docs/RESILIENCE.md)
+# fault-injection suite (incl. the multi-device elastic smoke — forced
+# host-platform device count, subprocess-isolated) + resilience telemetry
+# (BENCH_resilience.json: recall-vs-bit-flip-rate curves, rodent16
+# drop-budget health report, device-loss recovery scenario) + the sanity
+# gate on the fault-free recall path and the device-loss bitwise contract;
+# mirrors the CI `resilience` job (see docs/RESILIENCE.md)
 resilience:
-	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_resilience.py tests/test_checkpoint.py
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_resilience.py tests/test_checkpoint.py tests/test_elastic.py
 	PYTHONPATH=src $(PY) -m benchmarks.resilience --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.check_resilience
 

@@ -10,11 +10,16 @@ Validates a freshly generated BENCH_resilience.json:
     perturbed the fault-FREE path;
   * each curve covers a nonzero rate too (it is a curve, not a point);
   * the rodent16 health report is structurally complete (status /
-    drops / budget / deadline) with a known status and nonzero ticks.
+    drops / budget / deadline) with a known status and nonzero ticks;
+  * the device-loss recovery scenario restored onto a strictly smaller
+    mesh, actually restarted, reported its recovery wall time, and — the
+    elasticity contract — completed BITWISE identical to the uninterrupted
+    run, with a structurally complete post-recovery health report
+    (per-class drop budgets included).
 
-Wall-clock fields (us/tick, deadline status) are deliberately NOT gated —
-CI runners throttle; the deadline half of the report is trend data, the
-drop-budget half is deterministic.
+Wall-clock fields (us/tick, deadline status, recovery_s) are deliberately
+NOT gated beyond presence — CI runners throttle; the deadline half of the
+report is trend data, the drop-budget and bitwise halves are deterministic.
 """
 from __future__ import annotations
 
@@ -67,6 +72,35 @@ def main() -> None:
     for key in ("drops", "budget", "deadline"):
         if key not in h:
             failures.append(f"health report missing {key!r}")
+
+    dl = d.get("device_loss")
+    if not dl:
+        failures.append("no device_loss scenario")
+    else:
+        print(f"device_loss: {dl.get('devices_before')} -> "
+              f"{dl.get('devices_after')} devices "
+              f"restarts={dl.get('restarts')} "
+              f"recovery_s={dl.get('recovery_s')} "
+              f"bitwise={dl.get('bitwise_identical_to_uninterrupted')}")
+        if not dl.get("bitwise_identical_to_uninterrupted"):
+            failures.append("device-loss trajectory diverged from the "
+                            "uninterrupted run")
+        if not dl.get("restarts", 0) >= 1:
+            failures.append("device-loss scenario never restarted")
+        before, after = dl.get("devices_before"), dl.get("devices_after")
+        if not (isinstance(before, int) and isinstance(after, int)
+                and after < before):
+            failures.append(f"device-loss mesh did not shrink "
+                            f"({before} -> {after})")
+        if not isinstance(dl.get("recovery_s"), (int, float)):
+            failures.append("device-loss scenario missing recovery_s")
+        dh = dl.get("health", {})
+        if dh.get("status") not in KNOWN_STATUS:
+            failures.append(f"unknown device-loss health status "
+                            f"{dh.get('status')!r}")
+        if set(dh.get("classes", {})) != {"in", "fire", "route"}:
+            failures.append("device-loss health lacks per-class budgets "
+                            "(in/fire/route)")
 
     if failures:
         sys.exit("resilience gate: " + "; ".join(failures))

@@ -28,6 +28,17 @@ robustness analogue of BENCH_tick_loop.json):
    restore-and-replay) with the `HealthMonitor` drop-budget + realtime
    deadline report (Fig 7 analytic budget from `repro.core.queues`).
 
+3. device_loss — the degraded-mode elasticity scenario at rodent16: a
+   sharded run on 4 (forced host-platform) devices loses 2 mid-run;
+   `repro.runtime.resilience.ElasticRunner` restores the latest checkpoint,
+   remeshes all hypercolumns onto the 2 survivors, re-lowers, and replays.
+   Reported: recovery wall time, restart count, post-recovery drop health at
+   the NEW capacity, and whether the completed trajectory is bitwise
+   identical to the uninterrupted single-process run (it must be — the
+   lossless-route mesh-shape-invariance contract; gated in
+   `benchmarks/check_resilience.py`). Runs in a child process because
+   XLA's forced device count must be set before jax initializes.
+
 Cue masks and fault keys are derived from fixed seeds, so the curve is
 deterministic up to wall-clock fields in the health report.
 """
@@ -35,9 +46,12 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
+import subprocess
 import sys
 import tempfile
+import time
 
 # retention decay tolerates extreme clear rates; generic flips knee ~1e-4
 RATES = {"clear": (0.0, 0.1, 0.5, 0.8, 0.9, 0.95, 1.0),
@@ -127,6 +141,83 @@ def rodent16_health(n_ticks=256, chunk_ticks=64):
     return health
 
 
+DEVICE_LOSS_DEVICES = 4        # mesh before the injected loss
+DEVICE_LOSS_LOSE = 2           # trailing devices lost (16 HCUs % 2 == 0)
+_CHILD_MARK = "DEVICE_LOSS_JSON:"
+
+
+def _device_loss_measure(n_ticks: int, chunk_ticks: int) -> dict:
+    """The measurement body — must run under a forced host-platform device
+    count (`device_loss_scenario` wraps it in a child process)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.tick_loop import RODENT, _ext_tensor
+    from repro.core import Simulator
+    from repro.runtime import ElasticRunner
+
+    _, p = RODENT
+    ext = np.asarray(_ext_tensor(p, n_ticks))
+
+    # the pinned uninterrupted trajectory: a single-process run at the
+    # lossless 1-device fire cap (mesh-shape-invariance contract)
+    ref = Simulator(p, key=0, cap_fire=p.n_hcu, chunk=chunk_ticks)
+    f_ref = np.asarray(ref.run(jnp.asarray(ext)))
+
+    sim = Simulator(p, key=0)
+    fails = {2: DEVICE_LOSS_LOSE}
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        runner = ElasticRunner(sim, ckpt_dir, chunk_ticks=chunk_ticks,
+                               save_every=1,
+                               fail_injector=lambda c: fails.pop(c, 0))
+        t_start = time.perf_counter()
+        fired, health = runner.run(ext)
+        wall_s = time.perf_counter() - t_start
+    rec = runner.recoveries[0] if runner.recoveries else {}
+    return {
+        "size": {"name": "rodent16", "n_hcu": p.n_hcu, "rows": p.rows,
+                 "cols": p.cols, "n_ticks": int(n_ticks),
+                 "chunk_ticks": int(chunk_ticks)},
+        "devices_before": DEVICE_LOSS_DEVICES,
+        "devices_lost": DEVICE_LOSS_LOSE,
+        "devices_after": rec.get("devices"),
+        "restarts": runner.restarts,
+        "restored_tick": rec.get("restored_tick"),
+        "recovery_s": rec.get("recovery_s"),
+        "wall_s": wall_s,
+        "bitwise_identical_to_uninterrupted":
+            bool((fired == f_ref).all()),
+        "health": health,
+    }
+
+
+def device_loss_scenario(n_ticks=192, chunk_ticks=48, *,
+                         legacy_cpu=False) -> dict:
+    """Run the device-loss recovery scenario in a child process with
+    DEVICE_LOSS_DEVICES forced host devices (the forced count must land
+    before jax initializes, and this process has already imported jax)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " "
+                        "--xla_force_host_platform_device_count="
+                        f"{DEVICE_LOSS_DEVICES}").strip()
+    cmd = [sys.executable, "-m", "benchmarks.resilience",
+           "--device-loss-child", "--n-ticks", str(n_ticks),
+           "--chunk-ticks", str(chunk_ticks)]
+    if legacy_cpu:
+        cmd.append("--legacy-cpu")
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env)
+    if r.returncode != 0:
+        raise RuntimeError("device-loss child failed:\n" + r.stderr[-3000:])
+    payload = [ln for ln in r.stdout.splitlines()
+               if ln.startswith(_CHILD_MARK)]
+    out = json.loads(payload[-1][len(_CHILD_MARK):])
+    print(f"resilience/device_loss: {out['devices_before']} -> "
+          f"{out['devices_after']} devices, restarts={out['restarts']}, "
+          f"recovery {out['recovery_s']:.2f} s, bitwise="
+          f"{out['bitwise_identical_to_uninterrupted']}, "
+          f"health={out['health']['status']}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -137,25 +228,42 @@ def main() -> None:
                          "the committed numbers were measured with)")
     ap.add_argument("--out", default=None,
                     help="output path (default: <repo>/BENCH_resilience.json)")
+    ap.add_argument("--device-loss-child", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: forced-device child
+    ap.add_argument("--n-ticks", type=int, default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--chunk-ticks", type=int, default=None,
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args.legacy_cpu:
         from benchmarks.run import pin_legacy_cpu_runtime
         pin_legacy_cpu_runtime()
 
+    if args.device_loss_child:
+        out = _device_loss_measure(args.n_ticks or 192,
+                                   args.chunk_ticks or 48)
+        print(_CHILD_MARK + json.dumps(out))
+        return
+
     train_reps = 10 if args.fast else TRAIN_REPS
     n_ticks = 128 if args.fast else 256
     curves, chance, cfg = recall_vs_flip_rate(train_reps=train_reps)
     health = rodent16_health(n_ticks=n_ticks)
+    device_loss = device_loss_scenario(
+        n_ticks=96 if args.fast else 192,
+        chunk_ticks=24 if args.fast else 48,
+        legacy_cpu=args.legacy_cpu)
 
     out = pathlib.Path(args.out) if args.out else \
         pathlib.Path(__file__).resolve().parent.parent \
         / "BENCH_resilience.json"
     out.write_text(json.dumps({
-        "schema": 1,
+        "schema": 2,
         "config": cfg,
         "chance": chance,
         "recall_vs_flip_rate": curves,
         "rodent16_health": health,
+        "device_loss": device_loss,
     }, indent=2) + "\n")
     print(f"# wrote {out}", file=sys.stderr)
 

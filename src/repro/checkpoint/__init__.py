@@ -1,7 +1,9 @@
-from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_step,
+from repro.checkpoint.checkpointer import (AsyncCheckpointer,
+                                           CheckpointCorruption, latest_step,
                                            migrate_flat_planes, restore,
                                            restore_latest, restore_network,
                                            save)
 
-__all__ = ["AsyncCheckpointer", "latest_step", "migrate_flat_planes",
-           "restore", "restore_latest", "restore_network", "save"]
+__all__ = ["AsyncCheckpointer", "CheckpointCorruption", "latest_step",
+           "migrate_flat_planes", "restore", "restore_latest",
+           "restore_network", "save"]

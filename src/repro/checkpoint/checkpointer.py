@@ -24,18 +24,35 @@ the full-array path, and runtime/elastic.py covers the re-sharding logic.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
 import time
+import zlib
 
 import jax
 import numpy as np
+
+log = logging.getLogger("repro.checkpoint")
+
+
+class CheckpointCorruption(RuntimeError):
+    """A step directory whose leaf bytes no longer match the checksums its
+    manifest recorded at save time — torn write, bit rot, tampering. Raised
+    by `restore`; `restore_latest` recovers by falling back to the newest
+    intact step (see its docstring)."""
 
 
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
+
+
+def _leaf_checksum(arr: np.ndarray) -> str:
+    """crc32 over the raw leaf bytes (dtype/shape are covered separately by
+    the npy header + template shape check)."""
+    return f"{zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF:08x}"
 
 
 def _step_id(name: str) -> int | None:
@@ -68,10 +85,13 @@ def save(ckpt_dir: str, step: int, tree, keep_last: int = 3) -> str:
     tmp = os.path.join(ckpt_dir, f".tmp_step_{step}_{os.getpid()}")
     os.makedirs(tmp, exist_ok=True)
     leaves, treedef = _flatten(tree)
-    meta = {"step": step, "n_leaves": len(leaves),
-            "treedef": str(treedef), "time": time.time()}
+    checksums = []
     for i, leaf in enumerate(leaves):
-        np.save(os.path.join(tmp, f"leaf_{i}.npy"), np.asarray(leaf))
+        arr = np.asarray(leaf)
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+        checksums.append(_leaf_checksum(arr))
+    meta = {"step": step, "n_leaves": len(leaves), "checksums": checksums,
+            "treedef": str(treedef), "time": time.time()}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(meta, f)
     if os.path.exists(final):
@@ -93,12 +113,24 @@ def _prune(ckpt_dir: str, keep_last: int):
 
 
 class AsyncCheckpointer:
-    """Snapshot-to-host synchronously; write to disk in the background."""
+    """Snapshot-to-host synchronously; write to disk in the background.
+
+    A failed background save is never silently lost: the exception is
+    captured and re-raised on the next `wait()` or `save_async()` — the
+    caller's crash-recovery contract must not quietly degrade to an older
+    checkpoint because a write died out of band."""
 
     def __init__(self, ckpt_dir: str, keep_last: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep_last = keep_last
         self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None
+
+    def _write(self, step: int, host_tree):
+        try:
+            save(self.ckpt_dir, step, host_tree, keep_last=self.keep_last)
+        except BaseException as e:  # noqa: BLE001 — must cross the thread
+            self._exc = e
 
     def save_async(self, step: int, tree):
         self.wait()
@@ -107,14 +139,16 @@ class AsyncCheckpointer:
         # write finishes would corrupt the checkpoint in flight
         host_tree = jax.tree.map(lambda x: np.array(x), tree)  # snapshot
         self._thread = threading.Thread(
-            target=save, args=(self.ckpt_dir, step, host_tree),
-            kwargs={"keep_last": self.keep_last}, daemon=True)
+            target=self._write, args=(step, host_tree), daemon=True)
         self._thread.start()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
 
 def _is_complete(ckpt_dir: str, step: int) -> bool:
@@ -153,17 +187,43 @@ def latest_step(ckpt_dir: str) -> int | None:
     return None
 
 
+def _manifest(ckpt_dir: str, step: int) -> dict | None:
+    try:
+        with open(os.path.join(ckpt_dir, f"step_{step}",
+                               "manifest.json")) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
 def restore(ckpt_dir: str, step: int, template, migrate=None):
     """Restore into the structure of `template` (values are placeholders).
 
-    ``migrate`` (optional) is applied as migrate(loaded_leaf, template_leaf)
-    -> leaf before the shape check — the hook layout-migration shims (e.g.
-    `migrate_flat_planes`) plug into.
+    If the manifest carries per-leaf checksums (every save since they were
+    introduced), the loaded bytes are verified against them and a mismatch
+    raises `CheckpointCorruption` — a checksum-less (older) manifest loads
+    unverified. ``migrate`` (optional) is applied as
+    migrate(loaded_leaf, template_leaf) -> leaf before the shape check — the
+    hook layout-migration shims (e.g. `migrate_flat_planes`) plug into.
     """
     d = os.path.join(ckpt_dir, f"step_{step}")
     leaves, treedef = _flatten(template)
+    meta = _manifest(ckpt_dir, step)
+    n_have = (meta or {}).get("n_leaves")
+    if n_have is not None and int(n_have) != len(leaves):
+        raise ValueError(
+            f"step {step}: checkpoint has {n_have} leaves, template wants "
+            f"{len(leaves)} (older-format checkpoint? see restore_network)")
     out = [np.load(os.path.join(d, f"leaf_{i}.npy"))
            for i in range(len(leaves))]
+    sums = (meta or {}).get("checksums")
+    if sums is not None:
+        bad = [i for i, a in enumerate(out)
+               if i < len(sums) and _leaf_checksum(a) != sums[i]]
+        if bad:
+            raise CheckpointCorruption(
+                f"step {step}: leaf checksum mismatch at {bad} "
+                f"(torn write or bit rot under {d})")
     if migrate is not None:
         out = [migrate(a, t) for a, t in zip(out, leaves)]
     for i, (a, t) in enumerate(zip(out, leaves)):
@@ -197,14 +257,45 @@ def migrate_flat_planes(leaf, template_leaf):
 
 
 def restore_network(ckpt_dir: str, step: int, template):
-    """One-call NetworkState restore with the legacy-layout migration shim:
-    loads both canonical-flat and pre-engine (H, R, C)-layout checkpoints
-    into a canonical-flat template (see `migrate_flat_planes`)."""
+    """One-call NetworkState restore with the legacy migration shims:
+
+    * layout — loads both canonical-flat and pre-engine (H, R, C)-layout
+      checkpoints into a canonical-flat template (`migrate_flat_planes`);
+    * counters — pre-`drops_route` checkpoints are exactly one trailing
+      leaf short (the field was appended last); the missing route-drop
+      counter is re-initialized to 0, since historical route drops were
+      folded into `drops_fire`.
+    """
+    meta = _manifest(ckpt_dir, step)
+    tmpl_route = getattr(template, "drops_route", None)
+    if meta is not None and tmpl_route is not None and \
+            int(meta.get("n_leaves", -1)) == \
+            len(jax.tree.leaves(template)) - 1:
+        old = restore(ckpt_dir, step, template._replace(drops_route=None),
+                      migrate=migrate_flat_planes)
+        return old._replace(
+            drops_route=np.zeros_like(np.asarray(tmpl_route)))
     return restore(ckpt_dir, step, template, migrate=migrate_flat_planes)
 
 
-def restore_latest(ckpt_dir: str, template):
-    s = latest_step(ckpt_dir)
-    if s is None:
-        return None, None
-    return restore(ckpt_dir, s, template), s
+def restore_latest(ckpt_dir: str, template, *, prune_corrupt: bool = True):
+    """Restore the newest VERIFIED checkpoint, or (None, None).
+
+    A step whose checksums fail verification is pruned (deleted) and the
+    scan falls back to the next-newest complete step — so a torn or
+    bit-rotted save costs one checkpoint interval, never the run. Pass
+    ``prune_corrupt=False`` to re-raise `CheckpointCorruption` instead
+    (forensics mode: the corrupt dir is left in place)."""
+    while True:
+        s = latest_step(ckpt_dir)
+        if s is None:
+            return None, None
+        try:
+            return restore(ckpt_dir, s, template), s
+        except CheckpointCorruption as e:
+            if not prune_corrupt:
+                raise
+            log.warning("pruning corrupt checkpoint step_%d: %s", s, e)
+            # not ignore_errors: if the dir can't be removed, latest_step
+            # would hand it straight back — better to surface the OSError
+            shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"))

@@ -100,6 +100,18 @@ def default_route_config(p: BCPNNParams, h_local: int,
     return RouteConfig(cap_fire=cap_fire, cap_route=cap)
 
 
+def lossless_route_config(p: BCPNNParams, h_local: int) -> RouteConfig:
+    """Worst-case exchange dimensioning: capacity never binds (every device
+    can fire all of its HCUs and route their entire fanout to one peer), so
+    the exchange drops nothing and — because padded route slots carry no
+    trajectory-relevant bits — the logical trajectory is bitwise invariant
+    to the mesh shape. This is the elasticity contract `ElasticRunner`
+    relies on when it remaps HCUs onto a smaller mesh (`RouteConfig` is
+    re-derived per device count; see docs/RESILIENCE.md)."""
+    return RouteConfig(cap_fire=max(h_local, 1),
+                       cap_route=max(h_local, 1) * p.fanout)
+
+
 def _pack_bits(p: BCPNNParams, h_local: int):
     loc_bits = max((h_local - 1).bit_length(), 1)
     row_bits = (p.rows).bit_length()              # rows value == invalid marker
@@ -172,7 +184,9 @@ def _exchange_route(p: BCPNNParams, rc: RouteConfig, axis, ndev, h_local):
             state = N.enqueue_spikes(
                 state, recv[:, 0], recv[:, 1], recv[:, 2],
                 recv[:, 3] == 1, p, h_local)
-        return state._replace(drops_fire=state.drops_fire + route_drops)
+        # route-capacity overflow is its own Fig 7 class (drops_route), not
+        # fired-batch overflow: HealthMonitor budgets the two separately
+        return state._replace(drops_route=state.drops_route + route_drops)
 
     return route
 
@@ -203,7 +217,7 @@ def _shard_specs(axes):
     state_specs = N.NetworkState(
         hcus=H.HCUState(*([spec_h] * len(H.HCUState._fields))),
         delay_rows=spec_h, delay_count=spec_h,
-        t=rep, drops_in=rep, drops_fire=rep, base_key=rep)
+        t=rep, drops_in=rep, drops_fire=rep, drops_route=rep, base_key=rep)
     conn_specs = N.Connectivity(spec_h, spec_h, spec_h)
     return state_specs, conn_specs, spec_h, rep
 
@@ -292,6 +306,9 @@ def shard_network(mesh: Mesh, state: N.NetworkState, conn: N.Connectivity,
         delay_rows=sh(spec_h)(state.delay_rows),
         delay_count=sh(spec_h)(state.delay_count),
         t=sh(rep)(state.t), drops_in=sh(rep)(state.drops_in),
-        drops_fire=sh(rep)(state.drops_fire), base_key=sh(rep)(state.base_key))
+        drops_fire=sh(rep)(state.drops_fire),
+        drops_route=(None if state.drops_route is None
+                     else sh(rep)(state.drops_route)),
+        base_key=sh(rep)(state.base_key))
     conn = jax.tree.map(sh(spec_h), conn)
     return state, conn

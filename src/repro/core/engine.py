@@ -879,10 +879,10 @@ class Simulator:
     # -- inspection ----------------------------------------------------------
     def drops(self) -> dict:
         """Cumulative spike-drop counters: {'in': delay-queue overflows,
-        'fire': fired-batch overflows} — the paper's Fig 7 failure currency,
-        surfaced so health monitors need not reach into NetworkState."""
-        return {"in": int(self.state.drops_in),
-                "fire": int(self.state.drops_fire)}
+        'fire': fired-batch overflows, 'route': inter-device fabric
+        overflows} — the paper's Fig 7 failure currency, surfaced so health
+        monitors need not reach into NetworkState."""
+        return N.drop_counters(self.state)
 
     def hcus(self) -> H.HCUState:
         """Batched (H, R, C) view of the canonical flat state."""

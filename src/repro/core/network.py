@@ -92,6 +92,19 @@ class NetworkState(NamedTuple):
     drops_fire: jnp.ndarray  # () int32 — fired-batch overflow drops
     base_key: jnp.ndarray   # PRNG key
     jring: jnp.ndarray | None = None   # (H, C, M) merged-mode spike rings
+    # () int32 — inter-device route-capacity overflow drops (sharded fabric
+    # only; local drivers never touch it). LAST field: pre-PR 7 checkpoints
+    # are one trailing leaf short, which `checkpoint.restore_network` shims.
+    drops_route: jnp.ndarray | None = None
+
+
+def drop_counters(state: NetworkState) -> dict:
+    """Cumulative spike-drop counters as a plain dict — the Fig 7 failure
+    currency ({'in': delay-queue, 'fire': fired-batch, 'route': inter-device
+    fabric overflows}). Tolerates pre-`drops_route` states (counts as 0)."""
+    route = state.drops_route
+    return {"in": int(state.drops_in), "fire": int(state.drops_fire),
+            "route": 0 if route is None else int(route)}
 
 
 def hcu_view(state: NetworkState) -> H.HCUState:
@@ -133,6 +146,7 @@ def init_network(p: BCPNNParams, key, n_hcu: int | None = None,
         t=jnp.asarray(0, jnp.int32),
         drops_in=jnp.asarray(0, jnp.int32),
         drops_fire=jnp.asarray(0, jnp.int32),
+        drops_route=jnp.asarray(0, jnp.int32),
         # private derived key: network_tick donates the state, so base_key
         # must not alias a caller-held (or sibling-network) buffer
         base_key=jax.random.fold_in(key, 0x5EED),

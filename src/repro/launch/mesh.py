@@ -45,6 +45,25 @@ def make_bcpnn_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
     return _make_mesh((n,), ("hcu",), devices=devs)
 
 
+def elastic_device_count(n_hcu: int, n_available: int) -> int:
+    """Degraded-mode mesh size: the largest device count <= the survivors
+    that divides the hypercolumn count (`make_dist_run` shards whole HCUs,
+    h_local = H // ndev — H % ndev must be 0). Always >= 1: a single
+    survivor can host the entire network."""
+    n = max(min(int(n_available), int(n_hcu)), 1)
+    while n_hcu % n:
+        n -= 1
+    return n
+
+
+def make_elastic_mesh(n_hcu: int, devices=None, axis: str = "hcu"):
+    """1-D HCU mesh over (a whole-HCU-divisible prefix of) the surviving
+    devices — the mesh `ElasticRunner` re-lowers onto after a device loss."""
+    devs = list(devices) if devices is not None else jax.devices()
+    n = elastic_device_count(n_hcu, len(devs))
+    return _make_mesh((n,), (axis,), devices=devs[:n])
+
+
 def make_host_mesh(shape=None, axes=("data", "model")):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())

@@ -1,11 +1,12 @@
-from repro.runtime.elastic import (InjectedFailure, RestartableLoop,
-                                   RestartBudgetExceeded, StragglerMonitor,
-                                   remesh)
-from repro.runtime.resilience import (HealthMonitor, ResilientRunner,
-                                      flip_bits, inject_retention_faults)
+from repro.runtime.elastic import (DeviceLoss, InjectedFailure,
+                                   RestartableLoop, RestartBudgetExceeded,
+                                   StragglerMonitor, remesh)
+from repro.runtime.resilience import (ElasticRunner, HealthMonitor,
+                                      ResilientRunner, flip_bits,
+                                      inject_retention_faults)
 
 __all__ = [
-    "HealthMonitor", "InjectedFailure", "ResilientRunner", "RestartableLoop",
-    "RestartBudgetExceeded", "StragglerMonitor", "flip_bits",
-    "inject_retention_faults", "remesh",
+    "DeviceLoss", "ElasticRunner", "HealthMonitor", "InjectedFailure",
+    "ResilientRunner", "RestartableLoop", "RestartBudgetExceeded",
+    "StragglerMonitor", "flip_bits", "inject_retention_faults", "remesh",
 ]

@@ -51,6 +51,20 @@ class InjectedFailure(RuntimeError):
     propagate to the caller instead of being silently retried forever."""
 
 
+class DeviceLoss(InjectedFailure):
+    """A simulated loss of `n_lost` mesh devices (the paper's tile-failure
+    class, §II: an HCU tile is self-contained, so losing one is survivable
+    by re-placing its hypercolumns). Unlike a plain `InjectedFailure` —
+    restore and replay on the SAME mesh — recovering from a DeviceLoss
+    requires a remesh: the survivors get all H hypercolumns
+    (`repro.runtime.resilience.ElasticRunner`). The loss is modeled as the
+    trailing `n_lost` devices of the runner's device list going away."""
+
+    def __init__(self, n_lost: int = 1, message: str | None = None):
+        super().__init__(message or f"injected loss of {n_lost} device(s)")
+        self.n_lost = int(n_lost)
+
+
 class RestartBudgetExceeded(RuntimeError):
     """Raised when a restart loop exhausts its `max_restarts` budget —
     the "crash loop" guard a real scheduler applies before paging a human."""

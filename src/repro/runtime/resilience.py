@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import time
 
 import jax
 import jax.numpy as jnp
@@ -49,8 +50,9 @@ from repro.checkpoint import AsyncCheckpointer, restore_latest
 from repro.core import network as N
 from repro.core import queues
 from repro.core.params import BCPNNParams
-from repro.runtime.elastic import (InjectedFailure, RestartBudgetExceeded,
-                                   StragglerMonitor)
+from repro.runtime.elastic import (DeviceLoss, InjectedFailure,
+                                   RestartBudgetExceeded, StragglerMonitor,
+                                   remesh)
 
 log = logging.getLogger("repro.resilience")
 
@@ -133,11 +135,16 @@ def inject_retention_faults(state, key, rate: float, *,
 class HealthMonitor:
     """Per-chunk drop-budget + realtime-deadline accounting.
 
-    Drops: the engine already counts delay-queue overflows (`drops_in`) and
-    fired-batch overflows (`drops_fire`) — the Fig 7 failure currency. The
-    monitor compares the observed total against the analytic expectation
-    `drop_probability_per_ms(active_queue, in_rate) * ticks * n_hcu`
-    (`repro.core.queues`, EQ1) scaled by `budget_headroom`.
+    Drops: the engine counts three Fig 7 failure classes — delay-queue
+    overflows (`drops_in`), fired-batch overflows (`drops_fire`) and
+    inter-device route-capacity overflows (`drops_route`, sharded fabric
+    only). Each class is budgeted separately against its own analytic
+    expectation (`repro.core.queues`, EQ1, scaled by `budget_headroom`):
+    'in' at the dimensioned Poisson input rate over `n_hcu` queues, and —
+    when the sharded context is known (`n_dev` + `route_cfg`, kept current
+    by `ElasticRunner` across remeshes) — 'fire'/'route' at the per-device
+    fired/fan-out rates against the RouteConfig capacities, so a degraded
+    (shrunken-mesh) run is judged against the budget at its NEW capacity.
 
     Deadlines: a `StragglerMonitor` tracks per-chunk wall time against the
     paper's realtime target (`target_us_per_tick`, default 1 ms/tick).
@@ -150,6 +157,8 @@ class HealthMonitor:
     n_hcu: int | None = None
     target_us_per_tick: float = REALTIME_US_PER_TICK
     budget_headroom: float = 1.0
+    n_dev: int = 1
+    route_cfg: object | None = None    # RouteConfig of the current mesh
     ticks: int = 0
     straggler: StragglerMonitor = dataclasses.field(
         default_factory=lambda: StragglerMonitor(deadline_s=0.0))
@@ -184,14 +193,46 @@ class HealthMonitor:
         return met
 
     # -- verdict -------------------------------------------------------------
+    def set_mesh(self, n_dev: int, route_cfg) -> None:
+        """Refresh the sharded budgeting context after an (elastic) remesh:
+        fire/route budgets from here on are priced at the new capacity."""
+        self.n_dev = int(n_dev)
+        self.route_cfg = route_cfg
+
+    def class_budgets(self) -> dict:
+        """Fig 7 analytic budget PER DROP CLASS, scaled to this run.
+
+        'in'   — expected delay-queue drops over `ticks` ms x `n_hcu` queues
+                 at the dimensioned Poisson input rate (EQ1);
+        'fire' — expected fired-batch overflows: per device the fired count
+                 is ~Poisson(out_rate * h_local) against cap_fire slots;
+        'route'— expected fabric drops: each of the n_dev^2 (src, dst) pairs
+                 carries ~Poisson(out_rate * h_local * fanout / n_dev)
+                 messages against cap_route slots.
+        'fire'/'route' require the sharded context (`route_cfg`); a local
+        run budgets only 'in' — exactly the pre-elastic behaviour."""
+        p = self.p
+        n = self.n_hcu if self.n_hcu is not None else p.n_hcu
+        out = {"in": queues.drop_probability_per_ms(p.active_queue, p.in_rate)
+               * self.ticks * n}
+        rc = self.route_cfg
+        if rc is not None:
+            nd = max(int(self.n_dev), 1)
+            h_local = max(n // nd, 1)
+            lam_fire = max(p.out_rate * h_local, 1e-6)
+            out["fire"] = (queues.drop_probability_per_ms(rc.cap_fire,
+                                                          lam_fire)
+                           * self.ticks * nd)
+            lam_route = max(p.out_rate * h_local * p.fanout / nd, 1e-6)
+            out["route"] = (queues.drop_probability_per_ms(rc.cap_route,
+                                                           lam_route)
+                            * self.ticks * nd * nd)
+        return out
+
     def expected_drops(self) -> float:
         """Fig 7 analytic budget scaled to this run: expected dropped spikes
-        over `ticks` ms across `n_hcu` delay queues at the dimensioned
-        Poisson rate."""
-        n = self.n_hcu if self.n_hcu is not None else self.p.n_hcu
-        return (queues.drop_probability_per_ms(self.p.active_queue,
-                                               self.p.in_rate)
-                * self.ticks * n)
+        over `ticks` ms summed across the budgeted drop classes."""
+        return sum(self.class_budgets().values())
 
     def observed_drops(self) -> dict:
         d0 = self._drops0 or {}
@@ -204,8 +245,15 @@ class HealthMonitor:
         """Structured health verdict. Never raises; see docs/RESILIENCE.md
         for the schema."""
         obs = self.observed_drops()
+        budgets = self.class_budgets()
+        classes = {
+            k: {"observed": obs.get(k, 0),
+                "budget": b * self.budget_headroom,
+                "over": obs.get(k, 0) > b * self.budget_headroom}
+            for k, b in budgets.items()}
         budget = self.expected_drops() * self.budget_headroom
-        over = obs.get("total", 0) > budget
+        over = (obs.get("total", 0) > budget
+                or any(c["over"] for c in classes.values()))
         missed = self.straggler.slow_steps > 0
         status = ("over-budget" if over
                   else "deadline-missed" if missed else "ok")
@@ -215,6 +263,7 @@ class HealthMonitor:
             "ticks": self.ticks,
             "restarts": restarts,
             "drops": obs,
+            "classes": classes,
             "budget": {
                 "queue_size": self.p.active_queue,
                 "lam": self.p.in_rate,
@@ -346,4 +395,207 @@ class ResilientRunner:
                                 self.restarts, self.max_restarts,
                                 int(t_saved))
         self.ckpt.wait()
+        return fired, self.monitor.report(restarts=self.restarts)
+
+
+# ---------------------------------------------------------------------------
+# fault class 4: device loss — degraded-mode sharded runtime
+# ---------------------------------------------------------------------------
+
+class ElasticRunner:
+    """ResilientRunner's crash recovery lifted onto the SHARDED path
+    (`make_dist_run` over an HCU mesh), surviving device LOSS by remeshing.
+
+        sim = Simulator(p, key=0)                       # H hypercolumns
+        runner = ElasticRunner(sim, "ckpt", chunk_ticks=64,
+                               fail_injector=lambda c: 2 if c == 3 else 0)
+        fired, health = runner.run(ext)                 # loses 2 devices
+
+    The run is cut into `chunk_ticks`-tick sharded scan calls with async
+    checkpoints of the FULL logical state every `save_every` chunks.
+    `fail_injector(chunk_index)` may return a truthy int `k` (raised as
+    `DeviceLoss(k)`: the trailing k devices go away for good) or True (a
+    plain `InjectedFailure`: crash, same mesh). Recovery in both cases:
+    restore the newest verified checkpoint (`repro.checkpoint` — checksum
+    fall-back included), rebuild the largest whole-HCU-divisible mesh over
+    the survivors (`launch.mesh.make_elastic_mesh`), re-derive `h_local`
+    and the `RouteConfig` for the new device count, re-lower the dist run
+    (cached per device count), re-place state + connectivity via `remesh`,
+    and replay from the restored tick.
+
+    The replayed trajectory is BITWISE the uninterrupted one because the
+    sharded tick is mesh-shape-invariant under the default
+    `lossless_route_config` dimensioning: per-HCU RNG folds GLOBAL ids
+    (`gid_base`), the exchange never drops (capacity covers the worst
+    case), and padded route slots carry no trajectory-relevant bits —
+    pinned by tests/test_elastic.py for 1/2/4 devices, both backends,
+    restore-across-mesh-shape included. Passing a lossy `route_config`
+    (e.g. `default_route_config`) trades that invariance for Fig 7-priced
+    fabric drops — `HealthMonitor.set_mesh` keeps the budget honest at
+    each new capacity.
+
+    `rescale(chunk_index) -> int | None` additionally models GRACEFUL
+    elasticity: a device-count target applied at the chunk boundary as pure
+    data movement (remesh of the live state, no restore, no replay) —
+    shrink onto fewer devices and regrow later, trajectory unchanged.
+
+    Telemetry: `recoveries` records one dict per failure (kind, restored
+    tick, surviving device count, recovery wall seconds) — the source of
+    the BENCH_resilience.json device-loss scenario.
+    """
+
+    def __init__(self, sim, ckpt_dir: str, *, chunk_ticks: int = 64,
+                 save_every: int = 1, keep_last: int = 3,
+                 fail_injector=None, rescale=None, max_restarts: int = 8,
+                 devices=None, axis: str = "hcu", route_config=None,
+                 monitor: HealthMonitor | None = None):
+        if sim.merged:
+            raise NotImplementedError(
+                "elastic runtime: merged mode has no sharded path "
+                "(Simulator.run_sharded)")
+        self.sim = sim
+        self.ckpt = AsyncCheckpointer(ckpt_dir, keep_last=keep_last)
+        self.ckpt_dir = ckpt_dir
+        self.chunk_ticks = int(chunk_ticks)
+        self.save_every = int(save_every)
+        self.fail_injector = fail_injector
+        self.rescale = rescale
+        self.max_restarts = int(max_restarts)
+        self.axis = axis
+        self.devices = (list(devices) if devices is not None
+                        else list(jax.devices()))
+        self.route_config = route_config   # callable(p, h_local, ndev) -> rc
+        self.monitor = monitor if monitor is not None else HealthMonitor(
+            sim.p, n_hcu=sim.n_hcu)
+        self.restarts = 0
+        self.recoveries: list[dict] = []
+        # connectivity is static: keep one host master, re-place per mesh
+        self._conn_host = _host_copy(sim.conn)
+        self._lowered: dict[int, tuple] = {}
+
+    # -- mesh / lowering ----------------------------------------------------
+    def _usable(self, limit: int | None = None) -> int:
+        from repro.launch.mesh import elastic_device_count
+        n = len(self.devices) if limit is None else min(len(self.devices),
+                                                        int(limit))
+        return elastic_device_count(self.sim.n_hcu, n)
+
+    def _lower(self, ndev: int):
+        """(mesh, rc, compiled run, state/conn specs) for `ndev` devices.
+
+        Cached per device count: losses take the TRAILING devices, so the
+        ndev-prefix mesh (and its compiled executable) stays valid across
+        later shrinks."""
+        if ndev not in self._lowered:
+            from repro.core import distributed as DD
+            from repro.launch.mesh import make_elastic_mesh
+            sim = self.sim
+            mesh = make_elastic_mesh(sim.n_hcu, self.devices[:ndev],
+                                     self.axis)
+            h_local = sim.n_hcu // ndev
+            rc = (self.route_config(sim.p, h_local, ndev)
+                  if self.route_config is not None
+                  else DD.lossless_route_config(sim.p, h_local))
+            fn = DD.make_dist_run(mesh, sim.p, rc, axis=self.axis,
+                                  eager=sim.eager, backend=sim.kernel,
+                                  worklist=sim.worklist, fused=sim.fused,
+                                  fused_cols=sim.fused_cols)
+            state_specs, conn_specs, _, _ = DD._shard_specs((self.axis,))
+            self._lowered[ndev] = (mesh, rc, fn, state_specs, conn_specs)
+        return self._lowered[ndev]
+
+    def _place(self, host_state, ndev: int):
+        """Remap all H hypercolumns onto the ndev-device mesh."""
+        mesh, rc, fn, state_specs, conn_specs = self._lower(ndev)
+        state = remesh(host_state, mesh, state_specs)
+        conn = remesh(self._conn_host, mesh, conn_specs)
+        self.monitor.set_mesh(ndev, rc)
+        return state, conn, fn
+
+    # -- driver -------------------------------------------------------------
+    def run(self, ext, n_ticks: int | None = None):
+        """Run `ext` (staged (T, H, A_ext) tensor, iterable of frames, or
+        callable ext_fn(t) with `n_ticks`) to completion through crashes,
+        device losses, and graceful rescales. Returns (fired history (T, H)
+        int32, health report dict)."""
+        sim = self.sim
+        t0 = int(sim.state.t)
+        if callable(ext) or not hasattr(ext, "ndim"):
+            ext = N.stage_external(ext, n_ticks, t0=t0)
+        ext = np.asarray(ext)
+        if n_ticks is not None:
+            ext = ext[:n_ticks]
+        T = int(ext.shape[0])
+        fired = np.full((T, sim.n_hcu), -1, np.int32)
+        initial = _host_copy(sim.state)
+        ndev = self._usable()
+        state, conn, fn = self._place(sim.state, ndev)
+        self.monitor.begin(N.drop_counters(state))
+        done, chunks_done = 0, 0
+        while done < T:
+            step = min(self.chunk_ticks, T - done)
+            chunk = done // self.chunk_ticks
+            try:
+                if self.rescale is not None:
+                    want = self.rescale(chunk)
+                    if want and self._usable(want) != ndev:
+                        # graceful elasticity: pure data movement at a chunk
+                        # boundary — no restore, no replay, bits unchanged
+                        ndev = self._usable(want)
+                        state, conn, fn = self._place(_host_copy(state),
+                                                      ndev)
+                        log.info("rescaled onto %d device(s) at tick %d",
+                                 ndev, t0 + done)
+                if self.fail_injector is not None:
+                    lost = self.fail_injector(chunk)
+                    if lost:
+                        if lost is True:
+                            raise InjectedFailure(
+                                f"injected crash at tick {t0 + done}")
+                        raise DeviceLoss(int(lost))
+                self.monitor.chunk_start(step)
+                state, f = fn(state, conn, ext[done:done + step])
+                fired[done:done + step] = np.asarray(f)
+                done += step
+                chunks_done += 1
+                self.monitor.chunk_end(step, N.drop_counters(state))
+                if chunks_done % self.save_every == 0:
+                    # full logical arrays — restorable onto ANY future mesh
+                    self.ckpt.save_async(t0 + done, state)
+            except InjectedFailure as e:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise RestartBudgetExceeded(
+                        f"{self.restarts - 1} restarts exhausted the budget "
+                        f"of {self.max_restarts}") from e
+                rec_start = time.monotonic()
+                if isinstance(e, DeviceLoss):
+                    if e.n_lost >= len(self.devices):
+                        raise RestartBudgetExceeded(
+                            "all devices lost — nothing to remesh onto"
+                        ) from e
+                    del self.devices[len(self.devices) - e.n_lost:]
+                self.ckpt.wait()
+                restored, t_saved = restore_latest(self.ckpt_dir, initial)
+                if restored is None:
+                    host, done = initial, 0
+                else:
+                    host, done = restored, int(t_saved) - t0
+                ndev = self._usable()
+                state, conn, fn = self._place(host, ndev)
+                rec = {"kind": ("device-loss" if isinstance(e, DeviceLoss)
+                                else "crash"),
+                       "restored_tick": t0 + done,
+                       "devices": ndev,
+                       "recovery_s": time.monotonic() - rec_start}
+                self.recoveries.append(rec)
+                log.warning("restart %d/%d (%s): restored t=%d onto %d "
+                            "device(s) in %.3f s", self.restarts,
+                            self.max_restarts, rec["kind"], t0 + done, ndev,
+                            rec["recovery_s"])
+        self.ckpt.wait()
+        # hand the (sharded) final state back to the facade; its dist cache
+        # is stale for this placement
+        sim.state = state
+        sim._dist_cache = None
         return fired, self.monitor.report(restarts=self.restarts)

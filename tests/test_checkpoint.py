@@ -6,8 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import (AsyncCheckpointer, latest_step, restore,
-                              restore_latest, save)
+from repro.checkpoint import (AsyncCheckpointer, CheckpointCorruption,
+                              latest_step, restore, restore_latest,
+                              restore_network, save)
 from repro.runtime import RestartableLoop, StragglerMonitor, remesh
 
 
@@ -149,13 +150,119 @@ def test_restore_latest_empty_and_missing_dir(tmp_path):
 
 
 def test_remesh_roundtrip():
-    from jax.sharding import PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.mesh import make_host_mesh
     mesh = make_host_mesh(shape=(1, 1))
     t = _tree()
     out = remesh(t, mesh, P())
     for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
         np.testing.assert_array_equal(a, b)
+        # values bitwise AND actually re-placed under the target mesh
+        assert b.sharding == NamedSharding(mesh, P())
+
+
+# -- manifest checksums: torn/bit-rotted leaves are detected and survivable -
+
+def _corrupt_leaf(tmp_path, step, leaf=0):
+    f = tmp_path / f"step_{step}" / f"leaf_{leaf}.npy"
+    raw = bytearray(f.read_bytes())
+    raw[-1] ^= 0xFF                  # flip bits in the data, not the header
+    f.write_bytes(bytes(raw))
+
+
+def test_manifest_has_checksums(tmp_path):
+    import json as _json
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    meta = _json.loads((tmp_path / "step_1" / "manifest.json").read_text())
+    assert len(meta["checksums"]) == meta["n_leaves"]
+    assert all(isinstance(c, str) and len(c) == 8 for c in meta["checksums"])
+
+
+def test_restore_detects_corruption(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    _corrupt_leaf(tmp_path, 1)
+    with pytest.raises(CheckpointCorruption):
+        restore(str(tmp_path), 1, t)
+
+
+def test_restore_latest_falls_back_and_prunes_corrupt(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    save(str(tmp_path), 2, t)
+    _corrupt_leaf(tmp_path, 2)
+    r, s = restore_latest(str(tmp_path), t)
+    assert s == 1 and r is not None
+    # the corrupt dir was pruned so the next scan can't trip on it again
+    assert not (tmp_path / "step_2").exists()
+    # forensics mode: corruption re-raised, dir left in place
+    save(str(tmp_path), 3, t)
+    _corrupt_leaf(tmp_path, 3)
+    with pytest.raises(CheckpointCorruption):
+        restore_latest(str(tmp_path), t, prune_corrupt=False)
+    assert (tmp_path / "step_3").exists()
+
+
+def test_restore_latest_all_corrupt_returns_none(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    _corrupt_leaf(tmp_path, 1)
+    assert restore_latest(str(tmp_path), t) == (None, None)
+
+
+def test_checksumless_manifest_still_restores(tmp_path):
+    """Pre-checksum checkpoints (no 'checksums' key) load unverified."""
+    import json as _json
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    mf = tmp_path / "step_1" / "manifest.json"
+    meta = _json.loads(mf.read_text())
+    del meta["checksums"]
+    mf.write_text(_json.dumps(meta))
+    _corrupt_leaf(tmp_path, 1, leaf=3)   # undetectable without checksums
+    r, s = restore_latest(str(tmp_path), t)
+    assert s == 1 and r is not None
+
+
+def test_async_save_error_reraised(tmp_path):
+    """A failed background save must surface on wait() / next save_async,
+    not vanish — otherwise crash recovery silently degrades to an older
+    checkpoint."""
+    target = tmp_path / "ckpt"
+    target.write_text("a file where the checkpoint dir should go")
+    ck = AsyncCheckpointer(str(target))
+    ck.save_async(1, _tree())
+    with pytest.raises(OSError):
+        ck.wait()
+    ck.wait()                            # exception is consumed, not sticky
+    ck2 = AsyncCheckpointer(str(target))
+    ck2.save_async(1, _tree())
+    with pytest.raises(OSError):
+        ck2.save_async(2, _tree())       # surfaces on the NEXT save too
+
+
+def test_restore_network_shims_missing_drops_route(tmp_path):
+    """Pre-PR 7 NetworkState checkpoints are one trailing leaf short
+    (drops_route was appended last); restore_network re-initializes the
+    missing counter to 0 and restores everything else bitwise."""
+    from repro.core import init_network, test_scale
+    p = test_scale(n_hcu=2, rows=32, cols=16)
+    st = init_network(p, jax.random.PRNGKey(0))
+    st = st._replace(drops_in=jnp.asarray(5, jnp.int32))
+    old = st._replace(drops_route=None)          # the pre-PR 7 leaf set
+    save(str(tmp_path), 4, old)
+    r = restore_network(str(tmp_path), 4, st)
+    assert int(np.asarray(r.drops_route)) == 0
+    assert int(np.asarray(r.drops_in)) == 5
+    for a, b in zip(jax.tree.leaves(old), jax.tree.leaves(
+            r._replace(drops_route=None))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # new-format checkpoints restore the counter verbatim
+    st2 = st._replace(drops_route=jnp.asarray(9, jnp.int32))
+    save(str(tmp_path), 5, st2)
+    r2 = restore_network(str(tmp_path), 5, st)
+    assert int(np.asarray(r2.drops_route)) == 9
 
 
 def test_bcpnn_state_checkpoint_roundtrip(tmp_path):

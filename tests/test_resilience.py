@@ -263,8 +263,40 @@ def test_health_monitor_deadline_missed():
     assert mon.report()["status"] == "over-budget"
 
 
+def test_health_monitor_per_class_budgets():
+    from repro.core.distributed import RouteConfig
+    mon = HealthMonitor(_p(), target_us_per_tick=1e9)
+    mon.set_mesh(2, RouteConfig(cap_fire=2, cap_route=32))
+    mon.begin({"in": 0, "fire": 0, "route": 0})
+    mon.chunk_start(10)
+    mon.chunk_end(10, {"in": 0, "fire": 0, "route": 0})
+    b = mon.class_budgets()
+    assert set(b) == {"in", "fire", "route"}
+    assert all(v >= 0.0 for v in b.values())
+    rep = mon.report()
+    assert rep["status"] == "ok"
+    assert set(rep["classes"]) == {"in", "fire", "route"}
+    assert rep["budget"]["expected_drops_run"] == pytest.approx(
+        sum(b.values()))
+    # a single class blowing ITS budget flips the verdict
+    mon.chunk_start(10)
+    mon.chunk_end(10, {"in": 0, "fire": 0, "route": 10_000_000})
+    rep = mon.report()
+    assert rep["status"] == "over-budget"
+    assert rep["classes"]["route"]["over"] is True
+    assert rep["classes"]["in"]["over"] is False
+
+
+def test_health_monitor_local_runs_budget_in_only():
+    mon = HealthMonitor(_p(), target_us_per_tick=1e9)
+    mon.begin({"in": 0, "fire": 0, "route": 0})
+    mon.chunk_start(10)
+    mon.chunk_end(10, {"in": 0, "fire": 0, "route": 0})
+    assert set(mon.class_budgets()) == {"in"}
+
+
 def test_simulator_drops_accessor():
     sim = Simulator(_p(), key=0)
     d = sim.drops()
-    assert d == {"in": 0, "fire": 0}
+    assert d == {"in": 0, "fire": 0, "route": 0}
     assert isinstance(d["in"], int)
