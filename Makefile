@@ -45,17 +45,26 @@ check-pycache:
 
 # the exact CI sequence (tests job + bench-gate job + resilience job),
 # runnable locally so a gate failure can be reproduced without pushing:
-# pycache guard -> tier-1 tests -> fast benchmarks -> tick-loop regression
-# gate vs the COMMITTED JSON (taken from HEAD, not the working tree, so
-# repeated runs cannot compound a slow drift past the gate; note the fresh
-# measurement is left in BENCH_tick_loop.json afterwards, same as `make
-# bench-json`) -> per-phase ablation artifact -> resilience telemetry +
-# gate (the fault-injection tests already ran inside `test`)
+# pycache guard -> tier-1 tests (incl. the flat-vs-blocked layout A/B
+# fixture tests) -> fast benchmarks -> tick-loop regression gate vs the
+# COMMITTED JSON (taken from HEAD, not the working tree, so repeated runs
+# cannot compound a slow drift past the gate; note the fresh measurement is
+# left in BENCH_tick_loop.json afterwards, same as `make bench-json`) ->
+# per-phase ablation artifact + the human_col column-phase gate (the phase
+# the PR 8 column-blocked layout targets) -> the Fig 10 layout benchmark
+# (BENCH_layout.json: paper DRAM model + tile models + measured CPU
+# flat/blocked A/B) -> resilience telemetry + gate (the fault-injection
+# tests already ran inside `test`)
 ci-local: check-pycache test bench
 	git show HEAD:BENCH_tick_loop.json > /tmp/BENCH_committed.json
+	git show HEAD:BENCH_phase_breakdown.json > /tmp/BENCH_phase_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast --json --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
 		--committed /tmp/BENCH_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.profile_phases --legacy-cpu
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		--committed /tmp/BENCH_committed.json \
+		--phase-committed /tmp/BENCH_phase_committed.json
+	PYTHONPATH=src $(PY) -m benchmarks.fig10_rowmerge --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.resilience --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.check_resilience

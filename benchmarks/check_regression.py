@@ -1,14 +1,23 @@
-"""Tick-loop benchmark regression gate (shared by CI and `make ci-local`).
+"""Benchmark regression gates (shared by CI and `make ci-local`).
 
   PYTHONPATH=src python -m benchmarks.check_regression \
-      --committed /tmp/BENCH_committed.json [--fresh BENCH_tick_loop.json]
+      --committed /tmp/BENCH_committed.json [--fresh BENCH_tick_loop.json] \
+      [--phase-committed /tmp/BENCH_phase_committed.json \
+       --phase-fresh BENCH_phase_breakdown.json]
 
-Compares a freshly measured BENCH_tick_loop.json against the committed one
-and fails (exit 1) if any gated size's `scan_us_per_tick` regresses beyond
-the headroom factor. The headroom (1.25x) absorbs CI-runner noise while
-still catching the step-function regressions that matter (a lost in-place
-alias or an accidental full-plane copy is 2x+, never 1.1x). See
-docs/BENCHMARKING.md.
+Two gates, both with the same headroom philosophy — 1.25x absorbs CI-runner
+noise while still catching the step-function regressions that matter (a
+lost in-place alias or an accidental full-plane copy is 2x+, never 1.1x):
+
+  * tick loop — any gated size's `scan_us_per_tick` in BENCH_tick_loop.json
+    vs the committed baseline;
+  * column phase (optional, when --phase-committed is given) — the
+    human_col `column_update` scan-context ablation delta in
+    BENCH_phase_breakdown.json. This is the phase the PR 8 column-blocked
+    layout targets, gated so a later change can't silently hand the
+    Row-Merge win back (docs/BENCHMARKING.md).
+
+Fails (exit 1) on any regression beyond the headroom factor.
 """
 from __future__ import annotations
 
@@ -18,15 +27,22 @@ import sys
 
 GATED_SIZES = ("default", "rodent16", "human_col")
 METRIC = "scan_us_per_tick"
+# (size, ablated phase) pairs gated when a phase baseline is supplied
+GATED_PHASES = (("human_col", "column_update"),)
 HEADROOM = 1.25
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--committed", required=True,
-                    help="path to the committed (baseline) JSON")
+                    help="path to the committed (baseline) tick-loop JSON")
     ap.add_argument("--fresh", default="BENCH_tick_loop.json",
-                    help="path to the freshly measured JSON")
+                    help="path to the freshly measured tick-loop JSON")
+    ap.add_argument("--phase-committed", default=None,
+                    help="committed (baseline) phase-breakdown JSON; "
+                         "enables the column-phase gate")
+    ap.add_argument("--phase-fresh", default="BENCH_phase_breakdown.json",
+                    help="freshly measured phase-breakdown JSON")
     ap.add_argument("--headroom", type=float, default=HEADROOM)
     args = ap.parse_args()
 
@@ -40,6 +56,21 @@ def main() -> None:
         if new > old * args.headroom:
             failures.append(f"{name}/{METRIC} {new:.1f} us exceeds committed "
                             f"{old:.1f} us by >{args.headroom:.2f}x")
+
+    if args.phase_committed:
+        pc = json.load(open(args.phase_committed))
+        pf = json.load(open(args.phase_fresh))
+        for name, phase in GATED_PHASES:
+            old = pc[name]["scan_ablation_us"][phase]
+            new = pf[name]["scan_ablation_us"][phase]
+            print(f"{name}/ablation/{phase}: committed {old:.1f} us, fresh "
+                  f"{new:.1f} us ({new / old:.2f}x, "
+                  f"limit {args.headroom:.2f}x)")
+            if new > old * args.headroom:
+                failures.append(
+                    f"{name}/ablation/{phase} {new:.1f} us exceeds committed "
+                    f"{old:.1f} us by >{args.headroom:.2f}x")
+
     if failures:
         sys.exit("perf regression: " + "; ".join(failures))
 

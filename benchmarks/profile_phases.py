@@ -122,6 +122,8 @@ def main() -> None:
             wl = isinstance(self.base, E.WorklistBackend)
             kernel = self.base.kernel
 
+            lay = getattr(self.base, "layout", None)
+
             if self.skip == "plane_update":
                 # whole block skipped: its delta vs `full` is the plane
                 # update's TOTAL scan cost, including loop-interaction
@@ -140,7 +142,7 @@ def main() -> None:
             elif wl:
                 hcus, w_rows, c = E.worklist_lazy_rows(
                     state.hcus, rows, t, p, kernel=kernel,
-                    fused=self.base.fused)
+                    fused=self.base.fused, layout=lay)
                 counts = c["counts"]
             else:
                 hb, w_rows, counts, _ = jax.vmap(
@@ -161,7 +163,8 @@ def main() -> None:
                 col = lambda hc: hc
             elif wl:
                 col = E.worklist_col_dispatch(
-                    kernel, self.base.fused_cols, h_idx, j_idx, t, p, n)
+                    kernel, self.base.fused_cols, h_idx, j_idx, t, p, n,
+                    layout=lay)
             else:
                 col = lambda hc: E.column_updates_batched(hc, h_idx, j_idx,
                                                           t, p,
@@ -173,9 +176,9 @@ def main() -> None:
                 hcus = col(hcus)
             return state._replace(hcus=hcus), fired, h_idx, j_idx, n_drop
 
-    def scan_ablation(p, conn, ext, key):
+    def scan_ablation(p, conn, ext, key, layout=None):
         T = ext.shape[0]
-        base = E.select_backend(p)
+        base = E.select_backend(p, layout=layout)
         noop_route = lambda state, dh, dr, dly, valid, p_, n_: state
 
         def make_run(be, route):
@@ -198,7 +201,7 @@ def main() -> None:
                                      None),
         }
         for fn in variants.values():              # compile + warm all first
-            s, f = fn(N.init_network(p, key), ext)
+            s, f = fn(N.init_network(p, key, layout=layout), ext)
             jax.block_until_ready(f)
         # interleave rounds across variants and keep the MIN round: this
         # benchmark must survive noisy shared CI runners, and a burst of
@@ -207,7 +210,7 @@ def main() -> None:
         meas = {k: [] for k in variants}
         for _ in range(args.repeats):
             for name, fn in variants.items():
-                state = N.init_network(p, key)
+                state = N.init_network(p, key, layout=layout)
                 t0 = time.perf_counter()
                 s, f = fn(state, ext)
                 jax.block_until_ready(f)
@@ -217,9 +220,9 @@ def main() -> None:
         return full, {k: full - v for k, v in us.items()}
 
     # ---------------- isolated phases (the PR 3 breakdown) -----------------
-    def profile_size(name, p):
+    def profile_size(name, p, layout=None):
         key = jax.random.PRNGKey(0)
-        state = N.init_network(p, key)
+        state = N.init_network(p, key, layout=layout)
         n = p.n_hcu
         t = jnp.asarray(1, jnp.int32)
         rng = np.random.default_rng(0)
@@ -236,7 +239,7 @@ def main() -> None:
                             jnp.int32)
         j_idx = jnp.asarray(rng.integers(0, p.cols, cap), jnp.int32)
         worklist = H.use_worklist(p)
-        be = E.select_backend(p)
+        be = E.select_backend(p, layout=layout)
 
         # --- queue: consume + full-fanout enqueue ---------------------------
         dest_h = jnp.asarray(rng.integers(0, n, cap * p.fanout), jnp.int32)
@@ -256,7 +259,8 @@ def main() -> None:
         if worklist:
             @jax.jit
             def row_phase(hcus):
-                hcus, w_rows, c = E.worklist_lazy_rows(hcus, rows, t, p)
+                hcus, w_rows, c = E.worklist_lazy_rows(hcus, rows, t, p,
+                                                       layout=layout)
                 return hcus.zij, w_rows, c["counts"]
         else:
             @jax.jit
@@ -279,7 +283,8 @@ def main() -> None:
         if worklist:
             @jax.jit
             def col_phase(hcus):
-                return E._column_worklist(hcus, h_idx, j_idx, t, p).zij
+                return E._column_worklist(hcus, h_idx, j_idx, t, p,
+                                          layout=layout).zij
         else:
             @jax.jit
             def col_phase(hcus):
@@ -306,19 +311,28 @@ def main() -> None:
         # --- scan-context ablation ------------------------------------------
         ext_t = _ext_tensor(p, args.ticks)
         scan_full, ablation = scan_ablation(
-            p, conn, ext_t, jax.random.PRNGKey(0))
+            p, conn, ext_t, jax.random.PRNGKey(0), layout=layout)
 
         return {
             "backend": type(be).__name__,
+            "layout": L.layout_tag(layout),
             "n_hcu": p.n_hcu, "rows": p.rows, "cols": p.cols,
             "scan_us_per_tick": scan_full,
             "scan_ablation_us": ablation,
             "isolated_us": isolated,
         }
 
+    # human_col is profiled twice — canonical flat AND the Row-Merge
+    # column-blocked CPU tile — in the same process, so the committed JSON
+    # carries a same-machine-window layout A/B at the size the paper's Fig
+    # 9-10 DRAM argument is about (the column phase is the blocked layout's
+    # target; see benchmarks/fig10_rowmerge.py for the model-side numbers).
+    sizes = [(DEFAULT[0], DEFAULT[1], None), (RODENT[0], RODENT[1], None),
+             (HUMAN_COL[0], HUMAN_COL[1], None),
+             ("human_col_blocked", HUMAN_COL[1], L.cpu_blocked(HUMAN_COL[1]))]
     results = {}
-    for name, p in (DEFAULT, RODENT, HUMAN_COL):
-        results[name] = profile_size(name, p)
+    for name, p, lay in sizes:
+        results[name] = profile_size(name, p, layout=lay)
 
     out = pathlib.Path(__file__).resolve().parent.parent \
         / "BENCH_phase_breakdown.json"

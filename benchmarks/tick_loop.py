@@ -20,6 +20,10 @@ Three sizes are measured (CPU `ref` backend):
     paper's EQ2 budget is written about; it tracks that the worklist tick
     stays O(touched rows) when the planes are 25 MB/HCU. Gated in CI since
     PR 4.
+  * human_col_blocked — the same slab stored under the Row-Merge
+    column-blocked plane layout (PR 8, `layout="blocked"`): the end-to-end
+    per-tick layout A/B. Not regression-gated; the targeted column-phase
+    gate runs on the BENCH_phase_breakdown.json ablation.
 
 All sizes are driven through the `Simulator` facade (scan runtime
 `sim.run` vs host loop `sim.run_host`).
@@ -54,6 +58,12 @@ RODENT = ("rodent16", BCPNNParams(n_hcu=16, rows=1200, cols=70, fanout=16,
 HUMAN_COL = ("human_col", BCPNNParams(n_hcu=4, rows=HUMAN_CFG.rows,
                                       cols=HUMAN_CFG.cols, fanout=4,
                                       active_queue=16, max_delay=16))
+# the same slab under the PR 8 Row-Merge column-blocked plane layout
+# (layout="blocked", the CPU tile) — an end-to-end per-tick A/B against
+# human_col in the same committed JSON; NOT regression-gated (the flat
+# entries stay the gated baseline), the column-phase gate lives on the
+# BENCH_phase_breakdown.json ablation instead
+HUMAN_COL_BLOCKED = ("human_col_blocked", HUMAN_COL[1], "blocked")
 
 N_SCAN = 128         # ticks per measured scan call (one compiled chunk)
 N_HOST = 32          # ticks per measured host-loop pass
@@ -79,9 +89,9 @@ def _ext_tensor(p, T, width=8, lam=4.0, seed=0):
     return jnp.asarray(out)
 
 
-def _measure(p, backend="ref"):
+def _measure(p, backend="ref", layout=None):
     """Returns (host_us_per_tick, scan_us_per_tick), min over REPEATS."""
-    sim = Simulator(p, key=0, kernel=backend, chunk=N_SCAN)
+    sim = Simulator(p, key=0, kernel=backend, chunk=N_SCAN, layout=layout)
     ext = _ext_tensor(p, N_SCAN)
 
     # warm both compilation caches
@@ -106,12 +116,14 @@ def _measure(p, backend="ref"):
     return min(host_t) * 1e6, min(scan_t) * 1e6
 
 
-def measure_sizes(sizes=(DEFAULT, RODENT, HUMAN_COL)):
+def measure_sizes(sizes=(DEFAULT, RODENT, HUMAN_COL, HUMAN_COL_BLOCKED)):
     """Returns {name: {host_us_per_tick, scan_us_per_tick, host_ticks_per_sec,
-    scan_ticks_per_sec, speedup, n_hcu, rows, cols}}."""
+    scan_ticks_per_sec, speedup, n_hcu, rows, cols}}. A size tuple may carry
+    a third element: the plane layout to run under (see HUMAN_COL_BLOCKED)."""
     results = {}
-    for name, p in sizes:
-        host_us, scan_us = _measure(p)
+    for name, p, *rest in sizes:
+        layout = rest[0] if rest else None
+        host_us, scan_us = _measure(p, layout=layout)
         results[name] = {
             "n_hcu": p.n_hcu, "rows": p.rows, "cols": p.cols,
             "host_us_per_tick": host_us, "scan_us_per_tick": scan_us,

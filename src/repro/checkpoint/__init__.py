@@ -1,9 +1,9 @@
 from repro.checkpoint.checkpointer import (AsyncCheckpointer,
                                            CheckpointCorruption, latest_step,
-                                           migrate_flat_planes, restore,
-                                           restore_latest, restore_network,
-                                           save)
+                                           manifest, migrate_flat_planes,
+                                           restore, restore_latest,
+                                           restore_network, save)
 
 __all__ = ["AsyncCheckpointer", "CheckpointCorruption", "latest_step",
-           "migrate_flat_planes", "restore", "restore_latest",
+           "manifest", "migrate_flat_planes", "restore", "restore_latest",
            "restore_network", "save"]

@@ -78,7 +78,12 @@ def _sweep_stale_tmp(ckpt_dir: str):
             shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
-def save(ckpt_dir: str, step: int, tree, keep_last: int = 3) -> str:
+def save(ckpt_dir: str, step: int, tree, keep_last: int = 3,
+         extra_meta: dict | None = None) -> str:
+    """``extra_meta`` (optional, JSON-serializable) is merged into the
+    manifest — e.g. the Simulator records the plane-layout tag so a restore
+    under a different layout knows to convert. Reserved manifest keys
+    (step/n_leaves/checksums/treedef/time) win over extra_meta."""
     os.makedirs(ckpt_dir, exist_ok=True)
     _sweep_stale_tmp(ckpt_dir)
     final = os.path.join(ckpt_dir, f"step_{step}")
@@ -90,8 +95,10 @@ def save(ckpt_dir: str, step: int, tree, keep_last: int = 3) -> str:
         arr = np.asarray(leaf)
         np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
         checksums.append(_leaf_checksum(arr))
-    meta = {"step": step, "n_leaves": len(leaves), "checksums": checksums,
-            "treedef": str(treedef), "time": time.time()}
+    meta = dict(extra_meta or {})
+    meta.update({"step": step, "n_leaves": len(leaves),
+                 "checksums": checksums, "treedef": str(treedef),
+                 "time": time.time()})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(meta, f)
     if os.path.exists(final):
@@ -194,6 +201,13 @@ def _manifest(ckpt_dir: str, step: int) -> dict | None:
             return json.load(f)
     except (OSError, ValueError):
         return None
+
+
+def manifest(ckpt_dir: str, step: int) -> dict | None:
+    """Public manifest reader: the step's metadata dict (including any
+    extra_meta recorded at save time, e.g. the plane-layout tag), or None
+    if the step has no parseable manifest."""
+    return _manifest(ckpt_dir, step)
 
 
 def restore(ckpt_dir: str, step: int, template, migrate=None):

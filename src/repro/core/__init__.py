@@ -32,7 +32,10 @@ Public API:
   NetworkState, init_network, make_connectivity, network_tick, hcu_view
   network_run / stage_external — scan-compiled tick runtime (run = host loop)
   traces — closed-form lazy ZEP trace algebra
-  RowMergeLayout — BCPNN-specific synaptic data organization
+  RowMergeLayout / FlatLayout / BlockedLayout — synaptic data organization
+             (plane storage order is pluggable: `layout=` on Simulator and
+             the tick drivers selects flat row-major or Row-Merge
+             column-blocked tiles; trajectories are layout-invariant)
   worklist — flat-plane in-place worklist update primitives (O(touched rows)
              per tick at rodent/human scales; `worklist=` on the tick
              drivers forces the backend, `hcu.use_worklist` is the guard)
@@ -45,7 +48,8 @@ from repro.core.network import (NetworkState, Connectivity, init_network,
                                 make_connectivity, network_tick, network_run,
                                 stage_external, run, enqueue_spikes,
                                 hcu_view, select_fired)
-from repro.core.layout import RowMergeLayout, batched_state, flat_state
+from repro.core.layout import (RowMergeLayout, FlatLayout, BlockedLayout,
+                               batched_state, flat_state)
 from repro.core.engine import (Simulator, TickBackend, DenseBackend,
                                WorklistBackend, select_backend,
                                column_updates_batched)
@@ -60,6 +64,6 @@ __all__ = [
     "NetworkState", "Connectivity", "init_network", "make_connectivity",
     "network_tick", "network_run", "stage_external", "run",
     "enqueue_spikes", "hcu_view", "select_fired", "column_updates_batched",
-    "RowMergeLayout", "batched_state", "flat_state", "traces", "queues",
-    "worklist",
+    "RowMergeLayout", "FlatLayout", "BlockedLayout", "batched_state",
+    "flat_state", "traces", "queues", "worklist",
 ]

@@ -155,13 +155,17 @@ def column_updates_batched(hcus: H.HCUState, h_idx, j_idx, now,
 
 
 def _column_batched_on_flat(hcus: H.HCUState, h_idx, j_idx, now,
-                            p: BCPNNParams, backend, n: int) -> H.HCUState:
+                            p: BCPNNParams, backend, n: int,
+                            layout=None) -> H.HCUState:
     """Run `column_updates_batched` against canonical flat planes through a
     zero-copy batched view (used by the worklist path's Pallas branch, whose
-    column step has always been the batched kernel)."""
-    hb = column_updates_batched(L.batched_state(hcus, n), h_idx, j_idx, now,
-                                p, backend=backend)
-    return L.flat_state(hb)
+    column step has always been the batched kernel). Under a blocked layout
+    the planes round-trip through the canonical flat form (pure data
+    movement — bitwise) so the batched graph itself is unchanged."""
+    hb = column_updates_batched(
+        L.batched_state(L.load_hcus(hcus, layout), n), h_idx, j_idx, now,
+        p, backend=backend)
+    return L.store_hcus(L.flat_state(hb), layout)
 
 
 def _row_worklist_common(hcus: H.HCUState, rows, t, p: BCPNNParams):
@@ -227,7 +231,7 @@ def _col_worklist_prologue(hcus: H.HCUState, h_idx, j_idx, now,
 
 
 def _column_worklist(hcus: H.HCUState, h_idx, j_idx, now, p: BCPNNParams,
-                     backend=None, fused: bool = True):
+                     backend=None, fused: bool = True, layout=None):
     """Worklist twin of `column_updates_batched`: same compacted fired batch,
     same per-cell compute graph (bitwise-identical values), but the (R, 1)
     column blocks are read and rewritten in place through dynamic slices on
@@ -266,11 +270,11 @@ def _column_worklist(hcus: H.HCUState, h_idx, j_idx, now, p: BCPNNParams,
 
         vals = WL.fused_col_stage_compute(
             (flats[0], flats[1], flats[2], flats[4]),
-            h_idx, j_idx, n_fired, R, col_math)
+            h_idx, j_idx, n_fired, R, col_math, layout=layout)
     else:
         zb, eb, pb, tb = WL.read_cols(
             (flats[0], flats[1], flats[2], flats[4]),
-            h_idx, j_idx, n_fired, R)
+            h_idx, j_idx, n_fired, R, layout=layout)
         # same vmap-of-col_update graph as column_updates_batched, fed from
         # the staged buffers (padding slots read zeros instead of clipped
         # gathers; their results are never written back)
@@ -280,32 +284,54 @@ def _column_worklist(hcus: H.HCUState, h_idx, j_idx, now, p: BCPNNParams,
                 backend=backend)
         )(zb, eb, pb, tb, zep_i.z, zep_i.p, pj_sc)
         vals = (z1, e1, p1, w1)
-    flats = WL.write_cols(flats, h_idx, j_idx, n_fired, vals, now, R)
+    flats = WL.write_cols(flats, h_idx, j_idx, n_fired, vals, now, R,
+                          layout=layout)
     hcus = _put_flats(hcus, flats)
     # tij is already stamped by write_cols; only the Zj bump remains
     return hcus._replace(zj=_bump_zj(hcus.zj, h_idx, j_idx, n, p))
 
 
 def _column_worklist_megakernel(hcus: H.HCUState, h_idx, j_idx, now,
-                                p: BCPNNParams, backend, n: int):
+                                p: BCPNNParams, backend, n: int, lay=None):
     """TPU half of the fused column phase: one scalar-prefetch Pallas
     megakernel launch (`ops.fused_col_update`) rewrites every fired (R, 1)
     column block of the five ij planes in place — Tij stamped in-kernel,
     padding fired-batch entries routed onto the junk lane. Replaces the
     batched-view kernel + gather/scatter tail the non-fused Pallas column
-    step pays (`_column_batched_on_flat`)."""
+    step pays (`_column_batched_on_flat`).
+
+    ``lay`` (a TPU-degenerate `layout.BlockedLayout`, Tc == 1) runs the SAME
+    kernel on the row-padded flat view of the blocked planes — a pure
+    reshape, since a (H*Tr, 1, xr, xc) block store is row-major (H*Pr, Pc)
+    byte-for-byte. Only the engine-side indices change: each HCU spans
+    `padded_rows` view rows and the presynaptic vectors are transiently
+    zero-padded to match (the pad rows' outputs land on pad cells, which are
+    outside the logical plane)."""
     R = p.rows
     zep_i, pj_sc = _col_worklist_prologue(hcus, h_idx, j_idx, now, p, n)
-    flats = ops.fused_col_update(
-        *_ij_flats(hcus), h_idx=h_idx, j_idx=j_idx, now=now,
-        zi_t=zep_i.z, p_i=zep_i.p, pj_sc=pj_sc,
-        coeffs=H.coeffs_ij(p), eps=p.eps, n_hcu=n, rows=R, backend=backend)
+    if lay is not None:
+        Pr = lay.padded_rows
+        pad = (lambda v: jnp.pad(v, ((0, 0), (0, Pr - R)))) if Pr != R \
+            else (lambda v: v)
+        planes = tuple(lay.flat_view(f) for f in _ij_flats(hcus))
+        flats = ops.fused_col_update(
+            *planes, h_idx=h_idx, j_idx=j_idx, now=now,
+            zi_t=pad(zep_i.z), p_i=pad(zep_i.p), pj_sc=pj_sc,
+            coeffs=H.coeffs_ij(p), eps=p.eps, n_hcu=n, rows=Pr,
+            backend=backend)
+        flats = tuple(lay.from_flat_view(f) for f in flats)
+    else:
+        flats = ops.fused_col_update(
+            *_ij_flats(hcus), h_idx=h_idx, j_idx=j_idx, now=now,
+            zi_t=zep_i.z, p_i=zep_i.p, pj_sc=pj_sc,
+            coeffs=H.coeffs_ij(p), eps=p.eps, n_hcu=n, rows=R,
+            backend=backend)
     hcus = _put_flats(hcus, flats)
     return hcus._replace(zj=_bump_zj(hcus.zj, h_idx, j_idx, n, p))
 
 
 def worklist_col_dispatch(kernel, fused_cols, h_idx, j_idx, t,
-                          p: BCPNNParams, n: int):
+                          p: BCPNNParams, n: int, layout=None):
     """Pick the worklist backend's lazy column-phase implementation for the
     resolved kernel backend: the in-place loops (`_column_worklist`,
     fused or staged) on "ref", the `ops.fused_col_update` megakernel or
@@ -313,24 +339,34 @@ def worklist_col_dispatch(kernel, fused_cols, h_idx, j_idx, t,
     hcus -> hcus' closure. Exposed (not underscored) because
     `benchmarks/profile_phases.py`'s ablation harness reuses it — the
     published per-phase deltas must dispatch exactly what the engine
-    dispatches."""
+    dispatches.
+
+    ``layout`` (a `layout.BlockedLayout` or None) selects the storage order
+    the closures address. The Pallas megakernel only speaks the flat view,
+    so a blocked layout off the TPU-degenerate point (col_tiles > 1) routes
+    to the batched-view kernel, whose wrapper round-trips through canonical
+    flat."""
     kb = kernel or ops.default_backend()
+    lay = L.as_blocked(layout)
     if kb == "ref":
         return lambda hc: _column_worklist(hc, h_idx, j_idx, t, p,
-                                           backend=kernel, fused=fused_cols)
+                                           backend=kernel, fused=fused_cols,
+                                           layout=lay)
     # the column megakernel selects the per-entry presynaptic lane out of
     # one 128-wide tile, so a fired batch larger than a lane tile falls
     # back to the batched-view kernel (n_hcu >= ~366 at the default
     # cap_fire formula) instead of tracing an unsatisfiable kernel
-    if fused_cols and h_idx.shape[0] <= ops.bcpnn_update.DEFAULT_BLOCK_L:
+    if fused_cols and h_idx.shape[0] <= ops.bcpnn_update.DEFAULT_BLOCK_L \
+            and (lay is None or lay.tpu_degenerate):
         return lambda hc: _column_worklist_megakernel(hc, h_idx, j_idx, t,
-                                                      p, kb, n)
+                                                      p, kb, n, lay=lay)
     return lambda hc: _column_batched_on_flat(hc, h_idx, j_idx, t, p,
-                                              kernel, n)
+                                              kernel, n, layout=lay)
 
 
 def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
-                       kernel: str | None = None, fused: bool = True):
+                       kernel: str | None = None, fused: bool = True,
+                       layout=None):
     """Lazy worklist row phase on canonical flat planes: dedup + worklist
     build, in-place row rewrites (ds/dus loops on CPU, scalar-prefetch Pallas
     kernel on TPU) and the i-vector writeback. Returns (hcus', w_rows,
@@ -344,13 +380,28 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
     three-phase stage/compute/writeback form — bitwise-identical, kept as
     the A/B reference (tests/test_worklist.py).
 
+    ``layout`` (a `layout.BlockedLayout` or None): the CPU loops address the
+    blocked planes directly through the layout accessors; the Pallas kernels
+    run on the row-padded flat view when the layout is TPU-degenerate
+    (Tc == 1 — a pure reshape) with the worklist's global row indices
+    remapped onto the padded row pitch, and fall back to a canonical-flat
+    round-trip otherwise.
+
     Exposed (not underscored) because `benchmarks/profile_phases.py` times it
     as the row-update phase.
     """
+    lay = L.as_blocked(layout)
+    kb = kernel or ops.default_backend()
+    if lay is not None and kb in ("pallas", "pallas_interpret") \
+            and not lay.tpu_degenerate:
+        # off the degenerate point the kernels' flat BlockSpecs can't
+        # address the tile store; round-trip through canonical flat
+        hcus, w_rows, c = worklist_lazy_rows(
+            L.load_hcus(hcus, lay), rows, t, p, kernel=kernel, fused=fused)
+        return L.store_hcus(hcus, lay), w_rows, c
     c = _row_worklist_common(hcus, rows, t, p)
     hcus = c["hcus"]
     n, A = c["n"], c["A"]
-    kb = kernel or ops.default_backend()
     if kb in ("pallas", "pallas_interpret") and fused:
         # megakernel: one scalar-prefetch grid pass over SLOT-ordered
         # entries (g_row already carries the H*R sentinel on padding slots;
@@ -358,14 +409,31 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
         # i-vectors in place and emits the h-major weight rows directly
         W = n * A
         h_of = jnp.arange(W, dtype=jnp.int32) // A
+        if lay is not None:
+            # degenerate blocked planes == row-padded flat view (reshape);
+            # remap worklist rows onto the padded pitch (sentinel included)
+            # and pad the i-vectors to match — pad rows only ever receive
+            # pad-cell writes, never feed a valid row's compute
+            planes = tuple(lay.flat_view(f) for f in _ij_flats(hcus))
+            ivin = tuple(lay.pad_ivec(v, n)
+                         for v in (hcus.zi, hcus.ei, hcus.pi, hcus.ti))
+            g_rows = lay.pad_row_index(c["g_row"], n)
+        else:
+            planes = _ij_flats(hcus)
+            ivin = (hcus.zi, hcus.ei, hcus.pi, hcus.ti)
+            g_rows = c["g_row"]
         flats, ivecs, w_flat = ops.fused_row_update(
-            *_ij_flats(hcus), hcus.zi, hcus.ei, hcus.pi, hcus.ti,
-            rows=c["g_row"], now=t, counts=c["counts"].reshape(-1),
+            *planes, *ivin,
+            rows=g_rows, now=t, counts=c["counts"].reshape(-1),
             zj=hcus.zj[h_of], p_i=c["zep_i"].p.reshape(-1),
             pj=hcus.pj[h_of],
             zi_new=c["zi_new"].reshape(-1), ei_new=c["zep_i"].e.reshape(-1),
             pi_new=c["zep_i"].p.reshape(-1),
             coeffs=H.coeffs_ij(p), eps=p.eps, backend=kb)
+        if lay is not None:
+            w_flat = w_flat[:, :p.cols]
+            flats = tuple(lay.from_flat_view(f) for f in flats)
+            ivecs = tuple(lay.unpad_ivec(v, n) for v in ivecs)
         hcus = _put_flats(hcus, flats)._replace(
             zi=ivecs[0], ei=ivecs[1], pi=ivecs[2], ti=ivecs[3])
         w_rows = w_flat.reshape(n, A, p.cols)
@@ -378,13 +446,23 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
         # 0, which aliases a real row); ops routes sentinels onto the
         # kernel's junk row so they can never clobber a touched row
         W = order.shape[0]
-        rows_k = jnp.where(jnp.arange(W) < c["nv"], c["g_row"][order],
-                           n * p.rows)
+        if lay is not None:
+            planes = tuple(lay.flat_view(f) for f in _ij_flats(hcus))
+            g_map = lay.pad_row_index(c["g_row"], n)
+            sent = n * lay.padded_rows
+        else:
+            planes = _ij_flats(hcus)
+            g_map = c["g_row"]
+            sent = n * p.rows
+        rows_k = jnp.where(jnp.arange(W) < c["nv"], g_map[order], sent)
         flats = ops.worklist_row_update(
-            *_ij_flats(hcus), rows=rows_k, nv=c["nv"], now=t,
+            *planes, rows=rows_k, nv=c["nv"], now=t,
             counts=c["counts"].reshape(-1)[order],
             zj=hcus.zj[h_of], p_i=c["zep_i"].p.reshape(-1)[order],
             pj=hcus.pj[h_of], coeffs=H.coeffs_ij(p), eps=p.eps, backend=kb)
+        w_view = flats[3]
+        if lay is not None:
+            flats = tuple(lay.from_flat_view(f) for f in flats)
         hcus = _put_flats(hcus, flats)
         # i-vector writeback: the O(touched) scatter forms on the flat
         # vectors (padding rows routed to the H*R sentinel -> dropped)
@@ -397,7 +475,9 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
             zi=put(hcus.zi, c["zi_new"]), ei=put(hcus.ei, c["zep_i"].e),
             pi=put(hcus.pi, c["zep_i"].p),
             ti=put(hcus.ti, jnp.full(c["rows_u"].shape, t, hcus.ti.dtype)))
-        w_g = flats[3][jnp.minimum(c["g_row"], n * p.rows - 1)]   # (W, C)
+        w_g = w_view[jnp.minimum(g_map, sent - 1)]                # (W, C)
+        if lay is not None:
+            w_g = w_g[:, :p.cols]
         w_rows = jnp.where((c["g_row"] < n * p.rows)[:, None], w_g, 0.0) \
             .reshape(n, A, p.cols)
     elif fused:
@@ -428,9 +508,10 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
         ivecs = (hcus.zi, hcus.ei, hcus.pi, hcus.ti)
         vals = WL.fused_stage_compute(
             (flats[0], flats[1], flats[2], flats[4]),
-            c["g_row"], c["order"], c["nv"], row_math)
+            c["g_row"], c["order"], c["nv"], row_math, layout=lay)
         flats, ivecs = WL.write_rows(flats, ivecs, c["g_row"], c["order"],
-                                     c["nv"], vals, c["iv_vals"], t)
+                                     c["nv"], vals, c["iv_vals"], t,
+                                     layout=lay)
         hcus = _put_flats(hcus, flats)._replace(
             zi=ivecs[0], ei=ivecs[1], pi=ivecs[2], ti=ivecs[3])
         w_rows = vals[3].reshape(n, A, p.cols)
@@ -438,7 +519,7 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
         flats = _ij_flats(hcus)
         ivecs = (hcus.zi, hcus.ei, hcus.pi, hcus.ti)
         bufs = WL.read_rows((flats[0], flats[1], flats[2], flats[4]),
-                            c["g_row"], c["order"], c["nv"])
+                            c["g_row"], c["order"], c["nv"], layout=lay)
         # the per-HCU path's exact vmapped compute graph, fed from the
         # staged buffers (bitwise-identical values; padding slots read
         # zeros, their outputs are dropped / zero-count drive terms)
@@ -452,7 +533,8 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
         w_rows = w1
         vals = tuple(v.reshape(n * A, p.cols) for v in (z1, e1, p1, w1))
         flats, ivecs = WL.write_rows(flats, ivecs, c["g_row"], c["order"],
-                                     c["nv"], vals, c["iv_vals"], t)
+                                     c["nv"], vals, c["iv_vals"], t,
+                                     layout=lay)
         hcus = _put_flats(hcus, flats)
         hcus = hcus._replace(zi=ivecs[0], ei=ivecs[1], pi=ivecs[2],
                              ti=ivecs[3])
@@ -460,7 +542,7 @@ def worklist_lazy_rows(hcus: H.HCUState, rows, t, p: BCPNNParams,
 
 
 def worklist_merged_rows(hcus: H.HCUState, jring, rows, t, p: BCPNNParams,
-                         fused: bool = True):
+                         fused: bool = True, layout=None):
     """Merged worklist row phase (piecewise ring integration) on canonical
     flat planes. Returns (hcus', w_rows, common).
 
@@ -479,13 +561,14 @@ def worklist_merged_rows(hcus: H.HCUState, jring, rows, t, p: BCPNNParams,
     `worklist_lazy_rows` CAN fuse)."""
     from repro.core import merged as M
     del fused
+    lay = L.as_blocked(layout)
     c = _row_worklist_common(hcus, rows, t, p)
     hcus = c["hcus"]
     n, A = c["n"], c["A"]
     flats = _ij_flats(hcus)
     ivecs = (hcus.zi, hcus.ei, hcus.pi, hcus.ti)
     bufs = WL.read_rows((flats[0], flats[1], flats[2], flats[4]),
-                        c["g_row"], c["order"], c["nv"])
+                        c["g_row"], c["order"], c["nv"], layout=lay)
     # vmapped merged_row_math: the exact compute graph of the per-HCU path
     sh = lambda b: b.reshape(n, A, p.cols)
     z1, e1, p1, w1 = jax.vmap(
@@ -496,14 +579,14 @@ def worklist_merged_rows(hcus: H.HCUState, jring, rows, t, p: BCPNNParams,
     w_rows = w1
     vals = tuple(v.reshape(n * A, p.cols) for v in (z1, e1, p1, w1))
     flats, ivecs = WL.write_rows(flats, ivecs, c["g_row"], c["order"],
-                                 c["nv"], vals, c["iv_vals"], t)
+                                 c["nv"], vals, c["iv_vals"], t, layout=lay)
     hcus = _put_flats(hcus, flats)
     hcus = hcus._replace(zi=ivecs[0], ei=ivecs[1], pi=ivecs[2], ti=ivecs[3])
     return hcus, w_rows, c
 
 
 def _merged_worklist_update(hcus: H.HCUState, jring, rows, t, keys,
-                            p: BCPNNParams, fused: bool = True):
+                            p: BCPNNParams, fused: bool = True, layout=None):
     """Worklist twin of `jax.vmap(merged.hcu_tick_merged)`: merged row
     updates (piecewise ring integration; `fused` threads through but the
     merged row phase stays three-phase — see `worklist_merged_rows`), WTA,
@@ -514,8 +597,9 @@ def _merged_worklist_update(hcus: H.HCUState, jring, rows, t, keys,
     from repro.core import merged as M
     n = rows.shape[0]
     R = p.rows
+    lay = L.as_blocked(layout)
     hcus, w_rows, c = worklist_merged_rows(hcus, jring, rows, t, p,
-                                           fused=fused)
+                                           fused=fused, layout=lay)
     hcus, fired = _wta(hcus, w_rows, c["counts"], t, keys, p)
 
     active = fired >= 0
@@ -533,8 +617,9 @@ def _merged_worklist_update(hcus: H.HCUState, jring, rows, t, keys,
     # would change its fusion context and break the 1-ulp identity, and the
     # lazy path (the perf-gated one) has no flush at all.
     hb = jax.vmap(lambda s, g, j, ov: M.column_flush_merged(
-        s, g, j, t, ov, p))(L.batched_state(hcus, n), jring, safe_j, overflow)
-    hcus = L.flat_state(hb)
+        s, g, j, t, ov, p))(L.batched_state(L.load_hcus(hcus, lay), n),
+                            jring, safe_j, overflow)
+    hcus = L.store_hcus(L.flat_state(hb), lay)
     jring = jax.vmap(
         lambda g, sj, ov: g.at[sj].set(
             jnp.where(ov, jnp.full((M.RING_DEPTH,), M.RING_EMPTY, jnp.int32),
@@ -544,7 +629,7 @@ def _merged_worklist_update(hcus: H.HCUState, jring, rows, t, keys,
     # normal path: defer via ring; patch only this tick's touched rows
     pa_idx, n_patch = WL.compact_mask(active & ~overflow)
     zf = WL.patch_cells(hcus.zij, pa_idx, n_patch, c["rows_u"],
-                        c["zi_new"], fired, R)
+                        c["zi_new"], fired, R, layout=lay)
     hcus = hcus._replace(zij=zf)
     jring = jax.vmap(lambda g, j: M.push_ring(g, j, t))(
         jring, jnp.where(overflow, -1, fired))
@@ -585,16 +670,23 @@ class DenseBackend(NamedTuple):
     mode: "lazy" (timestamped row/column updates), "eager" (the dense golden
     reference) or "merged" (eBrainIII ring-deferred columns).
     kernel: ops backend override ("ref" | "pallas" | "pallas_interpret").
+    layout: plane storage order (`layout.BlockedLayout` or None for flat).
+    A blocked layout converts to/from canonical flat once per compiled
+    region in `carry_in`/`carry_out` (pure data movement), so the per-tick
+    dense graph stays exactly the historical batched one.
     """
     mode: str = "lazy"
     kernel: str | None = None
+    layout: "L.BlockedLayout | None" = None
 
     def carry_in(self, state, p: BCPNNParams):
         n = state.delay_rows.shape[0]
-        return state._replace(hcus=L.batched_state(state.hcus, n))
+        return state._replace(
+            hcus=L.batched_state(L.load_hcus(state.hcus, self.layout), n))
 
     def carry_out(self, state, p: BCPNNParams):
-        return state._replace(hcus=L.flat_state(state.hcus))
+        return state._replace(
+            hcus=L.store_hcus(L.flat_state(state.hcus), self.layout))
 
     def plane_update(self, state, rows, t, keys, p: BCPNNParams, cap: int,
                      cond_columns: bool):
@@ -647,11 +739,17 @@ class WorklistBackend(NamedTuple):
     megakernel on TPU) — default on (`hcu.use_fused_cols`),
     bitwise-identical either way; inert in merged mode (the merged column
     flush keeps the shared `merged_col_math` island).
+    layout: plane storage order (`layout.BlockedLayout` or None for flat).
+    Unlike the dense backend, the worklist loops address the blocked tiles
+    DIRECTLY through the layout accessors — this is where the Row-Merge
+    column-locality win lives (a fired column touches ceil(R/xr) tile
+    stripes instead of R strided cache lines).
     """
     mode: str = "lazy"
     kernel: str | None = None
     fused: bool = True
     fused_cols: bool = True
+    layout: "L.BlockedLayout | None" = None
 
     def carry_in(self, state, p: BCPNNParams):
         return state
@@ -664,17 +762,20 @@ class WorklistBackend(NamedTuple):
         n = state.delay_rows.shape[0]
         if self.mode == "merged":
             hcus, jring, fired = _merged_worklist_update(
-                state.hcus, state.jring, rows, t, keys, p, fused=self.fused)
+                state.hcus, state.jring, rows, t, keys, p, fused=self.fused,
+                layout=self.layout)
             h_idx, j_idx, n_drop = N.select_fired(fired, cap)
             return (state._replace(hcus=hcus, jring=jring), fired,
                     h_idx, j_idx, n_drop)
         hcus, w_rows, c = worklist_lazy_rows(state.hcus, rows, t, p,
                                              kernel=self.kernel,
-                                             fused=self.fused)
+                                             fused=self.fused,
+                                             layout=self.layout)
         hcus, fired = _wta(hcus, w_rows, c["counts"], t, keys, p)
         h_idx, j_idx, n_drop = N.select_fired(fired, cap)
         col = worklist_col_dispatch(self.kernel, self.fused_cols,
-                                    h_idx, j_idx, t, p, n)
+                                    h_idx, j_idx, t, p, n,
+                                    layout=self.layout)
         if cond_columns:
             hcus = jax.lax.cond(jnp.any(h_idx < n), col, lambda hc: hc, hcus)
         else:
@@ -686,7 +787,8 @@ def select_backend(p: BCPNNParams, *, eager: bool = False,
                    merged: bool = False, worklist: bool | None = None,
                    kernel: str | None = None,
                    fused: bool | None = None,
-                   fused_cols: bool | None = None) -> "TickBackend":
+                   fused_cols: bool | None = None,
+                   layout=None) -> "TickBackend":
     """Map the historical mode flags onto a TickBackend.
 
     Keeps `hcu.use_worklist`'s size-guard semantics (R*C > DENSE_CELLS_MAX
@@ -696,15 +798,23 @@ def select_backend(p: BCPNNParams, *, eager: bool = False,
     (`hcu.use_fused_cols`) — both default on, both no-ops for the dense
     backends. The eager golden reference is dense by definition (it touches
     every cell anyway).
+
+    ``layout`` selects the plane storage order (`layout.resolve_layout`
+    spec: None/"flat" for canonical flat, "blocked"/"blocked_tpu"/a
+    `BlockedLayout` for column-blocked tiles); it is normalized here so the
+    backends — which are static jit arguments — only ever carry None or a
+    concrete `BlockedLayout`.
     """
+    layout = L.resolve_layout(layout, p)
     if eager:
-        return DenseBackend(mode="eager", kernel=kernel)
+        return DenseBackend(mode="eager", kernel=kernel, layout=layout)
     mode = "merged" if merged else "lazy"
     if H.use_worklist(p, worklist):
         return WorklistBackend(mode=mode, kernel=kernel,
                                fused=H.use_fused_rows(p, fused),
-                               fused_cols=H.use_fused_cols(p, fused_cols))
-    return DenseBackend(mode=mode, kernel=kernel)
+                               fused_cols=H.use_fused_cols(p, fused_cols),
+                               layout=layout)
+    return DenseBackend(mode=mode, kernel=kernel, layout=layout)
 
 
 # ---------------------------------------------------------------------------
@@ -781,31 +891,37 @@ class Simulator:
                  merged: bool = False, eager: bool = False,
                  worklist: bool | None = None, kernel: str | None = None,
                  fused: bool | None = None, fused_cols: bool | None = None,
-                 cap_fire: int | None = None, chunk: int = 128):
+                 cap_fire: int | None = None, chunk: int = 128,
+                 layout=None):
         self.p = p
         self.n_hcu = n_hcu or p.n_hcu
         self.merged, self.eager = merged, eager
         self.worklist, self.kernel, self.fused = worklist, kernel, fused
         self.fused_cols = fused_cols
         self.cap_fire, self.chunk = cap_fire, chunk
+        # normalized once: None (canonical flat) or a concrete BlockedLayout
+        # ("blocked" -> the CPU tile, "blocked_tpu" -> the (8, 128) tile)
+        self.layout = L.resolve_layout(layout, p)
         self._dist_cache = None
         self._key = jax.random.PRNGKey(key) if isinstance(key, int) else key
         self.conn = N.make_connectivity(p, jax.random.fold_in(self._key, 1),
                                         n_hcu)
-        self.state = N.init_network(p, self._key, n_hcu=n_hcu, merged=merged)
+        self.state = N.init_network(p, self._key, n_hcu=n_hcu, merged=merged,
+                                    layout=self.layout)
 
     # -- mode plumbing -------------------------------------------------------
     def _kw(self):
         return dict(eager=self.eager, merged=self.merged,
                     worklist=self.worklist, backend=self.kernel,
                     fused=self.fused, fused_cols=self.fused_cols,
-                    cap_fire=self.cap_fire)
+                    cap_fire=self.cap_fire, layout=self.layout)
 
     @property
     def backend(self) -> "TickBackend":
         return select_backend(self.p, eager=self.eager, merged=self.merged,
                               worklist=self.worklist, kernel=self.kernel,
-                              fused=self.fused, fused_cols=self.fused_cols)
+                              fused=self.fused, fused_cols=self.fused_cols,
+                              layout=self.layout)
 
     def reset(self, key=None) -> "Simulator":
         """Re-init the network state (same connectivity unless key given)."""
@@ -815,7 +931,7 @@ class Simulator:
             self.conn = N.make_connectivity(
                 self.p, jax.random.fold_in(self._key, 1), self.n_hcu)
         self.state = N.init_network(self.p, self._key, n_hcu=self.n_hcu,
-                                    merged=self.merged)
+                                    merged=self.merged, layout=self.layout)
         self._dist_cache = None      # fresh state is host-resident again
         return self
 
@@ -855,6 +971,12 @@ class Simulator:
             # running the lazy backend would diverge from sim.run()
             raise NotImplementedError(
                 "merged mode is not supported by the sharded runtime")
+        if self.layout is not None:
+            # the sharded drivers carry canonical flat planes; silently
+            # dropping the blocked layout would diverge from sim.run()
+            raise NotImplementedError(
+                "blocked plane layouts are not supported by the sharded "
+                "runtime (run with layout=None/'flat')")
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), (axis,))
         if rc is None:
@@ -885,8 +1007,9 @@ class Simulator:
         return N.drop_counters(self.state)
 
     def hcus(self) -> H.HCUState:
-        """Batched (H, R, C) view of the canonical flat state."""
-        return N.hcu_view(self.state)
+        """Batched (H, R, C) view of the held state (layout-aware: blocked
+        planes are unpacked to canonical order first)."""
+        return N.hcu_view(self.state, layout=self.layout)
 
     def flushed(self) -> H.HCUState:
         """Batched HCU state with every lazy trace brought current — the
@@ -902,23 +1025,41 @@ class Simulator:
 
     # -- persistence ---------------------------------------------------------
     def save(self, ckpt_dir: str, step: int | None = None) -> str:
-        """Checkpoint the canonical NetworkState (atomic, numpy container)."""
+        """Checkpoint the held NetworkState (atomic, numpy container). The
+        manifest records the plane layout (`layout.layout_tag`) so a later
+        load under a different layout knows to convert."""
         from repro.checkpoint import save as ckpt_save
         return ckpt_save(ckpt_dir, int(self.state.t) if step is None
-                         else step, self.state)
+                         else step, self.state,
+                         extra_meta={"layout": L.layout_tag(self.layout)})
 
     def load(self, ckpt_dir: str, step: int | None = None) -> "Simulator":
         """Restore the latest (or given) step into this Simulator.
 
-        One-call migration: checkpoints written by the pre-engine runtime
-        stored the batched (H, R, C)/(H, R) layout; the shim reshapes them
-        into the canonical flat layout on load (`checkpoint.restore_network`).
+        One-call migration, two shims:
+        * legacy layout — checkpoints written by the pre-engine runtime
+          stored the batched (H, R, C)/(H, R) layout; reshaped to canonical
+          flat on load (`checkpoint.restore_network`);
+        * plane layout — a checkpoint saved under one plane layout restores
+          under any other: the manifest's layout tag (absent == flat) picks
+          a template in the SAVED layout, and the loaded planes are
+          converted to this Simulator's layout (`layout.convert_hcus` —
+          pure data movement, bitwise).
         """
-        from repro.checkpoint import latest_step, restore_network
+        from repro.checkpoint import latest_step, manifest, restore_network
         if step is None:
             step = latest_step(ckpt_dir)
             if step is None:
                 raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-        self.state = restore_network(ckpt_dir, step, self.state)
+        meta = manifest(ckpt_dir, step) or {}
+        saved = L.layout_from_tag(meta.get("layout", "flat"), self.p)
+        if L.layout_tag(saved) == L.layout_tag(self.layout):
+            self.state = restore_network(ckpt_dir, step, self.state)
+        else:
+            tmpl = self.state._replace(
+                hcus=L.convert_hcus(self.state.hcus, self.layout, saved))
+            st = restore_network(ckpt_dir, step, tmpl)
+            self.state = st._replace(
+                hcus=L.convert_hcus(st.hcus, saved, self.layout))
         self._dist_cache = None      # restored state is host-resident
         return self

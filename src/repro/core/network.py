@@ -107,11 +107,15 @@ def drop_counters(state: NetworkState) -> dict:
             "route": 0 if route is None else int(route)}
 
 
-def hcu_view(state: NetworkState) -> H.HCUState:
-    """Batched (H, R, C)/(H, R) view of the canonical flat `state.hcus`
-    (zero-copy) — the shape `jax.vmap`-over-HCUs consumers want, e.g.
-    `jax.vmap(lambda s: flush(s, state.t, p))(hcu_view(state))`."""
-    return L.batched_state(state.hcus, state.delay_rows.shape[0])
+def hcu_view(state: NetworkState, layout=None) -> H.HCUState:
+    """Batched (H, R, C)/(H, R) view of `state.hcus` — the shape
+    `jax.vmap`-over-HCUs consumers want, e.g.
+    `jax.vmap(lambda s: flush(s, state.t, p))(hcu_view(state))`.
+    Zero-copy on the canonical flat layout; under a blocked `layout` the ij
+    planes are first unpacked to canonical order (`layout.load_hcus`, pure
+    data movement)."""
+    return L.batched_state(L.load_hcus(state.hcus, layout),
+                           state.delay_rows.shape[0])
 
 
 def make_connectivity(p: BCPNNParams, key, n_hcu: int | None = None) -> Connectivity:
@@ -129,9 +133,12 @@ def make_connectivity(p: BCPNNParams, key, n_hcu: int | None = None) -> Connecti
 
 
 def init_network(p: BCPNNParams, key, n_hcu: int | None = None,
-                 merged: bool = False) -> NetworkState:
+                 merged: bool = False, layout=None) -> NetworkState:
     n = n_hcu or p.n_hcu
-    hcus = H.init_hcu_batch(p, n)            # canonical flat layout
+    # canonical flat layout, re-tiled iff a blocked layout is requested
+    # (pure data movement — a blocked-layout network holds bitwise the same
+    # logical values as a flat one)
+    hcus = L.store_hcus(H.init_hcu_batch(p, n), layout)
     D, A = p.max_delay, p.active_queue
     jring = None
     if merged:
@@ -257,13 +264,13 @@ def select_fired(fired: jnp.ndarray, cap: int):
 @functools.partial(jax.jit, static_argnames=("p", "eager", "backend",
                                              "cap_fire", "merged",
                                              "worklist", "fused",
-                                             "fused_cols"),
+                                             "fused_cols", "layout"),
                    donate_argnums=(0,))
 def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
                  p: BCPNNParams, *, eager: bool = False, merged: bool = False,
                  backend: str | None = None, cap_fire: int | None = None,
                  worklist: bool | None = None, fused: bool | None = None,
-                 fused_cols: bool | None = None):
+                 fused_cols: bool | None = None, layout=None):
     """Advance the whole network by one 1 ms tick.
 
     ext_rows: (H, A_ext) external input spikes (row index, padding == p.rows)
@@ -276,10 +283,15 @@ def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
     `hcu.use_fused_rows`) and fused_cols=True/False its single-pass fused
     column phase (default: on, `hcu.use_fused_cols`); trajectories are
     identical every way.
+    layout selects the plane storage order (None/"flat" canonical flat,
+    "blocked"/"blocked_tpu"/a `layout.BlockedLayout` for column-blocked
+    tiles; `state.hcus` must be stored in that layout) — trajectories are
+    identical under every layout (storage order, not math).
     """
     from repro.core import engine as E
     be = E.select_backend(p, eager=eager, merged=merged, worklist=worklist,
-                          kernel=backend, fused=fused, fused_cols=fused_cols)
+                          kernel=backend, fused=fused, fused_cols=fused_cols,
+                          layout=layout)
     state, fired = E.tick(be.carry_in(state, p), conn, ext_rows, p, be,
                           cap_fire)
     return be.carry_out(state, p), fired
@@ -288,13 +300,13 @@ def network_tick(state: NetworkState, conn: Connectivity, ext_rows: jnp.ndarray,
 @functools.partial(jax.jit, static_argnames=("p", "eager", "backend",
                                              "cap_fire", "merged",
                                              "worklist", "fused",
-                                             "fused_cols"),
+                                             "fused_cols", "layout"),
                    donate_argnums=(0,))
 def _run_chunk(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
                p: BCPNNParams, *, eager: bool, merged: bool,
                backend: str | None, cap_fire: int | None,
                worklist: bool | None, fused: bool | None,
-               fused_cols: bool | None):
+               fused_cols: bool | None, layout=None):
     """One compiled scan over ext (T_chunk, H, A_ext): a single dispatch
     advances the network T_chunk ticks, threading the donated state. The
     backend picks the carry layout ONCE per chunk (`carry_in`/`carry_out` at
@@ -302,7 +314,8 @@ def _run_chunk(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
     layout itself, so the tick body has zero per-tick reshapes."""
     from repro.core import engine as E
     be = E.select_backend(p, eager=eager, merged=merged, worklist=worklist,
-                          kernel=backend, fused=fused, fused_cols=fused_cols)
+                          kernel=backend, fused=fused, fused_cols=fused_cols,
+                          layout=layout)
 
     def body(s, e):
         return E.tick(s, conn, e, p, be, cap_fire)
@@ -315,7 +328,8 @@ def network_run(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
                 p: BCPNNParams, *, chunk: int = 128, eager: bool = False,
                 merged: bool = False, backend: str | None = None,
                 cap_fire: int | None = None, worklist: bool | None = None,
-                fused: bool | None = None, fused_cols: bool | None = None):
+                fused: bool | None = None, fused_cols: bool | None = None,
+                layout=None):
     """Scan-compiled multi-tick driver (see module docstring contract).
 
     ext: (T, H, A_ext) pre-staged external spikes — use `stage_external`.
@@ -335,7 +349,8 @@ def network_run(state: NetworkState, conn: Connectivity, ext: jnp.ndarray,
         state, fired = _run_chunk(state, conn, ext[i:i + step], p,
                                   eager=eager, merged=merged, backend=backend,
                                   cap_fire=cap_fire, worklist=worklist,
-                                  fused=fused, fused_cols=fused_cols)
+                                  fused=fused, fused_cols=fused_cols,
+                                  layout=layout)
         hist.append(fired)
         i += step
     return state, (hist[0] if len(hist) == 1 else jnp.concatenate(hist))

@@ -52,7 +52,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.layout import col_offset, global_row
+from repro.core.layout import FlatLayout, as_blocked, global_row
+
+
+def _lay(layout, n_rows: int | None = None):
+    """Resolve the per-call PlaneLayout: the flat accessors (exactly the
+    historical inline dynamic-slice expressions — flat graphs are unchanged
+    by the seam) unless a BlockedLayout is passed."""
+    return as_blocked(layout) or FlatLayout(rows=n_rows)
 
 
 def build_worklist(rows_u: jnp.ndarray, n_rows: int):
@@ -99,17 +106,19 @@ def compact_mask(mask: jnp.ndarray):
 
 # ----------------------------- row worklist ---------------------------------
 
-def read_rows(flats, g_row, order, nv):
+def read_rows(flats, g_row, order, nv, layout=None):
     """Stage worklist rows into dense h-major (H*A, C) buffers.
 
-    flats: tuple of (H*R, C) flat planes (read-only here). For each valid
-    worklist entry (slot = order[e], e < nv), buffer position `slot`
-    receives plane row `g_row[slot]`; padding slots stay zero (their values
-    feed only computations whose results are dropped or zero-masked). One
+    flats: tuple of stored planes in `layout`'s order — flat (H*R, C) by
+    default (read-only here). For each valid worklist entry
+    (slot = order[e], e < nv), buffer position `slot` receives the logical
+    plane row `g_row[slot]`; padding slots stay zero (their values feed only
+    computations whose results are dropped or zero-masked). One
     dynamic_slice per plane per entry — no fancy gather, so the planes stay
     in-place-aliasable for the write loop.
     """
-    C = flats[0].shape[1]
+    lay = _lay(layout)
+    C = lay.cols if as_blocked(layout) else flats[0].shape[1]
     cap_total = g_row.shape[0]
     bufs = tuple(jnp.zeros((cap_total, C), f.dtype) for f in flats)
 
@@ -118,8 +127,7 @@ def read_rows(flats, g_row, order, nv):
         slot = order[e]
         r = g_row[slot]
         bufs = tuple(
-            jax.lax.dynamic_update_slice(
-                b, jax.lax.dynamic_slice(f, (r, 0), (1, C)), (slot, 0))
+            jax.lax.dynamic_update_slice(b, lay.read_row(f, r), (slot, 0))
             for b, f in zip(bufs, flats))
         return e + 1, bufs
 
@@ -127,20 +135,22 @@ def read_rows(flats, g_row, order, nv):
                               (jnp.asarray(0, jnp.int32), bufs))[1]
 
 
-def write_rows(flats, ivecs, g_row, order, nv, vals, iv_vals, now):
+def write_rows(flats, ivecs, g_row, order, nv, vals, iv_vals, now,
+               layout=None):
     """Write the row worklist back in place.
 
-    flats:  (zij, eij, pij, wij, tij) flat (H*R, C) planes;
-    ivecs:  (zi, ei, pi, ti) flat (H*R,) i-vectors;
+    flats:  (zij, eij, pij, wij, tij) stored planes (flat (H*R, C) default);
+    ivecs:  (zi, ei, pi, ti) flat (H*R,) i-vectors (layout-independent);
     vals:   (z1, e1, p1, w1) h-major (H*A, C) value buffers;
     iv_vals:(zi', ei', pi') h-major (H*A,) i-vector values.
-    Entry e < nv rewrites plane row g_row[order[e]] from value slot order[e]
-    and its i-vector cell; Tij/ti are stamped to `now`. Every write is a
-    dynamic_update_slice on a while_loop carry — the in-place pattern — and
-    only touched rows are visited (the per-HCU path's `mode="drop"` scatters
-    wrote exactly this set).
+    Entry e < nv rewrites the logical plane row g_row[order[e]] from value
+    slot order[e] and its i-vector cell; Tij/ti are stamped to `now`. Every
+    write is a dynamic_update_slice on a while_loop carry — the in-place
+    pattern — and only touched rows are visited (the per-HCU path's
+    `mode="drop"` scatters wrote exactly this set).
     """
-    C = flats[0].shape[1]
+    lay = _lay(layout)
+    C = lay.cols if as_blocked(layout) else flats[0].shape[1]
 
     def body(s):
         e, flats, ivecs = s
@@ -149,12 +159,11 @@ def write_rows(flats, ivecs, g_row, order, nv, vals, iv_vals, now):
         row = lambda v: jax.lax.dynamic_slice(v, (slot, 0), (1, C))
         zf, ef, pf, wf, tf = flats
         vz, ve, vp, vw = vals
-        zf = jax.lax.dynamic_update_slice(zf, row(vz), (r, 0))
-        ef = jax.lax.dynamic_update_slice(ef, row(ve), (r, 0))
-        pf = jax.lax.dynamic_update_slice(pf, row(vp), (r, 0))
-        wf = jax.lax.dynamic_update_slice(wf, row(vw), (r, 0))
-        tf = jax.lax.dynamic_update_slice(
-            tf, jnp.full((1, C), now, tf.dtype), (r, 0))
+        zf = lay.write_row(zf, r, row(vz))
+        ef = lay.write_row(ef, r, row(ve))
+        pf = lay.write_row(pf, r, row(vp))
+        wf = lay.write_row(wf, r, row(vw))
+        tf = lay.stamp_row(tf, r, now)
         one = lambda v: jax.lax.dynamic_slice(v, (slot,), (1,))
         zv, ev, pv, tv = ivecs
         zv = jax.lax.dynamic_update_slice(zv, one(iv_vals[0]), (r,))
@@ -169,7 +178,7 @@ def write_rows(flats, ivecs, g_row, order, nv, vals, iv_vals, now):
     return out[1], out[2]
 
 
-def fused_stage_compute(flats, g_row, order, nv, row_math):
+def fused_stage_compute(flats, g_row, order, nv, row_math, layout=None):
     """Fused stage+compute pass: one loop that reads each touched row and
     runs the row math on it IN THE SAME ITERATION, writing the results to
     compact h-major value buffers.
@@ -198,7 +207,8 @@ def fused_stage_compute(flats, g_row, order, nv, row_math):
     zeros at padding slots (their WTA drive terms are zero-count, and
     `write_rows` never reads them).
     """
-    C = flats[0].shape[1]
+    lay = _lay(layout)
+    C = lay.cols if as_blocked(layout) else flats[0].shape[1]
     cap_total = g_row.shape[0]
     vals = tuple(jnp.zeros((cap_total, C), jnp.float32) for _ in range(4))
     dus = jax.lax.dynamic_update_slice
@@ -207,7 +217,7 @@ def fused_stage_compute(flats, g_row, order, nv, row_math):
         e, vals = s
         slot = order[e]
         r = g_row[slot]
-        ds = lambda f: jax.lax.dynamic_slice(f, (r, 0), (1, C))
+        ds = lambda f: lay.read_row(f, r)
         z1, e1, p1, w1 = row_math(slot, ds(flats[0]), ds(flats[1]),
                                   ds(flats[2]), ds(flats[3]))
         vals = (dus(vals[0], z1, (slot, 0)), dus(vals[1], e1, (slot, 0)),
@@ -221,7 +231,7 @@ def fused_stage_compute(flats, g_row, order, nv, row_math):
 # ----------------------------- column worklist -------------------------------
 
 def fused_col_stage_compute(flats, h_idx, j_idx, n_fired, n_rows: int,
-                            col_math):
+                            col_math, layout=None):
     """Fused column stage+compute pass: one loop that reads each fired
     (R, 1) column block and runs the column math on it IN THE SAME
     ITERATION, writing the results to compact (K, R) value buffers.
@@ -248,15 +258,14 @@ def fused_col_stage_compute(flats, h_idx, j_idx, n_fired, n_rows: int,
     Returns (z1, e1, p1, w1) value buffers, each (K, R), zeros at padding
     slots (`write_cols` never reads them).
     """
+    lay = _lay(layout, n_rows)
     K = h_idx.shape[0]
     vals = tuple(jnp.zeros((K, n_rows), jnp.float32) for _ in range(4))
     dus = jax.lax.dynamic_update_slice
 
     def body(s):
         e, vals = s
-        off, j = col_offset(h_idx[e], j_idx[e], n_rows)
-        ds = lambda f: jax.lax.dynamic_slice(
-            f, (off, j), (n_rows, 1)).reshape(n_rows)
+        ds = lambda f: lay.read_col(f, h_idx[e], j_idx[e])
         z1, e1, p1, w1 = col_math(e, ds(flats[0]), ds(flats[1]),
                                   ds(flats[2]), ds(flats[3]))
         vals = tuple(dus(v, val.reshape(1, n_rows), (e, 0))
@@ -267,23 +276,23 @@ def fused_col_stage_compute(flats, h_idx, j_idx, n_fired, n_rows: int,
                               (jnp.asarray(0, jnp.int32), vals))[1]
 
 
-def read_cols(flats, h_idx, j_idx, n_fired, n_rows: int):
+def read_cols(flats, h_idx, j_idx, n_fired, n_rows: int, layout=None):
     """Stage fired columns into compact (K, R) buffers.
 
     h_idx/j_idx: (K,) compacted fired batch (valid prefix of length n_fired,
     as produced by network.select_fired). In the flat plane, HCU h's column
-    j is the (R, 1) block at (h*R, j) — one dynamic_slice each.
+    j is the (R, 1) block at (h*R, j) — one dynamic_slice each; the blocked
+    layout reads the Tr (xr, 1) tile fragments instead (`layout.read_col`).
     """
+    lay = _lay(layout, n_rows)
     K = h_idx.shape[0]
     bufs = tuple(jnp.zeros((K, n_rows), f.dtype) for f in flats)
 
     def body(s):
         e, bufs = s
-        off, j = col_offset(h_idx[e], j_idx[e], n_rows)
         bufs = tuple(
             jax.lax.dynamic_update_slice(
-                b, jax.lax.dynamic_slice(f, (off, j),
-                                         (n_rows, 1)).reshape(1, n_rows),
+                b, lay.read_col(f, h_idx[e], j_idx[e]).reshape(1, n_rows),
                 (e, 0))
             for b, f in zip(bufs, flats))
         return e + 1, bufs
@@ -292,27 +301,29 @@ def read_cols(flats, h_idx, j_idx, n_fired, n_rows: int):
                               (jnp.asarray(0, jnp.int32), bufs))[1]
 
 
-def write_cols(flats, h_idx, j_idx, n_fired, vals, now, n_rows: int):
+def write_cols(flats, h_idx, j_idx, n_fired, vals, now, n_rows: int,
+               layout=None):
     """Write updated columns back in place ((R, 1) blocks; Tij stamped)."""
+    lay = _lay(layout, n_rows)
+
     def body(s):
         e, flats = s
-        off, j = col_offset(h_idx[e], j_idx[e], n_rows)
-        col = lambda v: jax.lax.dynamic_slice(
-            v, (e, 0), (1, n_rows)).reshape(n_rows, 1)
+        h, j = h_idx[e], j_idx[e]
+        col = lambda v: jax.lax.dynamic_slice(v, (e, 0), (1, n_rows))
         zf, ef, pf, wf, tf = flats
-        zf = jax.lax.dynamic_update_slice(zf, col(vals[0]), (off, j))
-        ef = jax.lax.dynamic_update_slice(ef, col(vals[1]), (off, j))
-        pf = jax.lax.dynamic_update_slice(pf, col(vals[2]), (off, j))
-        wf = jax.lax.dynamic_update_slice(wf, col(vals[3]), (off, j))
-        tf = jax.lax.dynamic_update_slice(
-            tf, jnp.full((n_rows, 1), now, tf.dtype), (off, j))
+        zf = lay.write_col(zf, h, j, col(vals[0]))
+        ef = lay.write_col(ef, h, j, col(vals[1]))
+        pf = lay.write_col(pf, h, j, col(vals[2]))
+        wf = lay.write_col(wf, h, j, col(vals[3]))
+        tf = lay.stamp_col(tf, h, j, now)
         return e + 1, (zf, ef, pf, wf, tf)
 
     return jax.lax.while_loop(lambda s: s[0] < n_fired, body,
                               (jnp.asarray(0, jnp.int32), flats))[1]
 
 
-def patch_cells(zf, pa_idx, n_patch, rows_u, ziv, fired, n_rows: int):
+def patch_cells(zf, pa_idx, n_patch, rows_u, ziv, fired, n_rows: int,
+                layout=None):
     """Merged-mode same-tick patch: add Zi(now) to cell (row, fired_j) for
     every row touched THIS tick in every fired (non-overflow) HCU, in place.
 
@@ -322,6 +333,7 @@ def patch_cells(zf, pa_idx, n_patch, rows_u, ziv, fired, n_rows: int):
     rows, so add order is immaterial; padding rows are skipped exactly where
     `mode="drop"` dropped them.
     """
+    lay = _lay(layout, n_rows)
     A = rows_u.shape[1]
 
     def body(s):
@@ -331,13 +343,7 @@ def patch_cells(zf, pa_idx, n_patch, rows_u, ziv, fired, n_rows: int):
 
         def inner(a, zf):
             r = rows_u[h, a]
-
-            def add(zf):
-                g = global_row(h, r, n_rows)
-                cell = jax.lax.dynamic_slice(zf, (g, j), (1, 1))
-                return jax.lax.dynamic_update_slice(
-                    zf, cell + ziv[h, a], (g, j))
-
+            add = lambda zf: lay.add_cell(zf, h, r, j, ziv[h, a])
             return jax.lax.cond(r < n_rows, add, lambda z: z, zf)
 
         return e + 1, jax.lax.fori_loop(0, A, inner, zf)

@@ -39,6 +39,12 @@ All alias the five state-plane inputs onto their outputs
 in place — the paper's in-situ 192-bit cell rewrite — instead of allocating
 five fresh planes per call.
 
+These kernels are layout-oblivious: they always see a flat (rows, lanes)
+plane. The PR 8 column-blocked storage (`core.layout.BlockedLayout`) feeds
+them at its TPU degenerate point (Tc == 1, the (8, 128) tile) as a pure
+reshape (`BlockedLayout.flat_view`) with the row-index stream remapped by
+the engine — no BlockSpec/index-map variant needed here.
+
 The worklist kernel is the TPU half of the O(touched rows) tick runtime
 (`repro.core.worklist` + `repro.core.engine.WorklistBackend`; the flat
 (H*R, C) planes it consumes are the canonical STORED layout of

@@ -91,8 +91,12 @@ def worklist_row_update(zij, eij, pij, wij, tij, rows, nv, now, counts, zj,
     region so a padding grid step can never revisit (and, in interpret
     mode, clobber) a row a valid entry updated. The alignment padding is the
     one remaining per-call copy: storing the planes pre-aligned (+ junk row)
-    would make this zero-copy thanks to input_output_aliases — the next
-    layout step if TPU profiles show the pad dominating.
+    would make this zero-copy thanks to input_output_aliases — partly
+    realized in PR 8 by the degenerate (Tc == 1) `core.layout.BlockedLayout`:
+    its stored tiles reshape to a plane already aligned in lanes and
+    8-multiple rows (`BlockedLayout.flat_view`; the engine remaps the
+    row-index stream via `BlockedLayout.pad_row_index`), leaving only this
+    wrapper's >=1 junk-row tail as a per-call pad.
     """
     backend = backend or default_backend()
     HR, C = zij.shape

@@ -11,6 +11,10 @@ SRC = str(Path(__file__).resolve().parents[1] / "src")
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    # the forced host-device count only means anything on the CPU platform;
+    # pin it so a machine with an accelerator plugin (e.g. a baked-in libtpu)
+    # doesn't spend minutes probing hardware this test never uses
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
     import numpy as np, jax, jax.numpy as jnp
     from repro.core import *
     from repro.core import distributed as DD
@@ -85,6 +89,8 @@ def test_distributed_matches_single_device():
 # (The historical `_local_tick` duplicated the tick body and was only
 # allclose-checked on the lazy path.)
 ONE_DEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")  # see SCRIPT above
     import numpy as np, jax, jax.numpy as jnp
     from repro.core import *
     from repro.core import distributed as DD

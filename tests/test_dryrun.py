@@ -15,6 +15,10 @@ SRC = str(Path(__file__).resolve().parents[1] / "src")
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    # forced host devices only mean anything on the CPU platform; pin it so
+    # a machine with an accelerator plugin (e.g. a baked-in libtpu) doesn't
+    # spend minutes probing hardware this test never uses
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
     import json
     from repro.launch.dryrun import lower_cell, lower_bcpnn
     compiled, text, rec = lower_cell("xlstm-125m", "decode_32k",

@@ -24,7 +24,12 @@ def _run(script: str) -> subprocess.CompletedProcess:
     return subprocess.run([sys.executable, "-c", script],
                           capture_output=True, text=True,
                           env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-                               "HOME": "/root"})
+                               "HOME": "/root",
+                               # forced host devices only mean anything on
+                               # the CPU platform; without the pin a machine
+                               # with an accelerator plugin (e.g. a baked-in
+                               # libtpu) probes hardware for minutes per test
+                               "JAX_PLATFORMS": "cpu"})
 
 
 def test_elastic_device_count():

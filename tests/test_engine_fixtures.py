@@ -92,6 +92,29 @@ def test_trajectory_matches_pre_refactor(name):
     _assert_matches(state, fired, d, name)
 
 
+LAYOUT_CASES = [c for c in ("lazy_dense", "lazy_worklist", "merged_dense",
+                            "merged_worklist")]
+
+
+@pytest.mark.parametrize("name", LAYOUT_CASES)
+@pytest.mark.parametrize("tile", [(8, 4), (7, 5)])
+def test_trajectory_layout_invariant(name, tile):
+    """The PR 8 contract: plane storage order is NOT semantics. The same
+    fixtures that pin the flat runtime must reproduce bitwise when the
+    planes are stored column-blocked (Row-Merge tiles) — including a
+    non-divisible tile, where pad cells exist but never feed compute."""
+    from repro.core import layout as L
+    p, kw, _ = CASES[name]
+    lay = L.BlockedLayout(rows=p.rows, cols=p.cols, xr=tile[0], xc=tile[1])
+    d = np.load(FIXTURES / f"head_{name}.npz")
+    state = init_network(p, jax.random.PRNGKey(0),
+                         merged=kw.get("merged", False), layout=lay)
+    state, fired = network_run(state, _conn(d), jnp.asarray(d["ext"]), p,
+                               chunk=13, layout=lay, **kw)
+    state = state._replace(hcus=L.load_hcus(state.hcus, lay))
+    _assert_matches(state, fired, d, f"{name}:blocked{tile}")
+
+
 def test_sharded_trajectory_matches_pre_refactor():
     """Both sharded backends vs the pre-refactor sharded runtime (subprocess:
     device count must be set before jax initializes)."""

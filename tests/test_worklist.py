@@ -235,6 +235,31 @@ def test_pallas_interpret_fused_megakernel_matches_vmap_path():
     _assert_bitwise(sa, fa, sb, fb)
 
 
+@pytest.mark.parametrize("xr", [8, 7])
+def test_pallas_interpret_blocked_layout_matches_flat(xr):
+    """The TPU story for the blocked layout: at a degenerate (Tc == 1)
+    tile the stored plane is a pure reshape of the row-padded flat plane
+    (`BlockedLayout.flat_view`), so the scalar-prefetch megakernels run
+    unmodified — only the row-index stream is remapped. The blocked
+    pallas-interpret trajectory must equal the flat one bitwise; xr=7
+    forces row padding (junk rows + sentinel remap)."""
+    from repro.core import layout as L
+    ext = _ext_tensor(LAZY_P, seed=3, n_ticks=12, lam=3.0)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(LAZY_P, jax.random.fold_in(key, 1))
+    lay = L.BlockedLayout(rows=LAZY_P.rows, cols=LAZY_P.cols, xr=xr, xc=128)
+    assert lay.tpu_degenerate
+    assert (lay.padded_rows > LAZY_P.rows) == (xr == 7)
+    sa, fa = network_run(init_network(LAZY_P, key), conn, ext, LAZY_P,
+                         chunk=12, worklist=True, fused=True,
+                         backend="pallas_interpret")
+    sb, fb = network_run(init_network(LAZY_P, key, layout=lay), conn, ext,
+                         LAZY_P, chunk=12, worklist=True, fused=True,
+                         backend="pallas_interpret", layout=lay)
+    sb = sb._replace(hcus=L.load_hcus(sb.hcus, lay))
+    _assert_bitwise(sa, fa, sb, fb)
+
+
 def test_pallas_interpret_worklist_matches_vmap_path():
     """The non-fused scalar-prefetch Pallas worklist kernel (interpret mode)
     must reproduce the vmapped pallas-interpret path exactly: both run the
