@@ -53,11 +53,14 @@ check-pycache:
 # per-phase ablation artifact + the human_col column-phase gate (the phase
 # the PR 8 column-blocked layout targets) -> the Fig 10 layout benchmark
 # (BENCH_layout.json: paper DRAM model + tile models + measured CPU
-# flat/blocked A/B) -> resilience telemetry + gate (the fault-injection
-# tests already ran inside `test`)
+# flat/blocked A/B) -> the serving benchmark (BENCH_serving.json:
+# continuous-batching recall QPS at rodent16) + its QPS-at-SLO gate ->
+# resilience telemetry + gate (the fault-injection tests already ran
+# inside `test`)
 ci-local: check-pycache test bench
 	git show HEAD:BENCH_tick_loop.json > /tmp/BENCH_committed.json
 	git show HEAD:BENCH_phase_breakdown.json > /tmp/BENCH_phase_committed.json
+	git show HEAD:BENCH_serving.json > /tmp/BENCH_serving_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast --json --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
 		--committed /tmp/BENCH_committed.json
@@ -66,5 +69,9 @@ ci-local: check-pycache test bench
 		--committed /tmp/BENCH_committed.json \
 		--phase-committed /tmp/BENCH_phase_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.fig10_rowmerge --legacy-cpu
+	PYTHONPATH=src $(PY) -m benchmarks.serve_bcpnn --legacy-cpu
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		--committed /tmp/BENCH_committed.json \
+		--serving-committed /tmp/BENCH_serving_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.resilience --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.check_resilience

@@ -3,19 +3,29 @@
   PYTHONPATH=src python -m benchmarks.check_regression \
       --committed /tmp/BENCH_committed.json [--fresh BENCH_tick_loop.json] \
       [--phase-committed /tmp/BENCH_phase_committed.json \
-       --phase-fresh BENCH_phase_breakdown.json]
+       --phase-fresh BENCH_phase_breakdown.json] \
+      [--serving-committed /tmp/BENCH_serving_committed.json \
+       --serving-fresh BENCH_serving.json]
 
-Two gates, both with the same headroom philosophy — 1.25x absorbs CI-runner
-noise while still catching the step-function regressions that matter (a
-lost in-place alias or an accidental full-plane copy is 2x+, never 1.1x):
+Three gates, all with the same headroom philosophy — headroom absorbs
+CI-runner noise while still catching the step-function regressions that
+matter (a lost in-place alias or an accidental full-plane copy is 2x+,
+never 1.1x):
 
   * tick loop — any gated size's `scan_us_per_tick` in BENCH_tick_loop.json
-    vs the committed baseline;
+    vs the committed baseline (1.25x headroom);
   * column phase (optional, when --phase-committed is given) — the
     human_col `column_update` scan-context ablation delta in
     BENCH_phase_breakdown.json. This is the phase the PR 8 column-blocked
     layout targets, gated so a later change can't silently hand the
-    Row-Merge win back (docs/BENCHMARKING.md).
+    Row-Merge win back (docs/BENCHMARKING.md);
+  * serving throughput (optional, when --serving-committed is given) — the
+    rodent16 `qps_at_slo` in BENCH_serving.json. This gate is INVERTED
+    (higher is better): it fails when the fresh throughput drops below
+    committed/headroom, and unconditionally when qps_at_slo == 0 (the p95
+    sojourn missed the SLO — a latency blow-up, not just slowness).
+    Throughput on shared runners is noisier than the min-estimator tick
+    numbers, hence the wider 2x headroom.
 
 Fails (exit 1) on any regression beyond the headroom factor.
 """
@@ -30,6 +40,8 @@ METRIC = "scan_us_per_tick"
 # (size, ablated phase) pairs gated when a phase baseline is supplied
 GATED_PHASES = (("human_col", "column_update"),)
 HEADROOM = 1.25
+SERVING_METRIC = "qps_at_slo"
+SERVING_HEADROOM = 2.0
 
 
 def main() -> None:
@@ -43,7 +55,14 @@ def main() -> None:
                          "enables the column-phase gate")
     ap.add_argument("--phase-fresh", default="BENCH_phase_breakdown.json",
                     help="freshly measured phase-breakdown JSON")
+    ap.add_argument("--serving-committed", default=None,
+                    help="committed (baseline) serving JSON; enables the "
+                         "rodent16 QPS-at-SLO gate")
+    ap.add_argument("--serving-fresh", default="BENCH_serving.json",
+                    help="freshly measured serving JSON")
     ap.add_argument("--headroom", type=float, default=HEADROOM)
+    ap.add_argument("--serving-headroom", type=float,
+                    default=SERVING_HEADROOM)
     args = ap.parse_args()
 
     committed = json.load(open(args.committed))
@@ -70,6 +89,25 @@ def main() -> None:
                 failures.append(
                     f"{name}/ablation/{phase} {new:.1f} us exceeds committed "
                     f"{old:.1f} us by >{args.headroom:.2f}x")
+
+    if args.serving_committed:
+        sc = json.load(open(args.serving_committed))
+        sf = json.load(open(args.serving_fresh))
+        old = sc["rodent16"][SERVING_METRIC]
+        new = sf["rodent16"][SERVING_METRIC]
+        hr = args.serving_headroom
+        print(f"rodent16/{SERVING_METRIC}: committed {old:.2f} qps, fresh "
+              f"{new:.2f} qps (floor {old / hr:.2f} qps at "
+              f"{hr:.2f}x headroom)")
+        if new == 0:
+            failures.append(
+                f"rodent16/{SERVING_METRIC} is 0 — p95 sojourn "
+                f"{sf['rodent16']['p95_sojourn_ms']:.0f} ms missed the "
+                f"{sf['rodent16']['slo_ms']:.0f} ms SLO")
+        elif new < old / hr:
+            failures.append(
+                f"rodent16/{SERVING_METRIC} {new:.2f} qps below committed "
+                f"{old:.2f} qps by >{hr:.2f}x")
 
     if failures:
         sys.exit("perf regression: " + "; ".join(failures))

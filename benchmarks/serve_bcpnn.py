@@ -1,0 +1,210 @@
+"""Serving benchmark: continuous-batching recall QPS at rodent16.
+
+  PYTHONPATH=src python -m benchmarks.serve_bcpnn [--legacy-cpu] [--fast]
+
+Measures the whole serving path (`repro.launch.serve_bcpnn`) end to end and
+writes BENCH_serving.json for CI trending + the QPS-at-SLO regression gate
+(`benchmarks/check_regression.py --serving-committed`):
+
+  1. train the associative memory at the rodent16 benchmark dimensions
+     (the tick-loop size preset with the assoc-protocol dynamics — slow P
+     traces, soft WTA — swapped in; dims are what price a tick, dynamics
+     are what make recall converge);
+  2. serve >= 1000 synthetic client sessions (partial cues of the trained
+     patterns) through a BCPNNRecallServer, paced closed-loop against
+     `queue.free` so no request is rejected;
+  3. report throughput (qps), latency percentiles, the drop-budget health
+     verdict, and recall accuracy of the served sessions.
+
+The gated metric is qps_at_slo: the measured throughput if the p95 sojourn
+(submit -> finish, queueing included) met the SLO, else 0.0 — so CI fails
+both on a throughput collapse and on a latency blow-up.
+
+A warmup server with identical configuration runs first: `_serve_step` and
+`write_sessions` are module-level jits, so the measured server hits a warm
+jit cache and the numbers exclude compilation (same discipline as the
+tick-loop benchmark's scan warmup).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+
+N_PATTERNS = 3
+TRAIN_REPS = 10
+CUE_FRACTION = 0.6
+# sojourn SLO (queueing included): with the default queue_capacity=32 the
+# closed-loop pacing keeps ~a full queue waiting, so p95 sojourn is about
+# queue_capacity/qps (~10 s measured) — the SLO bounds that at 2x for CI
+# noise; a latency blow-up beyond it zeroes qps_at_slo and fails the gate
+SLO_MS = 20000.0
+
+
+def _serving_params():
+    """rodent16 dimensions (benchmarks/tick_loop.RODENT) with the
+    assoc-memory dynamics from `repro.experiments.assoc_params`."""
+    from benchmarks.tick_loop import RODENT
+    _, p = RODENT
+    return dataclasses.replace(p, mean_delay=1.5, out_rate=1.0,
+                               wta_temp=0.25, tau_p=400.0)
+
+
+def _make_clients(p, patterns, n_clients, budget_ticks, seed=0):
+    """Synthetic client sessions: partial cues of the trained patterns.
+    Returns (requests, pattern-id per rid)."""
+    import numpy as np
+    from repro.launch.serve_bcpnn import RecallRequest
+
+    rng = np.random.default_rng(seed)
+    reqs, pids = [], []
+    for rid in range(n_clients):
+        pid = rid % len(patterns)
+        mask = rng.random(p.n_hcu) < CUE_FRACTION
+        reqs.append(RecallRequest(rid, np.asarray(patterns[pid], np.int32),
+                                  mask, budget_ticks=budget_ticks))
+        pids.append(pid)
+    return reqs, pids
+
+
+def _recall_accuracy(p, done, pids, attractor):
+    """Pattern-completion score over the UNDRIVEN HCUs of every completed
+    session (same probe as experiments.recall_accuracy)."""
+    import numpy as np
+
+    correct = total = 0
+    for req in done:
+        att = attractor[pids[req.rid]]
+        probe = ~np.asarray(req.cue_mask, bool) & (req.winners >= 0) \
+            & (att >= 0)
+        correct += int((req.winners[probe] == att[probe]).sum())
+        total += int(probe.sum())
+    return correct, total
+
+
+def measure(n_clients, *, slots=8, queue_capacity=32, step_ticks=12,
+            budget_ticks=48, train_reps=TRAIN_REPS, slo_ms=SLO_MS):
+    import numpy as np
+    from repro.core import Simulator
+    from repro.data import make_patterns
+    from repro.experiments import train_assoc
+    from repro.launch.serve_bcpnn import BCPNNRecallServer
+
+    p = _serving_params()
+    sim = Simulator(p, key=0, cap_fire=p.n_hcu)
+    patterns = make_patterns(p, N_PATTERNS, seed=3)
+    t0 = time.perf_counter()
+    attractor = train_assoc(sim, patterns, reps=train_reps)
+    print(f"serve/train: {N_PATTERNS} patterns x {train_reps} reps "
+          f"in {time.perf_counter() - t0:.1f} s")
+
+    def serve(requests, req_rate):
+        srv = BCPNNRecallServer(sim, slots=slots,
+                                queue_capacity=queue_capacity,
+                                step_ticks=step_ticks, req_rate=req_rate)
+        pending = list(requests)
+        while pending or srv.busy:
+            while pending and srv.queue.free > 0:
+                srv.submit(pending.pop(0))
+            srv.step()
+        return srv
+
+    # warmup: identical server configuration -> the measured run hits a
+    # warm jit cache (_serve_step / write_sessions are module-level jits)
+    warm_reqs, _ = _make_clients(p, patterns, 2 * slots, budget_ticks,
+                                 seed=99)
+    t0 = time.perf_counter()
+    serve(warm_reqs, req_rate=0.0)
+    print(f"serve/warmup: {2 * slots} sessions (compile) "
+          f"in {time.perf_counter() - t0:.1f} s")
+
+    reqs, pids = _make_clients(p, patterns, n_clients, budget_ticks)
+    t0 = time.perf_counter()
+    srv = serve(reqs, req_rate=n_clients)   # paced lossless: rate ~ load
+    wall_s = time.perf_counter() - t0
+
+    s = srv.stats(slo_ms=slo_ms)
+    qps = s["completed"] / wall_s
+    correct, total = _recall_accuracy(p, srv.completed, pids, attractor)
+    out = {
+        "n_clients": n_clients,
+        "completed": s["completed"],
+        "done": s["done"],
+        "expired": s["expired"],
+        "wall_s": wall_s,
+        "qps": qps,
+        "p50_service_ms": s["p50_service_ms"],
+        "p95_service_ms": s["p95_service_ms"],
+        "p50_sojourn_ms": s["p50_sojourn_ms"],
+        "p95_sojourn_ms": s["p95_sojourn_ms"],
+        "slo_ms": slo_ms,
+        "slo_met": s["slo_met"],
+        "qps_at_slo": qps if s["slo_met"] else 0.0,
+        "recall_correct": correct,
+        "recall_total": total,
+        "recall_acc": correct / max(total, 1),
+        "chance": 1.0 / p.cols,
+        "queue": s["queue"],
+        "health": s["health"],
+    }
+    cfg = {"size": "rodent16", "n_hcu": p.n_hcu, "rows": p.rows,
+           "cols": p.cols, "fanout": p.fanout, "slots": slots,
+           "queue_capacity": queue_capacity, "step_ticks": step_ticks,
+           "budget_ticks": budget_ticks, "n_patterns": N_PATTERNS,
+           "train_reps": train_reps, "cue_fraction": CUE_FRACTION,
+           "dynamics": "assoc (wta_temp=0.25, tau_p=400, mean_delay=1.5, "
+                       "out_rate=1.0)"}
+    print(f"serve/rodent16: {out['completed']} sessions "
+          f"({out['done']} converged, {out['expired']} expired) in "
+          f"{wall_s:.1f} s = {qps:.1f} qps, p95 sojourn "
+          f"{out['p95_sojourn_ms']:.0f} ms (SLO {slo_ms:.0f} ms, "
+          f"met={out['slo_met']}), recall {correct}/{total} "
+          f"(acc={out['recall_acc']:.2f}, chance {out['chance']:.3f}), "
+          f"health={out['health']['status']}")
+    return out, cfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=1000)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--queue", type=int, default=32)
+    ap.add_argument("--step-ticks", type=int, default=12)
+    ap.add_argument("--budget", type=int, default=48)
+    ap.add_argument("--slo-ms", type=float, default=SLO_MS)
+    ap.add_argument("--fast", action="store_true",
+                    help="few clients, short training (smoke test; do not "
+                         "commit the resulting JSON)")
+    ap.add_argument("--legacy-cpu", action="store_true",
+                    help="pin the legacy XLA CPU runtime (the configuration "
+                         "the committed numbers were measured with)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: <repo>/BENCH_serving.json)")
+    args = ap.parse_args()
+    if args.legacy_cpu:
+        from benchmarks.run import pin_legacy_cpu_runtime
+        pin_legacy_cpu_runtime()
+
+    n_clients = 48 if args.fast else args.clients
+    train_reps = 3 if args.fast else TRAIN_REPS
+    result, cfg = measure(n_clients, slots=args.slots,
+                          queue_capacity=args.queue,
+                          step_ticks=args.step_ticks,
+                          budget_ticks=args.budget,
+                          train_reps=train_reps, slo_ms=args.slo_ms)
+
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+    out.write_text(json.dumps({
+        "schema": 1,
+        "config": cfg,
+        "rodent16": result,
+    }, indent=2) + "\n")
+    print(f"# wrote {out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,9 @@ Public API:
   HCUState, init_hcu_state, hcu_tick_pre, column_update, flush — HCU semantics
   NetworkState, init_network, make_connectivity, network_tick, hcu_view
   network_run / stage_external — scan-compiled tick runtime (run = host loop)
+  stack_sessions / write_sessions / take_session — session-lane batching
+             (leading (S,) dim over NetworkState for the continuous-batching
+             recall server, repro.launch.serve_bcpnn)
   traces — closed-form lazy ZEP trace algebra
   RowMergeLayout / FlatLayout / BlockedLayout — synaptic data organization
              (plane storage order is pluggable: `layout=` on Simulator and
@@ -47,7 +50,8 @@ from repro.core.hcu import (HCUState, init_hcu_state, init_hcu_batch,
 from repro.core.network import (NetworkState, Connectivity, init_network,
                                 make_connectivity, network_tick, network_run,
                                 stage_external, run, enqueue_spikes,
-                                hcu_view, select_fired)
+                                hcu_view, select_fired, stack_sessions,
+                                write_sessions, take_session)
 from repro.core.layout import (RowMergeLayout, FlatLayout, BlockedLayout,
                                batched_state, flat_state)
 from repro.core.engine import (Simulator, TickBackend, DenseBackend,
@@ -64,6 +68,7 @@ __all__ = [
     "NetworkState", "Connectivity", "init_network", "make_connectivity",
     "network_tick", "network_run", "stage_external", "run",
     "enqueue_spikes", "hcu_view", "select_fired", "column_updates_batched",
+    "stack_sessions", "write_sessions", "take_session",
     "RowMergeLayout", "FlatLayout", "BlockedLayout", "batched_state",
     "flat_state", "traces", "queues", "worklist",
 ]

@@ -258,6 +258,50 @@ def select_fired(fired: jnp.ndarray, cap: int):
 
 
 # ---------------------------------------------------------------------------
+# session batching (serving): a leading (S,) lane dim over NetworkState
+# ---------------------------------------------------------------------------
+
+def stack_sessions(state: NetworkState, n_sessions: int) -> NetworkState:
+    """Replicate one NetworkState into `n_sessions` independent session
+    lanes: every leaf gains a leading (S,) batch dim.
+
+    Each lane then evolves under its own per-session external stream — the
+    state layout the continuous-batching recall server
+    (`repro.launch.serve_bcpnn`) carries. Lanes must be advanced with
+    `jax.lax.map` (NOT vmap): lax.map runs one lane at a time with exactly
+    the single-session `_run_chunk` graph and shapes, so lane trajectories
+    stay bitwise identical to independent `Simulator.run` calls; vmap would
+    fuse across lanes, and XLA:CPU fused codegen is 1-ulp context-sensitive
+    (docs/NUMERICS.md).
+    """
+    def rep(a):
+        a = jnp.asarray(a)
+        return jnp.repeat(a[None], n_sessions, axis=0)
+    return jax.tree.map(rep, state)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_sessions(stacked: NetworkState, template: NetworkState,
+                   lanes: jnp.ndarray) -> NetworkState:
+    """Scatter a fresh `template` into the session lanes named by `lanes`
+    ((K,) int32; out-of-range entries are dropped, so pad with S to write
+    fewer than K lanes with one compiled shape). The stacked state is
+    donated: slot recycling writes freed lanes in place — admission never
+    copies the other lanes or recompiles."""
+    def put(st, tp):
+        tp = jnp.asarray(tp)
+        rep = jnp.broadcast_to(tp[None], (lanes.shape[0],) + tp.shape)
+        return st.at[lanes].set(rep, mode="drop")
+    return jax.tree.map(put, stacked, template)
+
+
+def take_session(stacked: NetworkState, lane: int) -> NetworkState:
+    """One session lane back as a plain single-session NetworkState
+    (inspection / the bitwise-vs-Simulator serving tests)."""
+    return jax.tree.map(lambda a: a[lane], stacked)
+
+
+# ---------------------------------------------------------------------------
 # execution drivers (thin wrappers over engine.tick)
 # ---------------------------------------------------------------------------
 

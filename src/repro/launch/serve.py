@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.models.transformer import Model
+from repro.models.transformer import Model, build_stack_spec
 from repro.train.serve_step import make_decode_step, make_prefill, sample
 
 
@@ -43,6 +43,10 @@ class ServingEngine:
         self.max_len = max_len
         self.prefill = jax.jit(make_prefill(model))
         self.decode = jax.jit(make_decode_step(model, temperature))
+        # ragged (mixed prompt lengths per wave) needs the pad mask to reach
+        # every mixer in the stack; only the cached-attention kinds honour it
+        kinds = {k for pat, _ in build_stack_spec(model.cfg) for k in pat}
+        self.ragged = kinds <= {"attn", "attn_local", "attn_moe"}
         self.queue: list[Request] = []
         self.completed: list[Request] = []
         self.steps = 0
@@ -50,23 +54,47 @@ class ServingEngine:
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def run(self):
-        """Drain the queue in waves of `slots` requests (same prompt len)."""
-        while self.queue:
-            wave = [self.queue.pop(0) for _ in range(min(self.slots,
+    def _next_wave(self):
+        if self.ragged:
+            return [self.queue.pop(0) for _ in range(min(self.slots,
                                                          len(self.queue)))]
-            self._run_wave(wave)
+        # non-attention stacks: group a wave of equal prompt lengths,
+        # skipping over mismatched requests without reordering them
+        wave, rest = [], []
+        plen = len(self.queue[0].prompt)
+        for r in self.queue:
+            if len(wave) < self.slots and len(r.prompt) == plen:
+                wave.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
+        return wave
+
+    def run(self):
+        """Drain the queue in FIFO waves of up to `slots` requests.
+
+        Attention-only stacks serve mixed prompt lengths in one wave
+        (left-padded, pad slots masked out of the KV cache); other stacks
+        fall back to grouping each wave by equal prompt length.
+        """
+        while self.queue:
+            self._run_wave(self._next_wave())
         return self.completed
 
     def _run_wave(self, wave):
         B = len(wave)
         plen = max(len(r.prompt) for r in wave)
+        pad_np = np.array([plen - len(r.prompt) for r in wave], np.int32)
+        if pad_np.any() and not self.ragged:
+            raise ValueError("mixed prompt lengths need an attention-only "
+                             "stack (recurrent mixers cannot mask left-pad)")
+        pad = jnp.asarray(pad_np) if pad_np.any() else None
         toks = np.zeros((B, plen), np.int32)
         for i, r in enumerate(wave):
             toks[i, -len(r.prompt):] = r.prompt       # left-pad
         caches = self.model.init_cache(B, self.max_len)
         batch = {"tokens": jnp.asarray(toks)}
-        logits, caches = self.prefill(self.params, batch, caches)
+        logits, caches = self.prefill(self.params, batch, caches, pad)
         key = jax.random.PRNGKey(0)
         tok = sample(logits, key)
         for i, r in enumerate(wave):
@@ -76,7 +104,7 @@ class ServingEngine:
             key = jax.random.fold_in(key, step)
             tok, logits, caches = self.decode(
                 self.params, tok, jnp.asarray(plen + step, jnp.int32),
-                caches, key)
+                caches, key, None, None, pad)
             self.steps += 1
             for i, r in enumerate(wave):
                 if not r.done and len(r.out) < r.max_new:

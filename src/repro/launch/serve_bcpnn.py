@@ -1,0 +1,430 @@
+"""BCPNN-as-a-service: slot-recycling continuous-batching recall server.
+
+  PYTHONPATH=src python -m repro.launch.serve_bcpnn --requests 32
+
+Many concurrent cue->attractor-recall sessions batched onto ONE shared
+compiled multi-tick graph — the BCPNN analogue of the LM `ServingEngine`
+(`repro.launch.serve`), and the "millions of users" direction of the
+ROADMAP north star. The pieces:
+
+  RecallRequest   one client session: a partial cue (pattern row per HCU +
+                  driven-HCU mask) and a tick budget; carries its own
+                  lifecycle telemetry (queue/admit/finish timestamps, fired
+                  trajectory, per-session drop counters).
+  RequestQueue    fixed-capacity FIFO admission queue — the serving analogue
+                  of the paper's spike queues (fixed slots, overflow is a
+                  counted rejection, priced by Fig 7 / EQ1 through
+                  `repro.runtime.resilience.ServingHealthMonitor`).
+  BCPNNRecallServer
+                  `slots` session lanes as a leading (S,) batch dim over
+                  `NetworkState` (`repro.core.network.stack_sessions`). Each
+                  engine step advances every lane `step_ticks` ticks through
+                  one jitted `jax.lax.map` over the per-lane scan
+                  (`_serve_step`). A session completes when its recall
+                  CONVERGES (every HCU has fired and no winner changed over
+                  a full step) or its tick budget expires; its lane is freed
+                  and the next queued cue is admitted by an in-place donated
+                  scatter (`write_sessions`) — no recompilation, no copy of
+                  the other lanes.
+
+Sharing model: the `Connectivity` fanout tables and the params are closure
+constants of the jitted step — ONE copy shared read-only across all lanes.
+The per-lane NetworkState is fully private (the tick writes the synaptic ij
+planes during recall, and the volatile j-vectors/delay queues are per-slot
+by construction), so lane trajectories are exactly independent runs.
+
+Bitwise contract (the serving analogue of the head-fixture discipline):
+each lane's trajectory is BITWISE identical to an independent
+single-session `Simulator.run` from the same template state, because
+`jax.lax.map` executes one lane at a time with exactly the single-session
+`network._run_chunk` graph and shapes — same code, same shapes, same
+per-tick RNG (`fold_in(base_key, t)` with per-lane `t`). vmap would fuse
+across lanes and break this (XLA:CPU 1-ulp context sensitivity,
+docs/NUMERICS.md). Pinned by tests/test_serve_bcpnn.py.
+
+Free lanes keep ticking on silence until recycled (like the LM engine's pad
+slots); their drops are not attributed to any session and their state is
+reset from the template on the next admission.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as E
+from repro.core import network as N
+from repro.runtime.resilience import ServingHealthMonitor
+
+
+# ---------------------------------------------------------------------------
+# the shared compiled step
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("p", "be", "cap_fire"),
+                   donate_argnums=(0,))
+def _serve_step(stacked, conn, ext, p, be, cap_fire):
+    """Advance every session lane by ext.shape[1] ticks in one dispatch.
+
+    stacked: NetworkState with a leading (S,) lane dim; ext: (S, T, H, W)
+    per-lane staged external input. Returns (stacked', fired (S, T, H)).
+    Per lane the graph is EXACTLY the single-session `network._run_chunk`
+    scan — see the module docstring's bitwise contract. The stacked state is
+    donated (in-place lane updates); `conn`/params are shared read-only.
+    """
+    def session_body(args):
+        state, e = args
+
+        def body(s, ee):
+            return E.tick(s, conn, ee, p, be, cap_fire)
+
+        st, fired = jax.lax.scan(body, be.carry_in(state, p), e)
+        return be.carry_out(st, p), fired
+
+    return jax.lax.map(session_body, (stacked, ext))
+
+
+def _step_winners(fired_step: np.ndarray) -> np.ndarray:
+    """Last WTA winner per HCU over one (T, H) step window (-1 = silent)."""
+    T, H = fired_step.shape
+    w = np.full((H,), -1, np.int64)
+    for f in fired_step:
+        upd = f >= 0
+        w[upd] = f[upd]
+    return w
+
+
+# ---------------------------------------------------------------------------
+# requests and the admission queue
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RecallRequest:
+    """One client session: cue in, attractor out, telemetry throughout."""
+    rid: int
+    cue_rows: np.ndarray            # (H,) int32 — pattern row per HCU
+    cue_mask: np.ndarray            # (H,) bool  — which HCUs the cue drives
+    budget_ticks: int = 48          # max biological ms before expiry
+    # lifecycle (filled in by the server)
+    status: str = "new"             # new|queued|rejected|active|done|expired
+    submit_s: float | None = None
+    admit_s: float | None = None
+    finish_s: float | None = None
+    ticks: int = 0                  # biological ms actually served
+    winners: np.ndarray | None = None   # (H,) final winner per HCU
+    fired: np.ndarray | None = None     # (ticks, H) fired trajectory
+    drops: dict | None = None           # per-session {'in','fire','route'}
+
+    @property
+    def service_ms(self) -> float | None:
+        """Wall milliseconds from admission to completion."""
+        if self.admit_s is None or self.finish_s is None:
+            return None
+        return (self.finish_s - self.admit_s) * 1e3
+
+    @property
+    def sojourn_ms(self) -> float | None:
+        """Wall milliseconds from submission to completion (incl. queueing)."""
+        if self.submit_s is None or self.finish_s is None:
+            return None
+        return (self.finish_s - self.submit_s) * 1e3
+
+
+class RequestQueue:
+    """Fixed-capacity FIFO admission queue with drop accounting.
+
+    The serving analogue of the delay-bucket spike queues: a fixed number of
+    waiting slots, overflow is a counted REJECTION (never silent loss), and
+    admission order is strictly FIFO. Invariants (pinned by
+    tests/test_serve_queue.py): admitted + rejected + waiting == submitted;
+    rejections happen exactly when the queue is at capacity at offer time.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._q: collections.deque = collections.deque()
+        self.submitted = 0
+        self.admitted = 0
+        self.rejected = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def free(self) -> int:
+        return self.capacity - len(self._q)
+
+    def offer(self, req: RecallRequest) -> bool:
+        """Submit a request; False (and req.status == 'rejected') if full."""
+        self.submitted += 1
+        if len(self._q) >= self.capacity:
+            self.rejected += 1
+            req.status = "rejected"
+            return False
+        req.status = "queued"
+        self._q.append(req)
+        return True
+
+    def take(self, k: int) -> list:
+        """Admit up to k requests, FIFO."""
+        out = []
+        while self._q and len(out) < k:
+            out.append(self._q.popleft())
+            self.admitted += 1
+        return out
+
+    def counters(self) -> dict:
+        return {"submitted": self.submitted, "admitted": self.admitted,
+                "rejected": self.rejected, "waiting": len(self._q),
+                "capacity": self.capacity}
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+
+class BCPNNRecallServer:
+    """Continuous-batching recall serving over `slots` session lanes.
+
+        sim = Simulator(p, key=0, cap_fire=p.n_hcu)
+        train_assoc(sim, patterns, ...)              # or any warmed state
+        srv = BCPNNRecallServer(sim, slots=8, queue_capacity=64)
+        srv.submit(RecallRequest(0, cue_rows, cue_mask))
+        done = srv.run()                             # drain to completion
+
+    The server snapshots `sim.state` as its session TEMPLATE at construction
+    (a true copy — the Simulator stays usable) and takes the backend/mode
+    configuration from the facade, so whatever engine mode the Simulator
+    runs (dense/worklist, lazy/eager, layouts) is what every lane runs.
+    """
+
+    def __init__(self, sim, *, slots: int = 4, queue_capacity: int = 64,
+                 step_ticks: int = 12, ext_width: int = 4,
+                 monitor: ServingHealthMonitor | None = None,
+                 req_rate: float = 0.0, clock=time.perf_counter):
+        if sim.merged:
+            raise NotImplementedError(
+                "serving: merged mode's jring carry is untested under "
+                "session stacking")
+        self.p = sim.p
+        self.n_hcu = sim.n_hcu
+        self.slots = int(slots)
+        self.step_ticks = int(step_ticks)
+        self.ext_width = int(ext_width)
+        self.conn = sim.conn
+        self.be = sim.backend
+        self.cap_fire = sim.cap_fire
+        self.clock = clock
+        # true copy: drivers donate sim.state, and on CPU jnp.asarray may
+        # alias a buffer a later donation would invalidate
+        self.template = jax.tree.map(lambda a: jnp.asarray(np.array(a)),
+                                     sim.state)
+        self.stacked = N.stack_sessions(self.template, self.slots)
+        self._base_drops = N.drop_counters(self.template)
+        self.queue = RequestQueue(queue_capacity)
+        self.active: list[RecallRequest | None] = [None] * self.slots
+        self._winners = np.full((self.slots, self.n_hcu), -1, np.int64)
+        self._traj: list[list[np.ndarray]] = [[] for _ in range(self.slots)]
+        self._drops_done = {"in": 0, "fire": 0, "route": 0}
+        self.completed: list[RecallRequest] = []
+        self.steps = 0
+        self.monitor = monitor if monitor is not None else \
+            ServingHealthMonitor(self.p, n_hcu=self.n_hcu * self.slots,
+                                 queue_capacity=int(queue_capacity),
+                                 req_rate=req_rate)
+        self.monitor.begin(self._cum_drops(None, None, None))
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, req: RecallRequest) -> bool:
+        req.submit_s = self.clock()
+        return self.queue.offer(req)
+
+    @property
+    def busy(self) -> bool:
+        return len(self.queue) > 0 or any(r is not None for r in self.active)
+
+    def run(self, requests=None) -> list[RecallRequest]:
+        """Submit `requests` (if given) and step until idle. Offers that
+        find the queue full are rejected — pace submissions against
+        `queue.free` for lossless closed-loop driving."""
+        for r in requests or ():
+            self.submit(r)
+        while self.busy:
+            self.step()
+        return self.completed
+
+    # -- engine step ---------------------------------------------------------
+    def step(self) -> list[RecallRequest]:
+        """Admit, advance every lane `step_ticks` ticks, retire finished
+        sessions. Returns the sessions completed by this step."""
+        now = self.clock()
+        free = [i for i, r in enumerate(self.active) if r is None]
+        newly = self.queue.take(len(free))
+        if newly:
+            # fixed-shape admission scatter: unused entries padded out of
+            # range (mode="drop") so one compiled shape serves any fill
+            lanes = np.full((len(free),), self.slots, np.int32)
+            for i, req in enumerate(newly):
+                lane = free[i]
+                lanes[i] = lane
+                self.active[lane] = req
+                req.status = "active"
+                req.admit_s = now
+                self._winners[lane] = -1
+                self._traj[lane] = []
+            self.stacked = N.write_sessions(self.stacked, self.template,
+                                            jnp.asarray(lanes))
+        if not any(r is not None for r in self.active):
+            return []
+
+        ext = np.full((self.slots, self.step_ticks, self.n_hcu,
+                       self.ext_width), self.p.rows, np.int32)
+        for lane, req in enumerate(self.active):
+            if req is None:
+                continue
+            frame = np.full((self.n_hcu, self.ext_width), self.p.rows,
+                            np.int32)
+            mask = np.asarray(req.cue_mask, bool)
+            frame[mask, 0] = np.asarray(req.cue_rows, np.int32)[mask]
+            ext[lane] = frame[None]
+        self.monitor.chunk_start(self.step_ticks)
+        self.stacked, fired = _serve_step(self.stacked, self.conn,
+                                          jnp.asarray(ext), self.p, self.be,
+                                          self.cap_fire)
+        fired = np.asarray(fired)
+        self.steps += 1
+
+        d_in = np.asarray(self.stacked.drops_in)
+        d_fire = np.asarray(self.stacked.drops_fire)
+        d_route = (np.asarray(self.stacked.drops_route)
+                   if self.stacked.drops_route is not None
+                   else np.zeros((self.slots,), np.int64))
+        now = self.clock()
+        done_now = []
+        for lane, req in enumerate(self.active):
+            if req is None:
+                continue
+            f = fired[lane]
+            self._traj[lane].append(f)
+            step_w = _step_winners(f)
+            upd = step_w >= 0
+            changed = bool((step_w[upd] != self._winners[lane][upd]).any())
+            self._winners[lane][upd] = step_w[upd]
+            req.ticks += self.step_ticks
+            # converged: every HCU has expressed a winner and a full step
+            # passed without any winner flipping (a stable attractor);
+            # unreachable on the very first step (winners start at -1)
+            converged = (not changed) and bool((self._winners[lane] >= 0).all())
+            if converged or req.ticks >= req.budget_ticks:
+                req.status = "done" if converged else "expired"
+                req.finish_s = now
+                req.winners = self._winners[lane].copy()
+                req.fired = np.concatenate(self._traj[lane], axis=0)
+                req.drops = {
+                    "in": int(d_in[lane]) - self._base_drops["in"],
+                    "fire": int(d_fire[lane]) - self._base_drops["fire"],
+                    "route": int(d_route[lane]) - self._base_drops["route"],
+                }
+                for k, v in req.drops.items():
+                    self._drops_done[k] += v
+                self.active[lane] = None
+                self._traj[lane] = []
+                self.completed.append(req)
+                done_now.append(req)
+        self.monitor.chunk_end(self.step_ticks,
+                               self._cum_drops(d_in, d_fire, d_route))
+        return done_now
+
+    # -- accounting ----------------------------------------------------------
+    def _cum_drops(self, d_in, d_fire, d_route) -> dict:
+        """Cumulative session-attributed drops + request rejections, the
+        dict the HealthMonitor prices per class. Free lanes (ticking on
+        silence between sessions) are unattributed by design."""
+        cum = dict(self._drops_done)
+        if d_in is not None:
+            for lane, req in enumerate(self.active):
+                if req is None:
+                    continue
+                cum["in"] += int(d_in[lane]) - self._base_drops["in"]
+                cum["fire"] += int(d_fire[lane]) - self._base_drops["fire"]
+                cum["route"] += int(d_route[lane]) - self._base_drops["route"]
+        cum["reject"] = self.queue.rejected
+        return cum
+
+    def stats(self, slo_ms: float | None = None) -> dict:
+        """Structured serving report: queue counters, completion mix,
+        latency percentiles, and the per-class drop-budget health verdict
+        (schema in docs/SERVING.md)."""
+        done = [r for r in self.completed if r.finish_s is not None]
+        service = np.sort([r.service_ms for r in done]) if done else np.array([])
+        sojourn = np.sort([r.sojourn_ms for r in done]) if done else np.array([])
+
+        def pct(a, q):
+            return float(np.percentile(a, q)) if a.size else None
+
+        out = {
+            "slots": self.slots,
+            "step_ticks": self.step_ticks,
+            "steps": self.steps,
+            "queue": self.queue.counters(),
+            "completed": len(done),
+            "done": sum(r.status == "done" for r in done),
+            "expired": sum(r.status == "expired" for r in done),
+            "p50_service_ms": pct(service, 50),
+            "p95_service_ms": pct(service, 95),
+            "p50_sojourn_ms": pct(sojourn, 50),
+            "p95_sojourn_ms": pct(sojourn, 95),
+            "health": self.monitor.report(),
+        }
+        if slo_ms is not None:
+            out["slo_ms"] = float(slo_ms)
+            p95 = out["p95_sojourn_ms"]
+            out["slo_met"] = bool(p95 is not None and p95 <= slo_ms)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# demo CLI (toy scale; the measured benchmark is benchmarks/serve_bcpnn.py)
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    from repro.core import Simulator, test_scale
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--queue", type=int, default=8)
+    ap.add_argument("--step-ticks", type=int, default=8)
+    ap.add_argument("--budget", type=int, default=32)
+    args = ap.parse_args()
+
+    p = test_scale(n_hcu=8, rows=64, cols=8)
+    sim = Simulator(p, key=0, cap_fire=p.n_hcu)
+    srv = BCPNNRecallServer(sim, slots=args.slots, queue_capacity=args.queue,
+                            step_ticks=args.step_ticks)
+    rng = np.random.default_rng(0)
+    pending = [RecallRequest(rid, rng.integers(0, p.rows, p.n_hcu),
+                             rng.random(p.n_hcu) < 0.6,
+                             budget_ticks=args.budget)
+               for rid in range(args.requests)]
+    t0 = time.perf_counter()
+    while pending or srv.busy:
+        while pending and srv.queue.free > 0:
+            srv.submit(pending.pop(0))
+        srv.step()
+    dt = time.perf_counter() - t0
+    s = srv.stats()
+    print(f"served {s['completed']} sessions ({s['done']} converged, "
+          f"{s['expired']} expired) in {dt:.2f}s "
+          f"({s['completed']/dt:.1f} qps), p95 service "
+          f"{s['p95_service_ms']:.0f} ms, health={s['health']['status']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -156,13 +156,20 @@ def _sdpa_chunked(q, k, v, mask, softcap, scale, chunk: int):
 
 def attend(params, x, cfg: ArchConfig, *, positions, kv=None, kv_positions=None,
            causal=True, sliding_window=None, cache: Optional[KVCache] = None,
-           update_cache: bool = False):
+           update_cache: bool = False, pad=None):
     """Unified attention entry point.
 
     Self-attention: kv=None. Cross-attention: kv=(memory, memory_positions),
     causal=False. With `cache` and Sq==1 this is an incremental decode step;
     with `cache` and update_cache=True it is a prefill that fills the cache.
     Returns (out (B,Sq,D), new_cache).
+
+    `pad` ((B,) int32 per-row LEFT-pad lengths) serves ragged batches out of
+    one cache: the caller passes positions already shifted by -pad (so rope
+    angles and causal order are per-row logical positions), and here the
+    first pad[b] cache slots of row b are masked invalid and kv positions
+    are shifted to match. Only meaningful on the cached self-attention path;
+    pad=None leaves every graph exactly as before.
     """
     B, Sq, D = x.shape
     H, Kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
@@ -208,8 +215,14 @@ def attend(params, x, cfg: ArchConfig, *, positions, kv=None, kv_positions=None,
     Skv = k.shape[1]
     q_pos = positions if positions.ndim == 2 else positions[None, :]
     if cache is not None and kv is None:
-        kv_pos = jnp.arange(Skv)[None, :]
-        valid = kv_pos < cache.length
+        idx = jnp.arange(Skv)[None, :]
+        valid = idx < cache.length
+        kv_pos = idx
+        if pad is not None:
+            # ragged wave: row b's cache holds pad[b] dead slots before its
+            # real prompt; mask them out and shift kv to logical positions
+            valid = valid & (idx >= pad[:, None])
+            kv_pos = idx - pad[:, None]
     else:
         kv_pos = (kv_positions if kv_positions is not None
                   else jnp.arange(Skv))[None, :]
@@ -224,7 +237,8 @@ def attend(params, x, cfg: ArchConfig, *, positions, kv=None, kv_positions=None,
     scale = cfg.query_scale if cfg.query_scale else hd ** -0.5
     qg = q.reshape(B, Sq, Kv, G, hd)
     use_flash = (cfg.attn_impl == "pallas_flash" and Sq > 1 and kv is None
-                 and causal and Sq % 128 == 0 and Skv % 128 == 0)
+                 and causal and Sq % 128 == 0 and Skv % 128 == 0
+                 and pad is None)   # flash path has no per-row pad mask
     if use_flash:
         out = _sdpa_flash(qg, k, v, cfg, scale, sliding_window,
                           cache.length if cache is not None else None)

@@ -153,8 +153,11 @@ def init_cache_for_kind(cfg: ArchConfig, kind: str, batch: int, max_len: int):
 
 def apply_block(p, x, cfg: ArchConfig, kind: str, *, positions,
                 memory=None, memory_positions=None, cache=None,
-                shared_params=None, decode: bool = False):
-    """Apply one block; returns (x, new_cache, aux_losses)."""
+                shared_params=None, decode: bool = False, pad=None):
+    """Apply one block; returns (x, new_cache, aux_losses). `pad` ((B,)
+    int32 left-pad lengths, ragged serving waves) reaches only the cached
+    self-attention — recurrent mixers have no pad-mask equivalent, so the
+    serving engine restricts ragged waves to attention-only stacks."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "shared_attn":
         p = dict(shared_params)
@@ -163,7 +166,7 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *, positions,
         h = rms_norm(x, p["norm1"], cfg.rms_eps)
         a, cache = attend(p["attn"], h, cfg, positions=positions,
                           causal=(kind != "enc_attn"), sliding_window=sw,
-                          cache=cache)
+                          cache=cache, pad=pad)
         x = x + a
         h = rms_norm(x, p["norm2"], cfg.rms_eps)
         if kind == "attn_moe":
@@ -183,7 +186,7 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *, positions,
     if kind == "dec_cross":
         h = rms_norm(x, p["norm1"], cfg.rms_eps)
         a, cache = attend(p["attn"], h, cfg, positions=positions, causal=True,
-                          cache=cache)
+                          cache=cache, pad=pad)
         x = x + a
         h = rms_norm(x, p["norm_x"], cfg.rms_eps)
         a, _ = attend(p["xattn"], h, cfg, positions=positions, kv=memory,
@@ -295,7 +298,8 @@ class Model:
 
     # ---------------- shared stack runner ----------------
     def _run_stack(self, params, x, *, positions, memory=None,
-                   memory_positions=None, caches=None, decode=False):
+                   memory_positions=None, caches=None, decode=False,
+                   pad=None):
         cfg = self.cfg
         spec = build_stack_spec(cfg)
         shared = params.get("shared_attn")
@@ -322,7 +326,7 @@ class Model:
                         ps[pi], xx, cfg, kind,
                         positions=positions, memory=memory,
                         memory_positions=memory_positions, cache=c_in,
-                        shared_params=shared, decode=decode)
+                        shared_params=shared, decode=decode, pad=pad)
                     aux_step = aux_step + aux
                     new_cs.append(c_out if has_cache else ())
                 return (xx, aux_acc + aux_step), tuple(new_cs)
@@ -419,30 +423,40 @@ class Model:
             caches.append(seg)
         return caches
 
-    def prefill(self, params, batch, caches):
+    def prefill(self, params, batch, caches, pad=None):
+        """`pad` ((B,) int32 left-pad lengths) serves a ragged wave out of
+        one batch: row b's first pad[b] tokens are padding, its logical
+        positions run (-pad[b] .. S-1-pad[b]) so the real prompt is 0-based,
+        and the pad cache slots are masked out downstream (layers.attend).
+        pad=None is bitwise the pre-pad graph."""
         tokens = batch["tokens"]
         B, S = tokens.shape
         x = self._embed(params, tokens)
         memory, mem_pos = self._encode_memory(params, batch)
         positions = jnp.arange(S)[None, :].repeat(B, 0)
+        if pad is not None:
+            positions = positions - pad[:, None]
         if self.cfg.enc_dec:
             x = x + params["pos_embed"].astype(x.dtype)[None, :S, :]
         x, caches, _ = self._run_stack(params, x, positions=positions,
                                        memory=memory,
                                        memory_positions=mem_pos,
-                                       caches=caches, decode=False)
+                                       caches=caches, decode=False, pad=pad)
         return self._logits(params, x[:, -1:, :]), caches
 
     def decode_step(self, params, token, pos, caches, memory=None,
-                    mem_pos=None):
-        """token: (B,1) int32; pos: () int32 current position."""
+                    mem_pos=None, pad=None):
+        """token: (B,1) int32; pos: () int32 current BUFFER position (cache
+        slot). With `pad`, row b's logical position is pos - pad[b]."""
         B = token.shape[0]
         x = self._embed(params, token)
         if self.cfg.enc_dec:
             x = x + jax.lax.dynamic_slice_in_dim(
                 params["pos_embed"].astype(x.dtype), pos, 1, 0)[None]
         positions = jnp.full((B, 1), pos, jnp.int32)
+        if pad is not None:
+            positions = positions - pad[:, None]
         x, caches, _ = self._run_stack(params, x, positions=positions,
                                        memory=memory, memory_positions=mem_pos,
-                                       caches=caches, decode=True)
+                                       caches=caches, decode=True, pad=pad)
         return self._logits(params, x), caches

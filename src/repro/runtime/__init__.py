@@ -2,11 +2,12 @@ from repro.runtime.elastic import (DeviceLoss, InjectedFailure,
                                    RestartableLoop, RestartBudgetExceeded,
                                    StragglerMonitor, remesh)
 from repro.runtime.resilience import (ElasticRunner, HealthMonitor,
-                                      ResilientRunner, flip_bits,
-                                      inject_retention_faults)
+                                      ResilientRunner, ServingHealthMonitor,
+                                      flip_bits, inject_retention_faults)
 
 __all__ = [
     "DeviceLoss", "ElasticRunner", "HealthMonitor", "InjectedFailure",
     "ResilientRunner", "RestartableLoop", "RestartBudgetExceeded",
+    "ServingHealthMonitor",
     "StragglerMonitor", "flip_bits", "inject_retention_faults", "remesh",
 ]

@@ -292,6 +292,38 @@ class HealthMonitor:
         return rep
 
 
+@dataclasses.dataclass
+class ServingHealthMonitor(HealthMonitor):
+    """HealthMonitor with the serving request queue as a fourth drop class.
+
+    The continuous-batching recall server (`repro.launch.serve_bcpnn`) holds
+    a fixed-capacity admission queue that is dimensioned exactly like the
+    paper's spike queues: request arrivals ~ Poisson(`req_rate` per engine
+    step) against `queue_capacity` waiting slots, drained once per step. The
+    expected number of REJECTED requests over the run is therefore EQ1's
+    tail mass at the queue size — `repro.core.queues.drop_probability_per_ms`
+    with the engine step standing in for the millisecond — times the number
+    of steps taken (`StragglerMonitor.total` chunks). Observed rejections
+    ride in on the 'reject' key of the cumulative drops dict the server
+    passes to `chunk_end`, so `report()` prices admission-queue overflow the
+    same way it prices delay-queue ('in'), fired-batch ('fire') and fabric
+    ('route') overflow: Fig 7, per class, at current capacity.
+
+    With `req_rate == 0` (unknown offered load) no 'reject' budget is
+    published; any observed rejection then counts against the total budget —
+    an unprovisioned queue that rejects is unhealthy by definition.
+    """
+    queue_capacity: int = 0
+    req_rate: float = 0.0      # expected request arrivals per engine step
+
+    def class_budgets(self) -> dict:
+        out = super().class_budgets()
+        if self.queue_capacity and self.req_rate > 0:
+            out["reject"] = (queues.drop_probability_per_ms(
+                self.queue_capacity, self.req_rate) * self.straggler.total)
+        return out
+
+
 # ---------------------------------------------------------------------------
 # fault class 1: crash / restart with bitwise replay
 # ---------------------------------------------------------------------------

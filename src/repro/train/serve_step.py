@@ -20,16 +20,16 @@ def sample(logits, key, temperature: float = 0.0):
 
 
 def make_prefill(model: Model):
-    def prefill(params, batch, caches):
-        return model.prefill(params, batch, caches)
+    def prefill(params, batch, caches, pad=None):
+        return model.prefill(params, batch, caches, pad=pad)
     return prefill
 
 
 def make_decode_step(model: Model, temperature: float = 0.0):
     def decode_step(params, token, pos, caches, key, memory=None,
-                    mem_pos=None):
+                    mem_pos=None, pad=None):
         logits, caches = model.decode_step(params, token, pos, caches,
-                                           memory, mem_pos)
+                                           memory, mem_pos, pad=pad)
         nxt = sample(logits, key, temperature)
         return nxt, logits, caches
     return decode_step

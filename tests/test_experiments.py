@@ -1,0 +1,111 @@
+"""The assoc-memory protocol (`repro.experiments`) tested independently of
+`benchmarks/resilience.py`: train/cue/recall round-trip at toy size, and the
+`sram_loss` contract — recall from an sram_loss state must be carried by the
+DRAM-resident ij planes (it dies under a full plane wipe), while WITHOUT
+sram_loss the trained pj bias recalls part of the attractor regardless of
+plane damage (which is exactly why the fault experiments always apply it).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BCPNNParams, Simulator
+from repro.data import make_patterns
+from repro.experiments import (assoc_params, drive_frame, recall_accuracy,
+                               sram_loss, train_assoc, winners_from_fired)
+
+# a faster sibling of `assoc_params` (8 HCUs, 6 MCUs, smaller planes) —
+# trains in a few seconds at reps=10 and recalls at 1.0 from sram_loss
+TOY = BCPNNParams(n_hcu=8, rows=48, cols=6, fanout=8, active_queue=16,
+                  max_delay=4, mean_delay=1.5, out_rate=1.0,
+                  wta_temp=0.25, tau_p=400.0)
+N_PATTERNS = 3
+CHANCE = 1.0 / TOY.cols
+
+
+def _wipe_planes(state, p):
+    """Full ij-plane wipe: every DRAM-resident synaptic plane back to its
+    init values (the limit case of total retention loss)."""
+    h = state.hcus
+    return state._replace(hcus=h._replace(
+        zij=jnp.zeros_like(h.zij), eij=jnp.zeros_like(h.eij),
+        pij=jnp.full_like(h.pij, p.p_init * p.p_init),
+        wij=jnp.zeros_like(h.wij), tij=jnp.zeros_like(h.tij)))
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """(sim, patterns, attractor, trained-state host copy) — trained once
+    for the whole module."""
+    sim = Simulator(TOY, key=0, cap_fire=TOY.n_hcu)
+    patterns = make_patterns(TOY, N_PATTERNS, seed=3)
+    attractor = train_assoc(sim, patterns, reps=10)
+    return sim, patterns, attractor, jax.tree.map(np.array, sim.state)
+
+
+def _acc(trained, corrupt):
+    sim, patterns, attractor, state = trained
+    correct, total = recall_accuracy(sim, state, patterns, attractor,
+                                     rng=np.random.default_rng(0),
+                                     corrupt=corrupt)
+    assert total > 0
+    return correct / total
+
+
+def test_train_recall_roundtrip(trained):
+    """Partial cues complete to the trained attractor far above chance."""
+    _, _, attractor, _ = trained
+    assert attractor.shape == (N_PATTERNS, TOY.n_hcu)
+    assert (attractor >= 0).all() and (attractor < TOY.cols).all()
+    assert _acc(trained, corrupt=None) >= 0.6 > 2 * CHANCE
+
+
+def test_recall_survives_sram_loss(trained):
+    """After the volatile j-side reset, the DRAM planes alone complete the
+    patterns — the paper's memory-split claim."""
+    acc = _acc(trained, corrupt=lambda s: sram_loss(s, TOY))
+    assert acc >= 0.6
+
+
+def test_sram_loss_recall_dies_under_plane_wipe(trained):
+    """sram_loss + full ij-plane wipe leaves nothing to recall from: the
+    protocol really does measure the planes."""
+    acc = _acc(trained, corrupt=lambda s: _wipe_planes(sram_loss(s, TOY),
+                                                       TOY))
+    assert acc <= 0.25
+
+
+def test_wipe_without_sram_loss_overstates_recall(trained):
+    """WITHOUT sram_loss the trained pj bias keeps recalling above chance
+    even with every plane wiped — the contract's reason to exist."""
+    acc_bias = _acc(trained, corrupt=lambda s: _wipe_planes(s, TOY))
+    acc_planes_gone = _acc(trained,
+                           corrupt=lambda s: _wipe_planes(sram_loss(s, TOY),
+                                                          TOY))
+    assert acc_bias >= 1.5 * CHANCE
+    assert acc_bias > acc_planes_gone
+
+
+def test_assoc_params_protocol_shape():
+    p = assoc_params()
+    assert p.n_hcu == 12 and p.cols == 8
+    assert p.tau_p > p.tau_e > p.tau_zi  # slow P traces hold the memory
+
+
+def test_drive_frame_padding_semantics():
+    p = TOY
+    rows = np.arange(p.n_hcu, dtype=np.int64)
+    mask = np.zeros(p.n_hcu, bool)
+    mask[::2] = True
+    frame = np.asarray(drive_frame(p, rows, mask))
+    assert frame.shape[0] == p.n_hcu
+    assert (frame[~mask] == p.rows).all()          # padding everywhere else
+    assert (frame[mask, 0] == rows[mask]).all()    # cue row in slot 0
+    assert (frame[mask, 1:] == p.rows).all()
+
+
+def test_winners_from_fired_last_wins():
+    fired = np.array([[1, -1], [-1, 3], [2, -1], [-1, -1]])
+    assert winners_from_fired(fired).tolist() == [2, 3]
+    assert winners_from_fired(np.full((4, 2), -1)).tolist() == [-1, -1]

@@ -1,0 +1,92 @@
+"""LM ServingEngine (`repro.launch.serve`): wave slot recycling, per-slot
+completion, and ragged (mixed prompt length) waves.
+
+The load-bearing pin is the ragged one: a wave mixing prompt lengths must
+emit, per request, exactly the greedy tokens the same request produces
+alone in a slots=1 engine — the left-pad slots are masked out of the KV
+cache (layers.attend pad path), not silently attended as prompt.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import Request, ServingEngine
+from repro.models.transformer import Model
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_smoke_config("qwen2-1.5b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lens]
+
+
+def test_queue_deeper_than_slots_drains_no_loss_no_dup(lm):
+    cfg, model, params = lm
+    eng = ServingEngine(model, params, batch_slots=3, max_len=32)
+    prompts = _prompts(cfg, [8] * 7, seed=1)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid, p, max_new=4))
+    done = eng.run()
+    assert sorted(r.rid for r in done) == list(range(7))
+    assert not eng.queue
+    assert all(r.done and len(r.out) == 4 for r in done)
+
+
+def test_per_slot_max_new_truncation(lm):
+    """One wave, mixed max_new: each request stops at ITS budget while the
+    wave keeps decoding for the longest one."""
+    cfg, model, params = lm
+    eng = ServingEngine(model, params, batch_slots=3, max_len=32)
+    prompts = _prompts(cfg, [6, 6, 6], seed=2)
+    budgets = [1, 3, 7]
+    for rid, (p, m) in enumerate(zip(prompts, budgets)):
+        eng.submit(Request(rid, p, max_new=m))
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    assert [len(r.out) for r in done] == budgets
+
+
+def test_ragged_wave_matches_solo_runs(lm):
+    """Mixed prompt lengths in ONE wave reproduce each request's solo
+    (slots=1) greedy output — the fix this test pins."""
+    cfg, model, params = lm
+    lens = [6, 3, 9]
+    solo = []
+    for rid, p in enumerate(_prompts(cfg, lens, seed=3)):
+        eng = ServingEngine(model, params, batch_slots=1, max_len=32)
+        eng.submit(Request(rid, p, max_new=5))
+        solo.append(eng.run()[0].out)
+    eng = ServingEngine(model, params, batch_slots=3, max_len=32)
+    assert eng.ragged
+    for rid, p in enumerate(_prompts(cfg, lens, seed=3)):
+        eng.submit(Request(rid, p, max_new=5))
+    done = sorted(eng.run(), key=lambda r: r.rid)
+    assert len(done) == 3 and len({r.rid for r in done}) == 3
+    for r, want in zip(done, solo):
+        assert r.out == want, f"request {r.rid} diverged in the ragged wave"
+
+
+def test_non_attention_stack_groups_waves_by_length():
+    """Recurrent mixers can't mask left-pad: the engine must group each
+    wave by equal prompt length instead (and refuse a mixed wave)."""
+    cfg = get_smoke_config("xlstm-125m")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, batch_slots=3, max_len=32)
+    assert not eng.ragged
+    prompts = _prompts(cfg, [4, 6, 4], seed=4)
+    with pytest.raises(ValueError):
+        eng._run_wave([Request(90 + i, p, max_new=2)
+                       for i, p in enumerate(prompts)])
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid, p, max_new=2))
+    done = eng.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(len(r.out) == 2 for r in done)

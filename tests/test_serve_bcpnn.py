@@ -1,0 +1,176 @@
+"""BCPNN recall serving engine: bitwise contract, slot recycling, queue
+drop accounting (`repro.launch.serve_bcpnn`).
+
+The load-bearing test is the bitwise one: every session served out of the
+batched (S,)-lane stack must reproduce, bit for bit, the trajectory of an
+independent single-session `Simulator.run` from the same template state —
+the serving analogue of the head-fixture discipline (`_serve_step` runs
+`jax.lax.map` over lanes so the per-lane graph IS `network._run_chunk`).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Simulator, test_scale as tiny_scale
+from repro.launch.serve_bcpnn import BCPNNRecallServer, RecallRequest
+
+
+def _toy_params():
+    return tiny_scale(n_hcu=4, rows=48, cols=8)
+
+
+def _warmed_sim(p, warm_ticks=8):
+    """A Simulator with nontrivial planes/queues (random external drive)."""
+    sim = Simulator(p, key=0, cap_fire=p.n_hcu)
+    rng = np.random.default_rng(7)
+    warm = rng.integers(0, p.rows, (warm_ticks, p.n_hcu, 4)).astype(np.int32)
+    sim.run(jnp.asarray(warm))
+    return sim
+
+
+def _requests(p, n, rng, budget=15):
+    return [RecallRequest(rid, rng.integers(0, p.rows, p.n_hcu),
+                          rng.random(p.n_hcu) < 0.7, budget_ticks=budget)
+            for rid in range(n)]
+
+
+def _cue_ext(p, req, n_ticks, width=4):
+    frame = np.full((p.n_hcu, width), p.rows, np.int32)
+    mask = np.asarray(req.cue_mask, bool)
+    frame[mask, 0] = np.asarray(req.cue_rows, np.int32)[mask]
+    return np.broadcast_to(frame, (n_ticks,) + frame.shape)
+
+
+def test_batched_sessions_bitwise_match_single_runs():
+    """Acceptance criterion: batched multi-session recall trajectories ==
+    N independent single-session Simulator runs, bitwise."""
+    p = _toy_params()
+    sim = _warmed_sim(p)
+    srv = BCPNNRecallServer(sim, slots=3, queue_capacity=8, step_ticks=5)
+    rng = np.random.default_rng(0)
+    done = srv.run(_requests(p, 7, rng))
+    assert len(done) == 7
+    template = jax.tree.map(np.array, srv.template)
+    for req in done:
+        assert req.ticks % srv.step_ticks == 0 and req.ticks > 0
+        ref = Simulator(p, key=0, cap_fire=p.n_hcu)   # same key -> same conn
+        ref.state = jax.tree.map(jnp.asarray, template)
+        f_ref = np.asarray(ref.run(
+            jnp.asarray(_cue_ext(p, req, req.ticks)),
+            chunk=srv.step_ticks))
+        assert req.fired.shape == f_ref.shape
+        assert (req.fired == f_ref).all(), \
+            f"session {req.rid} diverged from its solo run"
+
+
+def test_slot_recycling_serves_every_request_once():
+    """Queue deeper than the slot count drains fully: every rid completed
+    exactly once, lanes reused across waves."""
+    p = _toy_params()
+    sim = _warmed_sim(p)
+    srv = BCPNNRecallServer(sim, slots=2, queue_capacity=16, step_ticks=5)
+    rng = np.random.default_rng(1)
+    n = 9
+    done = srv.run(_requests(p, n, rng, budget=10))
+    assert sorted(r.rid for r in done) == list(range(n))
+    assert srv.queue.counters()["admitted"] == n
+    assert srv.queue.counters()["rejected"] == 0
+    assert len(srv.queue) == 0
+    assert all(r.status in ("done", "expired") for r in done)
+    # more admissions than slots forces recycling
+    assert n > srv.slots
+
+
+def test_budget_expiry_and_convergence_statuses():
+    p = _toy_params()
+    sim = _warmed_sim(p)
+    srv = BCPNNRecallServer(sim, slots=2, queue_capacity=4, step_ticks=5)
+    rng = np.random.default_rng(2)
+    done = srv.run(_requests(p, 4, rng, budget=15))
+    for r in done:
+        if r.status == "expired":
+            assert r.ticks >= r.budget_ticks
+        else:
+            assert r.status == "done"
+            assert (r.winners >= 0).all()
+        assert r.service_ms is not None and r.service_ms >= 0
+        assert r.sojourn_ms >= r.service_ms
+        assert set(r.drops) == {"in", "fire", "route"}
+        assert all(v >= 0 for v in r.drops.values())
+
+
+def test_queue_overflow_rejects_and_counts():
+    p = _toy_params()
+    sim = _warmed_sim(p)
+    srv = BCPNNRecallServer(sim, slots=2, queue_capacity=2, step_ticks=5,
+                            req_rate=1.0)
+    rng = np.random.default_rng(3)
+    reqs = _requests(p, 5, rng, budget=10)
+    accepted = [srv.submit(r) for r in reqs]
+    assert accepted == [True, True, False, False, False]
+    assert [r.status for r in reqs] == \
+        ["queued", "queued", "rejected", "rejected", "rejected"]
+    c = srv.queue.counters()
+    assert c["submitted"] == 5 and c["rejected"] == 3 and c["waiting"] == 2
+    while srv.busy:
+        srv.step()
+    # rejections surface as the 'reject' drop class in the health report
+    rep = srv.monitor.report()
+    assert rep["drops"]["reject"] == 3
+    assert "reject" in srv.monitor.class_budgets()
+
+
+def test_health_monitor_prices_sessions_at_capacity():
+    """The drop budget scales with n_hcu * slots (all lanes tick)."""
+    p = _toy_params()
+    sim = _warmed_sim(p)
+    srv = BCPNNRecallServer(sim, slots=3, queue_capacity=4, step_ticks=5)
+    rng = np.random.default_rng(4)
+    srv.run(_requests(p, 3, rng, budget=10))
+    assert srv.monitor.n_hcu == p.n_hcu * 3
+    rep = srv.monitor.report()
+    assert rep["ticks"] == srv.steps * srv.step_ticks
+    assert {"in", "fire", "route", "reject"} <= set(rep["drops"])
+
+
+def test_stats_schema_and_slo():
+    p = _toy_params()
+    sim = _warmed_sim(p)
+    srv = BCPNNRecallServer(sim, slots=2, queue_capacity=4, step_ticks=5)
+    rng = np.random.default_rng(5)
+    srv.run(_requests(p, 3, rng, budget=10))
+    s = srv.stats(slo_ms=1e9)
+    assert s["completed"] == 3 == s["done"] + s["expired"]
+    assert s["p95_service_ms"] > 0 and s["p95_sojourn_ms"] > 0
+    assert s["slo_met"] is True
+    assert s["health"]["status"] in ("ok", "over-budget", "deadline-missed")
+    s2 = srv.stats(slo_ms=1e-9)
+    assert s2["slo_met"] is False
+
+
+def test_worklist_backend_sessions_bitwise_match():
+    """The lane contract holds on the worklist backend too (forced — the
+    toy size would select dense by the size guard)."""
+    p = _toy_params()
+    sim = Simulator(p, key=0, cap_fire=p.n_hcu, worklist=True)
+    rng0 = np.random.default_rng(7)
+    warm = rng0.integers(0, p.rows, (6, p.n_hcu, 4)).astype(np.int32)
+    sim.run(jnp.asarray(warm))
+    srv = BCPNNRecallServer(sim, slots=2, queue_capacity=4, step_ticks=5)
+    rng = np.random.default_rng(6)
+    done = srv.run(_requests(p, 3, rng, budget=10))
+    template = jax.tree.map(np.array, srv.template)
+    for req in done:
+        ref = Simulator(p, key=0, cap_fire=p.n_hcu, worklist=True)
+        ref.state = jax.tree.map(jnp.asarray, template)
+        f_ref = np.asarray(ref.run(jnp.asarray(_cue_ext(p, req, req.ticks)),
+                                   chunk=srv.step_ticks))
+        assert (req.fired == f_ref).all()
+
+
+def test_merged_mode_rejected():
+    p = _toy_params()
+    sim = Simulator(p, key=0, merged=True)
+    with pytest.raises(NotImplementedError):
+        BCPNNRecallServer(sim)

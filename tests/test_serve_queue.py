@@ -1,0 +1,80 @@
+"""Property tests for the serving admission queue (`RequestQueue`),
+mirroring the spike-queue tests in tests/test_queues.py: fixed capacity,
+counted overflow, FIFO order.
+
+Invariants under any offer/take interleaving:
+  * conservation  — admitted + rejected + waiting == submitted
+                    (no request lost or duplicated);
+  * drop-on-full  — an offer is rejected exactly when the queue is at
+                    capacity at offer time, never otherwise;
+  * FIFO          — requests are admitted in submission order.
+
+Runs under the optional-hypothesis shim (tests/hypothesis_compat.py): with
+hypothesis installed these are property tests; without it they skip and the
+deterministic `test_queue_basic_*` cases still cover the invariants.
+"""
+import numpy as np
+
+from hypothesis_compat import given, settings, st
+from repro.launch.serve_bcpnn import RecallRequest, RequestQueue
+
+
+def _req(rid: int) -> RecallRequest:
+    return RecallRequest(rid, np.zeros(2, np.int32), np.ones(2, bool))
+
+
+def _drive(capacity: int, ops) -> tuple[RequestQueue, list, list]:
+    """Apply an op sequence; return (queue, admitted rids, rejected rids)."""
+    q = RequestQueue(capacity)
+    admitted, rejected = [], []
+    rid = 0
+    for op in ops:
+        if op < 0:                       # offer
+            r = _req(rid)
+            rid += 1
+            was_full = len(q) >= q.capacity
+            ok = q.offer(r)
+            assert ok == (not was_full), "drop iff at capacity at offer time"
+            assert r.status == ("queued" if ok else "rejected")
+            if not ok:
+                rejected.append(r.rid)
+        else:                            # take up to `op` requests
+            admitted.extend(r.rid for r in q.take(op))
+    return q, admitted, rejected
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=1, max_value=5),
+       st.lists(st.integers(min_value=-1, max_value=4), max_size=80))
+def test_queue_invariants(capacity, ops):
+    q, admitted, rejected = _drive(capacity, ops)
+    # conservation: every submitted request is admitted, rejected or waiting
+    assert q.admitted + q.rejected + len(q) == q.submitted
+    assert len(admitted) == q.admitted and len(rejected) == q.rejected
+    assert len(set(admitted)) == len(admitted), "no duplicates"
+    assert not set(admitted) & set(rejected), "no request in two buckets"
+    # FIFO: offers carry increasing rids, so admission order is increasing
+    assert admitted == sorted(admitted)
+    # capacity is never exceeded
+    assert len(q) <= q.capacity
+
+
+def test_queue_basic_conservation():
+    q, admitted, rejected = _drive(2, [-1, -1, -1, 2, -1, -1, -1, 4])
+    assert q.submitted == 6
+    assert q.admitted + q.rejected + len(q) == 6
+    assert admitted == sorted(admitted)
+
+
+def test_queue_basic_fifo_and_free():
+    q = RequestQueue(3)
+    for rid in range(3):
+        assert q.offer(_req(rid))
+    assert q.free == 0
+    assert not q.offer(_req(3))
+    assert [r.rid for r in q.take(2)] == [0, 1]
+    assert q.free == 2
+    assert q.offer(_req(4))
+    assert [r.rid for r in q.take(5)] == [2, 4]
+    assert q.counters() == {"submitted": 5, "admitted": 4, "rejected": 1,
+                            "waiting": 0, "capacity": 3}
