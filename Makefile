@@ -1,7 +1,8 @@
 # Tier-1 verification (mirrors .github/workflows/ci.yml)
 PY ?= python
 
-.PHONY: verify test bench bench-json profile resilience check-pycache ci-local
+.PHONY: verify test bench bench-json profile resilience weak-scaling \
+	check-pycache ci-local
 
 verify: test bench
 
@@ -36,6 +37,14 @@ resilience:
 	PYTHONPATH=src $(PY) -m benchmarks.resilience --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.check_resilience
 
+# weak-scaling sweep of the sharded runtime (BENCH_weak_scaling.json):
+# forced host-platform device counts 1/2/4 at fixed HCUs/device, sparse
+# capacity-bounded spike exchange overlapped with the column phase, plus a
+# mid-sweep elastic remesh leg; mirrors the CI `weak-scaling` job (see
+# docs/BENCHMARKING.md for the JSON schema and the gated contract)
+weak-scaling:
+	PYTHONPATH=src $(PY) -m benchmarks.weak_scaling --legacy-cpu
+
 # fail if bytecode artifacts ever get committed (nested __pycache__ dirs
 # included); CI runs this in the `tests` job
 check-pycache:
@@ -43,24 +52,33 @@ check-pycache:
 		echo "ERROR: tracked bytecode artifacts (see above)"; exit 1; \
 	else echo "no tracked bytecode"; fi
 
-# the exact CI sequence (tests job + bench-gate job + resilience job),
-# runnable locally so a gate failure can be reproduced without pushing:
-# pycache guard -> tier-1 tests (incl. the flat-vs-blocked layout A/B
-# fixture tests) -> fast benchmarks -> tick-loop regression gate vs the
-# COMMITTED JSON (taken from HEAD, not the working tree, so repeated runs
-# cannot compound a slow drift past the gate; note the fresh measurement is
-# left in BENCH_tick_loop.json afterwards, same as `make bench-json`) ->
-# per-phase ablation artifact + the human_col column-phase gate (the phase
-# the PR 8 column-blocked layout targets) -> the Fig 10 layout benchmark
-# (BENCH_layout.json: paper DRAM model + tile models + measured CPU
-# flat/blocked A/B) -> the serving benchmark (BENCH_serving.json:
-# continuous-batching recall QPS at rodent16) + its QPS-at-SLO gate ->
-# resilience telemetry + gate (the fault-injection tests already ran
-# inside `test`)
-ci-local: check-pycache test bench
+# the exact CI sequence (tests + bench-gate + weak-scaling + resilience
+# jobs), runnable locally so a gate failure can be reproduced without
+# pushing: pycache guard -> README bench-table drift guard (BEFORE any
+# bench regeneration — the table must match the COMMITTED JSON, and a
+# fresh measurement would make it spuriously stale) -> tier-1 tests (incl.
+# the flat-vs-blocked layout A/B fixture tests and the sparse-route
+# capacity/drop tests) -> fast benchmarks -> tick-loop regression gate vs
+# the COMMITTED JSON (taken from HEAD, not the working tree, so repeated
+# runs cannot compound a slow drift past the gate; note the fresh
+# measurement is left in BENCH_tick_loop.json afterwards, same as `make
+# bench-json`) -> per-phase ablation artifact + the human_col column-phase
+# gate (the phase the PR 8 column-blocked layout targets) -> the Fig 10
+# layout benchmark (BENCH_layout.json: paper DRAM model + tile models +
+# measured CPU flat/blocked A/B) + its layout-model gate -> the serving
+# benchmark (BENCH_serving.json: continuous-batching recall QPS at
+# rodent16) + its QPS-at-SLO gate -> the weak-scaling sweep
+# (BENCH_weak_scaling.json) + its ratio/route-drop gate -> resilience
+# telemetry + gate (the fault-injection tests already ran inside `test`)
+ci-local: check-pycache
+	PYTHONPATH=src $(PY) -m benchmarks.render_bench_table
+	git diff --exit-code README.md
+	$(MAKE) test bench
 	git show HEAD:BENCH_tick_loop.json > /tmp/BENCH_committed.json
 	git show HEAD:BENCH_phase_breakdown.json > /tmp/BENCH_phase_committed.json
 	git show HEAD:BENCH_serving.json > /tmp/BENCH_serving_committed.json
+	git show HEAD:BENCH_layout.json > /tmp/BENCH_layout_committed.json
+	git show HEAD:BENCH_weak_scaling.json > /tmp/BENCH_weak_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast --json --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
 		--committed /tmp/BENCH_committed.json
@@ -69,9 +87,14 @@ ci-local: check-pycache test bench
 		--committed /tmp/BENCH_committed.json \
 		--phase-committed /tmp/BENCH_phase_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.fig10_rowmerge --legacy-cpu
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		--layout-committed /tmp/BENCH_layout_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.serve_bcpnn --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
 		--committed /tmp/BENCH_committed.json \
 		--serving-committed /tmp/BENCH_serving_committed.json
+	PYTHONPATH=src $(PY) -m benchmarks.weak_scaling --legacy-cpu
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		--weak-scaling-committed /tmp/BENCH_weak_committed.json
 	PYTHONPATH=src $(PY) -m benchmarks.resilience --legacy-cpu
 	PYTHONPATH=src $(PY) -m benchmarks.check_resilience

@@ -1,0 +1,258 @@
+"""Weak-scaling sweep of the sharded BCPNN runtime (BENCH_weak_scaling.json).
+
+  PYTHONPATH=src python -m benchmarks.weak_scaling [--legacy-cpu] [--json] \
+      [--device-counts 1,2,4] [--ticks 64] [--repeats 3]
+
+The paper's system argument (§I, §III.A): spike traffic (~250 GB/s) is three
+orders of magnitude below synaptic weight traffic (~200 TB/s), which is what
+makes a tiled message-passing cortex feasible. This sweep measures that
+claim's software twin: HCUs-per-device held fixed while the device count
+grows, every tick exchanging only fired spike words through the
+capacity-bounded sparse `SparseExchange` (`core/distributed.py`), sized by
+`default_route_config`'s Fig 7 Poisson math and overlapped with the column
+plane phase.
+
+Per swept device count N (each in its own subprocess — the forced
+host-platform device count must be set before jax initializes):
+
+  * `scan_us_per_tick`    — min-over-repeats wall clock of `make_dist_run`
+                            (T ticks per compiled call);
+  * `bytes_per_tick`      — the exchange payload: the static RouteConfig
+                            model (N^2 * cap_route words) and the all_to_all
+                            bytes parsed from the optimized HLO
+                            (`launch/roofline.collective_bytes`);
+  * `collective_bound_us` — that payload against the roofline ICI bound
+                            (ICI_BW * ICI_LINKS), the paper-style check that
+                            the spike fabric is nowhere near the limiting
+                            resource;
+  * `drops` / `fig7_budget` — observed per-class drop counters from the
+                            deterministic T-tick run vs the per-class
+                            `HealthMonitor` Fig 7 budgets at this mesh's
+                            capacity;
+  * `remesh` (N >= 2)     — mid-sweep elastic rescale: the live state is
+                            re-placed onto an N/2-device mesh
+                            (`runtime.elastic.remesh_network`) and the run
+                            continues there — the data-movement cost and the
+                            post-remesh tick are recorded.
+
+Forced host "devices" share one machine's cores, so us/tick GROWS with N at
+fixed HCUs/device here (threads contend instead of scaling); the committed
+curve's N_max/N_1 ratio is still a real contract — a broken exchange or a
+lost overlap shifts it by integer factors — and is gated in CI by
+`benchmarks.check_regression --weak-scaling-committed`. Drop counts are
+exactly reproducible (the trajectory is deterministic), so the gate holds
+them against max(committed, Fig 7 budget).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+HCUS_PER_DEVICE = 4
+# rodent-scale per-HCU dimensioning (worklist regime; 4 devices == rodent16)
+ROWS, COLS, FANOUT = 1200, 70, 16
+TICKS, REPEATS = 64, 3
+DEVICE_COUNTS = (1, 2, 4)
+
+
+def _params(n_dev: int):
+    from repro.core.params import BCPNNParams
+    return BCPNNParams(n_hcu=HCUS_PER_DEVICE * n_dev, rows=ROWS, cols=COLS,
+                       fanout=FANOUT, active_queue=16, max_delay=16)
+
+
+def _child(args) -> dict:
+    """Measure one device count inside a forced-device-count subprocess."""
+    if args.legacy_cpu:
+        from benchmarks.run import pin_legacy_cpu_runtime
+        pin_legacy_cpu_runtime()
+    import jax
+    from benchmarks.tick_loop import _ext_tensor
+    from repro.core import init_network, make_connectivity
+    from repro.core import distributed as DD
+    from repro.core.network import drop_counters
+    from repro.launch import roofline as RL
+    from repro.launch.mesh import make_bcpnn_mesh, make_elastic_mesh
+    from repro.runtime import remesh_network
+    from repro.runtime.resilience import HealthMonitor
+
+    ndev = args.child
+    assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
+    p = _params(ndev)
+    T = args.ticks
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    ext = _ext_tensor(p, T)
+
+    mesh = make_bcpnn_mesh(ndev)
+    rc = DD.default_route_config(p, HCUS_PER_DEVICE, n_dev=ndev)
+    fn = DD.make_dist_run(mesh, p, rc)
+    s, c = DD.shard_network(mesh, init_network(p, key), conn)
+    compiled = fn.lower(s, c, ext).compile()
+    coll = RL.collective_bytes(compiled.as_text(), loop_factor=float(T))
+
+    # deterministic drop accounting: the first T ticks from the fresh init
+    s, f = compiled(s, c, ext)
+    jax.block_until_ready(f)
+    drops = drop_counters(s)
+
+    times = []
+    for _ in range(args.repeats):
+        t0 = time.perf_counter()
+        s, f = compiled(s, c, ext)      # donated carry: feed the state back
+        jax.block_until_ready(f)
+        times.append((time.perf_counter() - t0) / T)
+
+    hm = HealthMonitor(p, n_hcu=p.n_hcu)
+    hm.set_mesh(ndev, rc)
+    hm.ticks = T
+    budgets = hm.class_budgets()
+
+    word = 4 if rc.pack else 16
+    a2a_per_tick = coll["all-to-all"] / T
+    out = {
+        "n_dev": ndev,
+        "n_hcu": p.n_hcu,
+        "h_local": HCUS_PER_DEVICE,
+        "scan_us_per_tick": min(times) * 1e6,
+        "cap_fire": rc.cap_fire,
+        "cap_route": rc.cap_route,
+        "bytes_per_tick": {
+            "payload_total": ndev * ndev * rc.cap_route * word,
+            "off_device": ndev * (ndev - 1) * rc.cap_route * word,
+            "hlo_all_to_all": a2a_per_tick,
+        },
+        "collective_bound_us_per_tick":
+            a2a_per_tick / (RL.ICI_BW * RL.ICI_LINKS) * 1e6,
+        "drops": {k: int(v) for k, v in drops.items()},
+        "fig7_budget": {k: float(v) for k, v in budgets.items()},
+    }
+
+    if ndev >= 2 and not args.no_remesh:
+        # elastic rescale mid-sweep: re-place the live state onto the
+        # half-size mesh and keep running there (pure data movement)
+        nd2 = ndev // 2
+        t0 = time.perf_counter()
+        mesh2 = make_elastic_mesh(p.n_hcu, jax.devices()[:nd2])
+        s2, c2 = remesh_network(s, c, mesh2)
+        jax.block_until_ready(s2.hcus.zij)
+        remesh_ms = (time.perf_counter() - t0) * 1e3
+        rc2 = DD.default_route_config(p, p.n_hcu // nd2, n_dev=nd2)
+        fn2 = DD.make_dist_run(mesh2, p, rc2)
+        s2, f2 = fn2(s2, c2, ext)
+        jax.block_until_ready(f2)
+        t0 = time.perf_counter()
+        s2, f2 = fn2(s2, c2, ext)
+        jax.block_until_ready(f2)
+        out["remesh"] = {
+            "to_devices": nd2,
+            "remesh_ms": remesh_ms,
+            "post_remesh_us_per_tick":
+                (time.perf_counter() - t0) / T * 1e6,
+            "drops_after": {k: int(v)
+                            for k, v in drop_counters(s2).items()},
+        }
+    return out
+
+
+def _spawn(n_dev: int, args) -> dict:
+    from repro.launch.mesh import force_host_device_count_flags
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = force_host_device_count_flags(n_dev)
+    # forced host devices only mean anything on the CPU platform
+    env["JAX_PLATFORMS"] = "cpu"
+    cmd = [sys.executable, "-m", "benchmarks.weak_scaling",
+           "--child", str(n_dev), "--ticks", str(args.ticks),
+           "--repeats", str(args.repeats)]
+    if args.legacy_cpu:
+        cmd.append("--legacy-cpu")
+    if args.no_remesh:
+        cmd.append("--no-remesh")
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"weak-scaling child (n_dev={n_dev}) failed:\n"
+                           f"{r.stderr[-3000:]}")
+    return json.loads(r.stdout)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--device-counts", default=",".join(
+        str(n) for n in DEVICE_COUNTS))
+    ap.add_argument("--ticks", type=int, default=TICKS)
+    ap.add_argument("--repeats", type=int, default=REPEATS)
+    ap.add_argument("--legacy-cpu", action="store_true",
+                    help="pin the legacy XLA CPU runtime in every child "
+                         "(matches the committed BENCH_*.json configuration)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the JSON blob (the file is written anyway)")
+    ap.add_argument("--no-remesh", action="store_true",
+                    help="skip the mid-sweep elastic remesh leg")
+    ap.add_argument("--child", type=int, default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    if args.child is not None:
+        json.dump(_child(args), sys.stdout)
+        print()
+        return
+
+    counts = sorted({int(x) for x in args.device_counts.split(",") if x})
+    results = {
+        "suite": "weak_scaling",
+        "hcus_per_device": HCUS_PER_DEVICE,
+        "size": {"rows": ROWS, "cols": COLS, "fanout": FANOUT},
+        "ticks": args.ticks,
+        "repeats": args.repeats,
+        "estimator": "min-over-repeats",
+        "devices": {},
+        "caveats": "forced host devices share one machine's cores, so "
+                   "us/tick grows with the device count at fixed "
+                   "HCUs/device; the gated contract is the N_max/N_1 ratio "
+                   "and the (deterministic) drop counters, not absolute "
+                   "wall clock",
+    }
+    for n in counts:
+        print(f"# measuring n_dev={n} "
+              f"({HCUS_PER_DEVICE * n} HCUs)...", file=sys.stderr)
+        results["devices"][str(n)] = _spawn(n, args)
+
+    scaling = {"counts": counts}
+    if 1 in counts and max(counts) > 1:
+        one = results["devices"]["1"]["scan_us_per_tick"]
+        top = results["devices"][str(max(counts))]["scan_us_per_tick"]
+        scaling["us_per_tick_ratio_max_over_1"] = top / one
+    results["scaling"] = scaling
+
+    from repro.launch import roofline as RL
+    results["roofline"] = {"ici_bw_Bps": RL.ICI_BW, "ici_links": RL.ICI_LINKS}
+
+    out = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_weak_scaling.json"
+    out.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"# wrote {out}", file=sys.stderr)
+
+    if args.json:
+        json.dump(results, sys.stdout, indent=2)
+        print()
+        return
+    print("name,us_per_call,derived")
+    for n in counts:
+        d = results["devices"][str(n)]
+        print(f"weak_scaling/{n}dev/scan_us_per_tick,"
+              f"{d['scan_us_per_tick']:.3f},0")
+        print(f"weak_scaling/{n}dev/bytes_per_tick,0.000,"
+              f"{d['bytes_per_tick']['payload_total']}")
+        print(f"weak_scaling/{n}dev/drops_route,0.000,"
+              f"{d['drops']['route']}")
+    if "us_per_tick_ratio_max_over_1" in scaling:
+        print(f"weak_scaling/ratio_max_over_1,0.000,"
+              f"{scaling['us_per_tick_ratio_max_over_1']:.4g}")
+
+
+if __name__ == "__main__":
+    main()

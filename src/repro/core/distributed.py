@@ -5,10 +5,15 @@ Paper mapping (§III.A, §VI.E): the eBrainII hierarchy is
 with a pipelined binary-tree spike NoC inside a BCU. On a TPU pod the
 hierarchy becomes
     pod  >  chip  >  local HCU batch (vmap)
-and the spike NoC becomes a bucketed `jax.lax.all_to_all` over the mesh —
-justified by the paper's own observation that spike traffic is three orders
-of magnitude below synaptic bandwidth, so a fixed-capacity exchange sits far
-below the ICI roofline (see EXPERIMENTS.md roofline: collective term).
+and the spike NoC becomes the capacity-bounded sparse exchange
+(`SparseExchange`): only fired (dest, row, delay) triples travel, packed one
+int32 per spike into per-destination buckets sized by the Fig 7 Poisson
+math (`default_route_config`), shipped with one `jax.lax.all_to_all` per
+tick that the engine issues BEFORE the column plane phase and consumes
+after it (latency overlap). Justified by the paper's own observation that
+spike traffic is three orders of magnitude below synaptic bandwidth, so the
+exchange sits far below the ICI roofline — measured against that bound by
+`benchmarks/weak_scaling.py` (see `launch/roofline.py` collective term).
 
 Because every HCU's state is self-contained ("no memory consistency
 problem", §II.B), HCU shards are freely relocatable: elastic re-sharding and
@@ -23,8 +28,11 @@ driver runs — with two shard-specific parameters:
   * ``gid_base = device_index * h_local`` so the per-HCU RNG stream folds
     GLOBAL HCU ids (trajectories invariant to device count, the elasticity
     contract);
-  * ``route`` = the pack + all_to_all spike exchange defined here, replacing
-    the local direct enqueue.
+  * ``route`` = the pack + all_to_all spike exchange defined here
+    (`SparseExchange`), replacing the local direct enqueue; its split
+    send/recv phases bracket the column plane update so the collective is
+    in flight while columns run (`overlap=`, default on — bitwise the same
+    trajectory as the sequential exchange).
 
 This module therefore contains ONLY spike pack/exchange and shard plumbing —
 no tick math. The sharded worklist path (rodent/human scales) comes for free
@@ -140,13 +148,33 @@ def unpack_spikes(w, p: BCPNNParams, h_local: int):
     return dest_loc, dest_row, delay, valid
 
 
-def _exchange_route(p: BCPNNParams, rc: RouteConfig, axis, ndev, h_local):
-    """Build the sharded spike-routing hook for `engine.tick`: bucketize the
-    fired batch's fanout per destination device, exchange the fixed-capacity
-    buckets with one all_to_all, unpack and enqueue locally. This — spike
-    pack/exchange — is the ONLY tick work the sharded path adds."""
+class SparseExchange:
+    """Split-phase sparse spike routing: the distributed tick's spike NoC.
 
-    def route(state, dest_h, dest_r, dly, valid, p_, n_):
+    Only fired work travels. `send` compacts the fired batch's fanout into
+    per-destination capacity-bounded buckets of packed (dest, row, delay)
+    spike words — sized by `default_route_config`'s Fig 7 Poisson-tail
+    dimensioning, overflow counted into the `drops_route` Fig 7 class — and
+    issues the all_to_all. `recv` unpacks the delivered words and enqueues
+    them into the local delay queues.
+
+    `engine.tick` drives the two phases around the column plane update
+    (send -> columns -> recv), so the collective is in flight while the
+    column plane traffic runs — the paper's bandwidth asymmetry (§I: spike
+    traffic is ~3 orders of magnitude below synaptic traffic) makes the
+    exchange the cheap side of that overlap. Neither phase reads what the
+    other writes (exchange: delay queues + drop counters; columns: ij
+    planes), so the overlapped trajectory is bitwise the sequential one —
+    calling the object itself runs send+recv back-to-back (the pre-overlap
+    exchange, kept as the `overlap=False` A/B escape hatch).
+    """
+
+    def __init__(self, p: BCPNNParams, rc: RouteConfig, axis, ndev, h_local):
+        self.p, self.rc, self.axis = p, rc, axis
+        self.ndev, self.h_local = ndev, h_local
+
+    def send(self, state, dest_h, dest_r, dly, valid, p_, n_):
+        p, rc, ndev, h_local = self.p, self.rc, self.ndev, self.h_local
         dest_dev = dest_h // h_local
         dest_loc = dest_h % h_local
         key = jnp.where(valid, dest_dev, ndev)
@@ -166,11 +194,6 @@ def _exchange_route(p: BCPNNParams, rc: RouteConfig, axis, ndev, h_local):
             # traffic
             words = pack_spikes(dest_loc, dest_r, dly, ok, p, h_local)
             send = bucketize(jnp.where(ok, words, 0), 0)  # (ndev, cap_route)
-            recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
-                                      tiled=False).reshape(ndev * rc.cap_route)
-            d_loc, d_row, d_dly, d_ok = unpack_spikes(recv, p, h_local)
-            state = N.enqueue_spikes(state, d_loc, d_row, d_dly, d_ok, p,
-                                     h_local)
         else:
             send = jnp.stack([
                 bucketize(dest_loc, 0),
@@ -178,22 +201,50 @@ def _exchange_route(p: BCPNNParams, rc: RouteConfig, axis, ndev, h_local):
                 bucketize(dly, 1),
                 bucketize(jnp.where(ok, 1, 0).astype(jnp.int32), 0),
             ], axis=-1)                        # (ndev, cap_route, 4)
-            recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
-                                      tiled=False).reshape(
-                                          ndev * rc.cap_route, 4)
-            state = N.enqueue_spikes(
-                state, recv[:, 0], recv[:, 1], recv[:, 2],
-                recv[:, 3] == 1, p, h_local)
+        recv = jax.lax.all_to_all(send, self.axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
         # route-capacity overflow is its own Fig 7 class (drops_route), not
         # fired-batch overflow: HealthMonitor budgets the two separately
-        return state._replace(drops_route=state.drops_route + route_drops)
+        state = state._replace(drops_route=state.drops_route + route_drops)
+        return state, recv
+
+    def recv(self, state, inflight, p_, n_):
+        p, rc, ndev, h_local = self.p, self.rc, self.ndev, self.h_local
+        if rc.pack:
+            recv = inflight.reshape(ndev * rc.cap_route)
+            d_loc, d_row, d_dly, d_ok = unpack_spikes(recv, p, h_local)
+            return N.enqueue_spikes(state, d_loc, d_row, d_dly, d_ok, p,
+                                    h_local)
+        recv = inflight.reshape(ndev * rc.cap_route, 4)
+        return N.enqueue_spikes(state, recv[:, 0], recv[:, 1], recv[:, 2],
+                                recv[:, 3] == 1, p, h_local)
+
+    def __call__(self, state, dest_h, dest_r, dly, valid, p_, n_):
+        state, inflight = self.send(state, dest_h, dest_r, dly, valid,
+                                    p_, n_)
+        return self.recv(state, inflight, p_, n_)
+
+
+def _exchange_route(p: BCPNNParams, rc: RouteConfig, axis, ndev, h_local,
+                    overlap: bool = True):
+    """Build the sharded spike-routing hook for `engine.tick`. With
+    `overlap` (the default) this is the `SparseExchange` object itself and
+    the tick runs it split around the column phase; without, a plain
+    callable running the same exchange sequentially after columns — the
+    historical route hook, bitwise the same trajectory."""
+    ex = SparseExchange(p, rc, axis, ndev, h_local)
+    if overlap:
+        return ex
+
+    def route(state, dest_h, dest_r, dly, valid, p_, n_):
+        return ex(state, dest_h, dest_r, dly, valid, p_, n_)
 
     return route
 
 
 def _local_tick(state: N.NetworkState, conn: N.Connectivity,
                 ext_rows: jnp.ndarray, p: BCPNNParams, rc: RouteConfig,
-                axis, be: "E.TickBackend"):
+                axis, be: "E.TickBackend", overlap: bool = True):
     """Per-device body executed under shard_map: `engine.tick` with the
     all_to_all spike route and a global-HCU-id RNG base. Columns run
     unconditionally (no lax.cond), matching the historical sharded tick."""
@@ -202,7 +253,8 @@ def _local_tick(state: N.NetworkState, conn: N.Connectivity,
     dev = jax.lax.axis_index(axis)
     return E.tick(state, conn, ext_rows, p, be, rc.cap_fire,
                   gid_base=dev * h_local,
-                  route=_exchange_route(p, rc, axis, ndev, h_local),
+                  route=_exchange_route(p, rc, axis, ndev, h_local,
+                                        overlap=overlap),
                   cond_columns=False)
 
 
@@ -227,13 +279,17 @@ def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
                    backend: str | None = None, donate: bool = True,
                    worklist: bool | None = None,
                    fused: bool | None = None,
-                   fused_cols: bool | None = None):
+                   fused_cols: bool | None = None,
+                   overlap: bool = True):
     """Build the sharded tick: state/conn/ext sharded over `axis`, which may
     be a single mesh axis name or a tuple of axis names (flattened).
     `worklist` forces the worklist engine backend on/off (default: auto by
     size, `hcu.use_worklist`); `fused` forces its single-pass fused row
     phase (default: on, `hcu.use_fused_rows`) and `fused_cols` its
-    single-pass fused column phase (default: on, `hcu.use_fused_cols`)."""
+    single-pass fused column phase (default: on, `hcu.use_fused_cols`).
+    `overlap` (default on) issues the spike all_to_all before the column
+    phase so its latency hides behind column traffic — bitwise the same
+    trajectory as the sequential exchange (`SparseExchange`)."""
     axes = axis if isinstance(axis, tuple) else (axis,)
     state_specs, conn_specs, spec_h, _ = _shard_specs(axes)
     be = E.select_backend(p, eager=eager, worklist=worklist, kernel=backend,
@@ -241,7 +297,8 @@ def make_dist_tick(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
 
     def local(state, conn, ext):
         state, fired = _local_tick(be.carry_in(state, p), conn, ext,
-                                   p=p, rc=rc, axis=axes, be=be)
+                                   p=p, rc=rc, axis=axes, be=be,
+                                   overlap=overlap)
         return be.carry_out(state, p), fired
 
     fn = shard_map(
@@ -261,7 +318,8 @@ def make_dist_run(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
                   backend: str | None = None, donate: bool = True,
                   worklist: bool | None = None,
                   fused: bool | None = None,
-                  fused_cols: bool | None = None):
+                  fused_cols: bool | None = None,
+                  overlap: bool = True):
     """Scan-compiled multi-tick sharded driver (network_run's sharded twin).
 
     Returns fn(state, conn, ext) -> (state', fired (T, H)) where ext is the
@@ -282,7 +340,8 @@ def make_dist_run(mesh: Mesh, p: BCPNNParams, rc: RouteConfig,
 
     def _local_run(state, conn, ext):
         def body(s, e):
-            return _local_tick(s, conn, e, p=p, rc=rc, axis=axes, be=be)
+            return _local_tick(s, conn, e, p=p, rc=rc, axis=axes, be=be,
+                               overlap=overlap)
         state, fired = jax.lax.scan(body, be.carry_in(state, p), ext)
         return be.carry_out(state, p), fired
 

@@ -652,7 +652,16 @@ class TickBackend(Protocol):
     threaded through a compiled region (jit call or scan carry); both must
     be zero-copy value-preserving views. `plane_update` consumes the
     carry-layout state and performs the row / WTA / column phases of one
-    tick, returning (state', fired, h_idx, j_idx, n_dropped)."""
+    tick, returning (state', fired, h_idx, j_idx, n_dropped).
+
+    `plane_update_split` is the same tick with the column phase DEFERRED:
+    it returns (state', fired, h_idx, j_idx, n_dropped, col) where `col` is
+    an hcus -> hcus closure holding the (already cond-gated) column pass, or
+    None when the mode cannot split (eager / merged run everything up
+    front). The sharded driver uses the split form to issue the spike
+    all_to_all between WTA and columns, so the collective's latency hides
+    behind the column plane traffic (`tick`'s split-route path); applying
+    `col` immediately is bitwise `plane_update`."""
 
     def carry_in(self, state, p: BCPNNParams): ...
 
@@ -660,6 +669,9 @@ class TickBackend(Protocol):
 
     def plane_update(self, state, rows, t, keys, p: BCPNNParams, cap: int,
                      cond_columns: bool): ...
+
+    def plane_update_split(self, state, rows, t, keys, p: BCPNNParams,
+                           cap: int, cond_columns: bool): ...
 
 
 class DenseBackend(NamedTuple):
@@ -690,13 +702,22 @@ class DenseBackend(NamedTuple):
 
     def plane_update(self, state, rows, t, keys, p: BCPNNParams, cap: int,
                      cond_columns: bool):
+        state, fired, h_idx, j_idx, n_drop, col = self.plane_update_split(
+            state, rows, t, keys, p, cap, cond_columns)
+        if col is not None:
+            state = state._replace(hcus=col(state.hcus))
+        return state, fired, h_idx, j_idx, n_drop
+
+    def plane_update_split(self, state, rows, t, keys, p: BCPNNParams,
+                           cap: int, cond_columns: bool):
         n = state.delay_rows.shape[0]
         if self.mode == "eager":
             hcus, fired = jax.vmap(
                 lambda s, r, k: reference.eager_tick(s, r, t, k, p)
             )(state.hcus, rows, keys)
             h_idx, j_idx, n_drop = N.select_fired(fired, cap)
-            return (state._replace(hcus=hcus), fired, h_idx, j_idx, n_drop)
+            return (state._replace(hcus=hcus), fired, h_idx, j_idx, n_drop,
+                    None)
         if self.mode == "merged":
             from repro.core import merged as M
             hcus, jring, fired = jax.vmap(
@@ -704,7 +725,7 @@ class DenseBackend(NamedTuple):
             )(state.hcus, state.jring, rows, keys)
             h_idx, j_idx, n_drop = N.select_fired(fired, cap)
             return (state._replace(hcus=hcus, jring=jring), fired,
-                    h_idx, j_idx, n_drop)
+                    h_idx, j_idx, n_drop, None)
         hcus, fired = jax.vmap(
             lambda s, r, k: H.hcu_tick_pre(s, r, t, k, p, backend=self.kernel)
         )(state.hcus, rows, keys)
@@ -714,10 +735,11 @@ class DenseBackend(NamedTuple):
         if cond_columns:
             # the "power gating" of the lazy model: silent ticks skip the
             # column pass entirely
-            hcus = jax.lax.cond(jnp.any(h_idx < n), col, lambda hc: hc, hcus)
+            colfn = lambda hc: jax.lax.cond(jnp.any(h_idx < n), col,
+                                            lambda hc_: hc_, hc)
         else:
-            hcus = col(hcus)
-        return state._replace(hcus=hcus), fired, h_idx, j_idx, n_drop
+            colfn = col
+        return state._replace(hcus=hcus), fired, h_idx, j_idx, n_drop, colfn
 
 
 class WorklistBackend(NamedTuple):
@@ -759,6 +781,14 @@ class WorklistBackend(NamedTuple):
 
     def plane_update(self, state, rows, t, keys, p: BCPNNParams, cap: int,
                      cond_columns: bool):
+        state, fired, h_idx, j_idx, n_drop, col = self.plane_update_split(
+            state, rows, t, keys, p, cap, cond_columns)
+        if col is not None:
+            state = state._replace(hcus=col(state.hcus))
+        return state, fired, h_idx, j_idx, n_drop
+
+    def plane_update_split(self, state, rows, t, keys, p: BCPNNParams,
+                           cap: int, cond_columns: bool):
         n = state.delay_rows.shape[0]
         if self.mode == "merged":
             hcus, jring, fired = _merged_worklist_update(
@@ -766,7 +796,7 @@ class WorklistBackend(NamedTuple):
                 layout=self.layout)
             h_idx, j_idx, n_drop = N.select_fired(fired, cap)
             return (state._replace(hcus=hcus, jring=jring), fired,
-                    h_idx, j_idx, n_drop)
+                    h_idx, j_idx, n_drop, None)
         hcus, w_rows, c = worklist_lazy_rows(state.hcus, rows, t, p,
                                              kernel=self.kernel,
                                              fused=self.fused,
@@ -777,10 +807,11 @@ class WorklistBackend(NamedTuple):
                                     h_idx, j_idx, t, p, n,
                                     layout=self.layout)
         if cond_columns:
-            hcus = jax.lax.cond(jnp.any(h_idx < n), col, lambda hc: hc, hcus)
+            colfn = lambda hc: jax.lax.cond(jnp.any(h_idx < n), col,
+                                            lambda hc_: hc_, hc)
         else:
-            hcus = col(hcus)
-        return state._replace(hcus=hcus), fired, h_idx, j_idx, n_drop
+            colfn = col
+        return state._replace(hcus=hcus), fired, h_idx, j_idx, n_drop, colfn
 
 
 def select_backend(p: BCPNNParams, *, eager: bool = False,
@@ -834,7 +865,15 @@ def tick(state, conn, ext_rows, p: BCPNNParams, be: "TickBackend",
       route         — spike routing hook route(state, dest_h, dest_r, delay,
                       valid, p, n) -> state'; defaults to the local
                       `network.enqueue_spikes`, sharded drivers pass the
-                      pack + all_to_all exchange;
+                      pack + all_to_all exchange. A route exposing
+                      `send`/`recv` (`distributed.SparseExchange`) is run
+                      SPLIT: the collective is issued right after WTA and
+                      its result consumed only after the column plane
+                      update, so spike latency hides behind column traffic.
+                      Neither phase reads what the other writes (the
+                      exchange touches delay queues + drop counters, the
+                      column pass touches the ij planes), so the split
+                      trajectory is bitwise the sequential one;
       cond_columns  — gate the lazy column pass behind "anything fired?"
                       (the historical local-tick behavior; sharded ticks run
                       it unconditionally).
@@ -852,8 +891,16 @@ def tick(state, conn, ext_rows, p: BCPNNParams, be: "TickBackend",
     k_t = jax.random.fold_in(state.base_key, t)
     gids = gid_base + jnp.arange(n)
     keys = jax.vmap(lambda g: jax.random.fold_in(k_t, g))(gids)
-    state, fired, h_idx, j_idx, n_drop = be.plane_update(
-        state, rows, t, keys, p, cap, cond_columns)
+    split = route is not None and hasattr(route, "send")
+    if split:
+        # split-phase route: defer the column pass so the spike collective
+        # can be issued between WTA and columns (overlap window)
+        state, fired, h_idx, j_idx, n_drop, col = be.plane_update_split(
+            state, rows, t, keys, p, cap, cond_columns)
+    else:
+        state, fired, h_idx, j_idx, n_drop = be.plane_update(
+            state, rows, t, keys, p, cap, cond_columns)
+        col = None
     state = state._replace(drops_fire=state.drops_fire + n_drop, t=t)
 
     # 3. fan out spikes from the fired batch into delay queues
@@ -862,8 +909,16 @@ def tick(state, conn, ext_rows, p: BCPNNParams, be: "TickBackend",
     dest_r = conn.dest_row[safe_h, j_idx].reshape(-1)
     dly = conn.delay[safe_h, j_idx].reshape(-1)
     valid = jnp.repeat(h_idx < n, p.fanout)
-    state = (route or N.enqueue_spikes)(state, dest_h, dest_r, dly, valid,
-                                        p, n)
+    if split:
+        # 3a. compact + issue the all_to_all; 2b. columns run while the
+        # exchange is in flight; 3b. enqueue the delivered spikes
+        state, inflight = route.send(state, dest_h, dest_r, dly, valid, p, n)
+        if col is not None:
+            state = state._replace(hcus=col(state.hcus))
+        state = route.recv(state, inflight, p, n)
+    else:
+        state = (route or N.enqueue_spikes)(state, dest_h, dest_r, dly,
+                                            valid, p, n)
     return state, fired
 
 

@@ -64,6 +64,24 @@ def make_elastic_mesh(n_hcu: int, devices=None, axis: str = "hcu"):
     return _make_mesh((n,), (axis,), devices=devs[:n])
 
 
+def force_host_device_count_flags(n: int, base: str | None = None) -> str:
+    """XLA_FLAGS value forcing `n` host-platform (CPU) devices.
+
+    Must be in the environment BEFORE jax initializes, so this is for
+    building a CHILD process env (the weak-scaling sweep, the multi-device
+    tests), never for mutating the current process. `base` defaults to the
+    caller's current XLA_FLAGS so benchmark pins (e.g. the legacy CPU
+    runtime, `benchmarks.run.pin_legacy_cpu_runtime`) survive into the
+    child; any existing forced-count flag is replaced."""
+    import os
+    if base is None:
+        base = os.environ.get("XLA_FLAGS", "")
+    flags = [f for f in base.split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={int(n)}")
+    return " ".join(flags)
+
+
 def make_host_mesh(shape=None, axes=("data", "model")):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())

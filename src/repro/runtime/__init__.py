@@ -1,6 +1,6 @@
 from repro.runtime.elastic import (DeviceLoss, InjectedFailure,
                                    RestartableLoop, RestartBudgetExceeded,
-                                   StragglerMonitor, remesh)
+                                   StragglerMonitor, remesh, remesh_network)
 from repro.runtime.resilience import (ElasticRunner, HealthMonitor,
                                       ResilientRunner, ServingHealthMonitor,
                                       flip_bits, inject_retention_faults)
@@ -10,4 +10,5 @@ __all__ = [
     "ResilientRunner", "RestartableLoop", "RestartBudgetExceeded",
     "ServingHealthMonitor",
     "StragglerMonitor", "flip_bits", "inject_retention_faults", "remesh",
+    "remesh_network",
 ]

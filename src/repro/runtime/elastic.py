@@ -43,6 +43,23 @@ def remesh(tree, mesh: Mesh, specs):
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
 
 
+def remesh_network(state, conn, mesh: Mesh, axis="hcu"):
+    """Re-place a sharded BCPNN network (state + connectivity) onto `mesh`.
+
+    The whole elastic-rescale data plane in one call: HCU shards are
+    self-contained (paper §II.B), so moving the network between mesh shapes
+    is `remesh` with the canonical HCU shard specs and nothing else — no
+    consistency protocol, no replay. Under `lossless_route_config` the
+    trajectory is bitwise invariant to where the remesh lands
+    (tests/test_elastic.py); `ElasticRunner` uses this for recovery and
+    graceful rescale, and `benchmarks/weak_scaling.py` exercises it mid-run
+    across the swept mesh shapes."""
+    from repro.core.distributed import _shard_specs
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    state_specs, conn_specs, _, _ = _shard_specs(axes)
+    return remesh(state, mesh, state_specs), remesh(conn, mesh, conn_specs)
+
+
 class InjectedFailure(RuntimeError):
     """A *simulated* node failure raised by a `fail_injector`.
 

@@ -101,6 +101,19 @@ MESH_INV_SCRIPT = textwrap.dedent("""
             fn = DD.make_dist_run(mesh, p, rc, worklist=wl)
             s, f = fn(s, c, exts)
             results[(wl, ndev)] = (np.asarray(f), jax.tree.map(np.asarray, s))
+            # the overlapped split exchange (send -> columns -> recv) must be
+            # bitwise identical to the sequential exchange at every count
+            sq, cq = DD.shard_network(mesh, init_network(p, key), conn)
+            seq = DD.make_dist_run(mesh, p, rc, worklist=wl, overlap=False)
+            sq, fq = seq(sq, cq, exts)
+            np.testing.assert_array_equal(
+                np.asarray(fq), np.asarray(f),
+                err_msg=f"wl={wl} ndev={ndev} overlap-vs-seq fired")
+            for name in s.hcus._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(sq.hcus, name)),
+                    np.asarray(getattr(s.hcus, name)),
+                    err_msg=f"wl={wl} ndev={ndev} overlap-vs-seq {name}")
         f1, s1 = results[(wl, 1)]
         for ndev in (2, 4):
             fN, sN = results[(wl, ndev)]

@@ -1,0 +1,146 @@
+"""RouteConfig dimensioning + drops_route accounting for the sparse exchange.
+
+Two tiers:
+
+ * capacity math (in-process) — `default_route_config` sizes the per-pair
+   route capacity the way the paper sizes its queues (§IV): the smallest
+   Poisson-tail queue meeting the monthly drop budget, clamped into
+   [8, cap_fire * fanout] (the worst case a device can physically emit);
+ * drops_route accounting (subprocess, forced 2- and 4-device meshes) —
+   when `cap_route` deliberately binds, overflow lands in the dedicated
+   `drops_route` Fig 7 class, identically across the scan and host-loop
+   sharded drivers and across the overlapped (split send/recv) vs
+   sequential exchange.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(script: str) -> subprocess.CompletedProcess:
+    return subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True,
+                          env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                               "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+
+
+def test_default_route_config_poisson_bound():
+    from repro.core.distributed import default_route_config
+    from repro.core.params import BCPNNParams
+    from repro.core.queues import expected_drops_per_month
+
+    p = BCPNNParams()          # n_hcu=16, fanout=100, out_rate=0.1
+    h_local, n_dev = 4, 4
+    rc = default_route_config(p, h_local, n_dev=n_dev)
+    assert rc.cap_route <= rc.cap_fire * p.fanout
+    assert rc.cap_route >= 8
+    lam = p.out_rate * h_local * p.fanout / n_dev
+    # strictly inside the clamp window the capacity is the MINIMAL queue
+    # meeting the <= 1 drop/month budget (paper Fig 7 discipline)
+    assert 8 < rc.cap_route < rc.cap_fire * p.fanout
+    assert expected_drops_per_month(rc.cap_route, lam) <= 1.0
+    assert expected_drops_per_month(rc.cap_route - 1, lam) > 1.0
+
+
+def test_default_route_config_clamps_and_monotonicity():
+    from repro.core.distributed import default_route_config
+    from repro.core.params import BCPNNParams
+
+    p = BCPNNParams()
+    # no mesh context -> worst case: a device's whole fired fanout to one peer
+    rc = default_route_config(p, 4)
+    assert rc.cap_route == rc.cap_fire * p.fanout
+    # more devices at fixed HCUs/device -> thinner per-pair traffic -> the
+    # capacity never grows
+    caps = [default_route_config(p, 4, n_dev=n).cap_route
+            for n in (1, 2, 4, 8)]
+    assert caps == sorted(caps, reverse=True)
+    # floor: even a near-silent pair keeps >= 8 slots
+    tiny = BCPNNParams(n_hcu=64, out_rate=0.001)
+    assert default_route_config(tiny, 1, n_dev=64).cap_route >= 8
+
+
+def test_lossless_route_config_never_binds():
+    from repro.core.distributed import lossless_route_config
+    from repro.core.params import BCPNNParams
+
+    p = BCPNNParams()
+    for h_local in (1, 2, 4, 16):
+        rc = lossless_route_config(p, h_local)
+        assert rc.cap_fire == h_local
+        # every fired HCU can route its entire fanout to ONE peer
+        assert rc.cap_route == rc.cap_fire * p.fanout
+
+
+ROUTE_DROPS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import *
+    from repro.core import distributed as DD
+
+    p = test_scale(n_hcu=8, rows=64, cols=16)
+    key = jax.random.PRNGKey(0)
+    conn = make_connectivity(p, jax.random.fold_in(key, 1))
+    rng = np.random.default_rng(5)
+    T = 24
+    ext = np.empty((T, p.n_hcu, 8), np.int32)
+    for t in range(T):                       # drive every HCU hard
+        ext[t] = rng.integers(0, p.rows, (p.n_hcu, 8))
+    ext = jnp.asarray(ext)
+
+    for ndev in (2, 4):
+        mesh = jax.make_mesh((ndev,), ("hcu",),
+                             devices=jax.devices()[:ndev])
+        h_local = p.n_hcu // ndev
+
+        # lossless fabric: capacity never binds, drops_route stays 0
+        s, c = DD.shard_network(mesh, init_network(p, key), conn)
+        fn = DD.make_dist_run(mesh, p, DD.lossless_route_config(p, h_local))
+        s, f = fn(s, c, ext)
+        assert int(s.drops_route) == 0
+        assert (np.asarray(f) >= 0).sum() > 0   # the drive actually fires
+
+        # deliberately binding fabric: 1 message per (src, dst) pair per
+        # tick, full fire cap -> overflow must land in drops_route
+        rc = DD.RouteConfig(cap_fire=h_local, cap_route=1)
+        s, c = DD.shard_network(mesh, init_network(p, key), conn)
+        run = DD.make_dist_run(mesh, p, rc)
+        sR, fR = run(s, c, ext)
+        dropsR = int(sR.drops_route)
+        assert dropsR > 0, f"ndev={ndev}: binding cap_route never dropped"
+
+        # scan driver == host-loop driver, drop accounting included
+        s, c = DD.shard_network(mesh, init_network(p, key), conn)
+        tick = DD.make_dist_tick(mesh, p, rc)
+        fs = []
+        for t in range(T):
+            s, ft = tick(s, c, ext[t])
+            fs.append(np.asarray(ft))
+        np.testing.assert_array_equal(np.stack(fs), np.asarray(fR))
+        assert int(s.drops_route) == dropsR
+
+        # overlapped (split send/recv) == sequential exchange, bitwise,
+        # even while dropping
+        s, c = DD.shard_network(mesh, init_network(p, key), conn)
+        seq = DD.make_dist_run(mesh, p, rc, overlap=False)
+        sS, fS = seq(s, c, ext)
+        np.testing.assert_array_equal(np.asarray(fS), np.asarray(fR))
+        assert int(sS.drops_route) == dropsR
+        for name in sR.hcus._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sR.hcus, name)),
+                np.asarray(getattr(sS.hcus, name)),
+                err_msg=f"ndev={ndev} plane {name}")
+        print(f"ndev={ndev} drops_route={dropsR} OK")
+    print("ROUTE_DROPS_OK")
+""")
+
+
+def test_drops_route_accounting_when_cap_binds():
+    r = _run(ROUTE_DROPS_SCRIPT)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    assert "ROUTE_DROPS_OK" in r.stdout
